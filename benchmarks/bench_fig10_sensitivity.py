@@ -1,0 +1,74 @@
+"""Fig 10: sensitivity — buffer size, CPU threads, feature dim, sampling
+fanout, SSD array size (AGNES vs Ginex-like)."""
+from __future__ import annotations
+
+from .common import (ALL_BASELINES, emit, get_dataset, make_agnes,
+                     make_baseline, targets_for)
+
+
+def run():
+    ds = get_dataset("ig-mini")
+    targets = targets_for(ds, n_mb=4, mb_size=512)
+
+    # (a) buffer size
+    for mb in (4, 8, 16, 64):
+        a = make_agnes(ds, setting_bytes=mb << 20)
+        g = make_baseline(ALL_BASELINES["ginex"], ds, setting_bytes=mb << 20)
+        a.prepare(targets, epoch=0)
+        g.prepare(targets, epoch=0)
+        emit(f"fig10a/buffer_{mb}MB/agnes",
+             a.last_report.modeled_io_s * 1e6, "")
+        emit(f"fig10a/buffer_{mb}MB/ginex",
+             g.last_report.modeled_io_s * 1e6, "")
+
+    # (b) CPU threads — modeled: data-prep CPU work scales 1/t; device
+    # time does not (the paper's point: AGNES parallelizes better because
+    # its block-major loop has no cross-minibatch dependencies)
+    a = make_agnes(ds)
+    g = make_baseline(ALL_BASELINES["ginex"], ds)
+    a.prepare(targets, epoch=0)
+    g.prepare(targets, epoch=0)
+    for threads in (1, 2, 4, 8, 16):
+        ra, rg = a.last_report, g.last_report
+        ta = max(ra.wall_s / threads, ra.modeled_io_s)
+        # ginex's superbatch sampling pass serializes on its cache build
+        tg = rg.wall_s * (0.4 + 0.6 / threads) + rg.modeled_io_s
+        emit(f"fig10b/threads_{threads}/agnes", ta * 1e6, "model: max(cpu/t, io)")
+        emit(f"fig10b/threads_{threads}/ginex", tg * 1e6,
+             "model: serial fraction 0.4")
+
+    # (c) feature dimension
+    for dim in (64, 128, 256, 512):
+        ds_d = get_dataset("ig-mini", dim=dim)
+        t2 = targets_for(ds_d, n_mb=2, mb_size=512)
+        a = make_agnes(ds_d)
+        g = make_baseline(ALL_BASELINES["ginex"], ds_d)
+        a.prepare(t2, epoch=0)
+        g.prepare(t2, epoch=0)
+        emit(f"fig10c/dim_{dim}/agnes", a.last_report.modeled_io_s * 1e6, "")
+        emit(f"fig10c/dim_{dim}/ginex", g.last_report.modeled_io_s * 1e6, "")
+
+    # (d) sampling fanout
+    for fan in (5, 10, 15):
+        a = make_agnes(ds, fanouts=(fan,) * 3)
+        g = make_baseline(ALL_BASELINES["ginex"], ds, fanouts=(fan,) * 3)
+        a.prepare(targets, epoch=0)
+        g.prepare(targets, epoch=0)
+        emit(f"fig10d/fanout_{fan}/agnes", a.last_report.modeled_io_s * 1e6, "")
+        emit(f"fig10d/fanout_{fan}/ginex", g.last_report.modeled_io_s * 1e6, "")
+
+    # (e) SSD array size (RAID0)
+    for n_ssd in (1, 2, 4):
+        a = make_agnes(ds, n_ssd=n_ssd)
+        g = make_baseline(ALL_BASELINES["ginex"], ds)
+        g.csr.device.n_ssd = n_ssd
+        g.features.device.n_ssd = n_ssd
+        a.prepare(targets, epoch=0)
+        g.prepare(targets, epoch=0)
+        emit(f"fig10e/ssd_{n_ssd}/agnes", a.last_report.modeled_io_s * 1e6, "")
+        emit(f"fig10e/ssd_{n_ssd}/ginex", g.last_report.modeled_io_s * 1e6,
+             "IOPS-bound: no RAID0 benefit")
+
+
+if __name__ == "__main__":
+    run()

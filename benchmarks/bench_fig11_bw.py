@@ -1,0 +1,33 @@
+"""Fig 11: achieved I/O bandwidth utilization (AGNES ~saturates a RAID0
+array; node-granular engines stay IOPS-bound)."""
+from __future__ import annotations
+
+from .common import (ALL_BASELINES, emit, get_dataset, make_agnes,
+                     make_baseline, targets_for)
+
+
+def run():
+    for ds_name in ("ig-mini", "pa-mini"):
+        ds = get_dataset(ds_name)
+        targets = targets_for(ds, n_mb=4, mb_size=512)
+        for n_ssd in (1, 4):
+            peak = 6.7e9 * n_ssd
+            a = make_agnes(ds, n_ssd=n_ssd)
+            a.prepare(targets, epoch=0)
+            bw_a = (a.graph_store.stats.bytes_read
+                    + a.feature_store.stats.bytes_read) / max(
+                a.graph_store.stats.modeled_read_time
+                + a.feature_store.stats.modeled_read_time, 1e-12)
+            g = make_baseline(ALL_BASELINES["ginex"], ds, n_ssd=n_ssd)
+            g.prepare(targets, epoch=0)
+            bw_g = (g.csr.stats.bytes_read + g.features.stats.bytes_read) \
+                / max(g.csr.stats.modeled_read_time
+                      + g.features.stats.modeled_read_time, 1e-12)
+            emit(f"fig11/{ds_name}/ssd{n_ssd}/agnes_GBps", bw_a / 1e9,
+                 f"util={bw_a/peak*100:.0f}%")
+            emit(f"fig11/{ds_name}/ssd{n_ssd}/ginex_GBps", bw_g / 1e9,
+                 f"util={bw_g/peak*100:.0f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Fig 2: (a) data-prep share of step time, (b) I/O size distribution,
+(c) implied compute-utilization — for node-granular baselines vs AGNES."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (ALL_BASELINES, emit, get_dataset, gnn_compute_time,
+                     make_agnes, make_baseline, prep_time, targets_for)
+
+
+def run():
+    ds = get_dataset("ig-mini")
+    targets = targets_for(ds, n_mb=4, mb_size=512)
+
+    def one(name, eng):
+        prepared = eng.prepare(targets, epoch=0)
+        rep = eng.last_report
+        prep = prep_time(rep)
+        comp = gnn_compute_time(prepared)
+        share = prep / (prep + comp)
+        emit(f"fig2a/{name}/prep_share_pct", share * 100,
+             f"prep={prep*1e3:.2f}ms compute(A40-model)={comp*1e3:.2f}ms")
+        stats = (eng.graph_store.stats if hasattr(eng, "graph_store")
+                 else eng.csr.stats)
+        fstats = (eng.feature_store.stats if hasattr(eng, "feature_store")
+                  else eng.features.stats)
+        hist = dict(stats.size_histogram)
+        for k, v in fstats.size_histogram.items():
+            hist[k] = hist.get(k, 0) + v
+        total = sum(hist.values()) or 1
+        small = sum(v for k, v in hist.items() if k <= 4) / total
+        emit(f"fig2b/{name}/small_io_pct", small * 100,
+             f"n_ios={total} hist_KiB={sorted(hist.items())[:6]}")
+        emit(f"fig2c/{name}/gpu_util_proxy_pct", comp / (prep + comp) * 100,
+             "computed as compute/(prep+compute)")
+
+    one("agnes", make_agnes(ds))
+    for name in ("ginex", "gnndrive"):
+        one(name, make_baseline(ALL_BASELINES[name], ds))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Fig 7: storage-based AGNES vs distributed DistDGL (modeled).
+
+The paper quotes DistDGL's published numbers (16× m5.24xlarge, 100 Gbps)
+rather than re-running it; we do the analogous comparison with a
+communication model: DistDGL-style training moves each minibatch's
+remote-partition features + gradients over the network, while AGNES
+moves block-wise storage I/O over NVMe.  Both sides use the same sampled
+workload measured on the real sampler.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, get_dataset, make_agnes, targets_for
+
+NET_BW = 100e9 / 8          # 100 Gbps in bytes/s
+NET_LAT = 50e-6             # per-message
+N_MACHINES = (1, 2, 4, 8)
+
+
+def run():
+    ds = get_dataset("pa-mini")
+    targets = targets_for(ds, n_mb=4, mb_size=512)
+    agnes = make_agnes(ds, setting_bytes=64 << 20)
+    prepared = agnes.prepare(targets, epoch=0)
+    t_agnes = agnes.last_report.modeled_io_s
+    emit("fig7/agnes_single_machine", t_agnes * 1e6, "storage I/O only")
+
+    # DistDGL model: graph range-partitioned across machines; a sampled
+    # node's features are remote with prob (1 - 1/M); remote fetches are
+    # batched per (machine, minibatch).
+    n_feat = sum(len(p.mfg.input_nodes) for p in prepared)
+    feat_bytes = n_feat * ds.dim * 4
+    for m in N_MACHINES:
+        remote = feat_bytes * (1 - 1 / m)
+        msgs = len(prepared) * max(m - 1, 1) * 3  # per hop
+        t = remote / (NET_BW * m) + msgs * NET_LAT
+        # each machine also aggregates gradients (all-reduce, 2x model)
+        t += 2 * (ds.dim * 128 * 4) / NET_BW
+        emit(f"fig7/distdgl_{m}_machines", t * 1e6,
+             f"remote_bytes={remote/1e6:.1f}MB msgs={msgs}")
+
+
+if __name__ == "__main__":
+    run()

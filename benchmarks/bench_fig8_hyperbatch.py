@@ -1,0 +1,31 @@
+"""Fig 8 (EQ2): hyperbatch ablation — AGNES-HB vs AGNES-No.
+
+The paper reports up to 622x; the gap grows as the buffer shrinks
+relative to the working set (block-reload thrash).
+"""
+from __future__ import annotations
+
+from .common import emit, get_dataset, make_agnes, targets_for
+
+
+def run():
+    ds = get_dataset("pa-mini", block_size=256 * 1024)
+    targets = targets_for(ds, n_mb=8, mb_size=512)
+    for setting, nbytes in (("64MB", 64 << 20), ("8MB", 8 << 20),
+                            ("4MB", 4 << 20)):
+        hb = make_agnes(ds, setting_bytes=nbytes, hyperbatch=True, block_size=256*1024)
+        no = make_agnes(ds, setting_bytes=nbytes, hyperbatch=False, block_size=256*1024)
+        hb.prepare(targets, epoch=0)
+        no.prepare(targets, epoch=0)
+        t_hb = hb.last_report.modeled_io_s
+        t_no = no.last_report.modeled_io_s
+        io_hb = hb.graph_store.stats.n_reads + hb.feature_store.stats.n_reads
+        io_no = no.graph_store.stats.n_reads + no.feature_store.stats.n_reads
+        emit(f"fig8/{setting}/agnes_hb", t_hb * 1e6, f"n_ios={io_hb}")
+        emit(f"fig8/{setting}/agnes_no", t_no * 1e6, f"n_ios={io_no}")
+        emit(f"fig8/{setting}/speedup", 0.0,
+             f"{t_no / max(t_hb, 1e-12):.1f}x io_ratio={io_no/max(io_hb,1)}")
+
+
+if __name__ == "__main__":
+    run()

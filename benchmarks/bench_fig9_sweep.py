@@ -1,0 +1,38 @@
+"""Fig 9: block-size and hyperbatch-size sweeps (execution time + #I/Os).
+
+Paper: best block size 1024 KiB; performance saturates for hyperbatch
+size >= 1024.  Swept on the largest stand-in (yh-mini).
+"""
+from __future__ import annotations
+
+from .common import emit, get_dataset, make_agnes, targets_for
+
+
+def run():
+    for blk_kb in (64, 256, 1024, 4096):
+        ds = get_dataset("yh-mini", block_size=blk_kb * 1024)
+        targets = targets_for(ds, n_mb=4, mb_size=512)
+        eng = make_agnes(ds, block_size=blk_kb * 1024,
+                         setting_bytes=32 << 20)
+        eng.prepare(targets, epoch=0)
+        n_io = eng.graph_store.stats.n_reads + eng.feature_store.stats.n_reads
+        emit(f"fig9a/block_{blk_kb}KiB",
+             eng.last_report.modeled_io_s * 1e6, f"n_ios={n_io}")
+
+    ds = get_dataset("yh-mini")
+    for hb_size in (1, 2, 4, 8, 16):
+        targets = targets_for(ds, n_mb=16, mb_size=256)
+        eng = make_agnes(ds, hyperbatch_size=hb_size,
+                         setting_bytes=32 << 20)
+        total_t, total_io = 0.0, 0
+        for s in range(0, 16, hb_size):
+            eng.prepare(targets[s:s + hb_size], epoch=0)
+            total_t += eng.last_report.modeled_io_s
+        total_io = eng.graph_store.stats.n_reads \
+            + eng.feature_store.stats.n_reads
+        emit(f"fig9b/hyperbatch_{hb_size}", total_t * 1e6,
+             f"n_ios={total_io}")
+
+
+if __name__ == "__main__":
+    run()

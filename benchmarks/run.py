@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [fig2 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12]
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
+"""
+import sys
+import time
+
+from . import (bench_fig2_breakdown, bench_fig4_io_unit, bench_fig6_eq1,
+               bench_fig7_distdgl, bench_fig8_hyperbatch, bench_fig9_sweep,
+               bench_fig10_sensitivity, bench_fig11_bw, bench_fig12_accuracy)
+
+ALL = {
+    "fig2": bench_fig2_breakdown.run,
+    "fig4": bench_fig4_io_unit.run,
+    "fig6": bench_fig6_eq1.run,
+    "fig7": bench_fig7_distdgl.run,
+    "fig8": bench_fig8_hyperbatch.run,
+    "fig9": bench_fig9_sweep.run,
+    "fig10": bench_fig10_sensitivity.run,
+    "fig11": bench_fig11_bw.run,
+    "fig12": bench_fig12_accuracy.run,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in which:
+        t0 = time.time()
+        ALL[name]()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

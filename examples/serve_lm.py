@@ -1,0 +1,18 @@
+"""LM serving example: continuous batching + AGNES-style paged KV.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen2-vl-2b
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "smollm-360m"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    raise SystemExit(main(argv))

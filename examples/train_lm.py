@@ -1,0 +1,21 @@
+"""LM pretraining example: any assigned architecture, smoke scale.
+
+Uses the full production path (sharded params on a debug mesh, block-I/O
+token pipeline, async checkpoints, train loop) with a reduced config.
+
+  PYTHONPATH=src python examples/train_lm.py --arch smollm-360m --steps 30
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "smollm-360m"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    raise SystemExit(main(argv))

@@ -1,0 +1,28 @@
+"""Config registry: one module per assigned architecture (+ paper GNNs)."""
+import importlib
+
+from .base import (LayerSpec, ModelConfig, MoEConfig, SSMConfig, SHAPES,
+                   ShapeConfig, get_config, list_configs, register,
+                   smoke_reduce)
+
+_ARCH_MODULES = [
+    "gemma3_27b", "smollm_360m", "h2o_danube3_4b", "minitron_4b",
+    "jamba15_large", "xlstm_1_3b", "qwen2_vl_2b", "moonshot_v1_16b",
+    "deepseek_moe_16b", "seamless_m4t_v2",
+]
+
+_loaded = False
+
+
+def _load_all():
+    global _loaded
+    if _loaded:
+        return
+    for m in _ARCH_MODULES:
+        importlib.import_module(f".{m}", __package__)
+    _loaded = True
+
+
+__all__ = ["LayerSpec", "ModelConfig", "MoEConfig", "SSMConfig", "SHAPES",
+           "ShapeConfig", "get_config", "list_configs", "register",
+           "smoke_reduce"]

@@ -1,0 +1,241 @@
+"""Config system: model / layer / shape / mesh configs + registry.
+
+Every assigned architecture is one file in this package defining a
+``ModelConfig`` with the exact published dimensions, a per-layer spec list
+(mixer × ffn per layer — this is what lets one model implementation cover
+dense, SWA-patterned, MoE, Mamba-hybrid, xLSTM and enc-dec families), and
+a ``smoke()`` reduction used by the CPU tests.
+
+Shapes (assignment): train_4k, prefill_32k, decode_32k, long_500k — each
+cell (arch × shape) must lower + compile on the production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+# ----------------------------------------------------------------- layers
+# mixer kinds: "attn" (full), "swa" (sliding window), "mamba", "mlstm",
+#              "slstm", "none"
+# ffn kinds:   "mlp", "moe", "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"
+    ffn: str = "mlp"
+    window: int = 0          # >0 => sliding window for this layer's attn
+
+
+@dataclasses.dataclass
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 2
+    d_expert: int = 0            # per-expert hidden size
+    n_shared: int = 0            # shared (always-on) experts
+    capacity_factor: float = 1.25
+    group_tokens: int = 4096     # GShard-style dispatch group size
+                                 # (bounds the (T, E, C) bucket tensors)
+
+
+@dataclasses.dataclass
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    chunk: int = 256             # time-chunk for the scan
+
+
+@dataclasses.dataclass
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 => d_model // n_heads
+    layers: tuple[LayerSpec, ...] = ()
+    moe: MoEConfig = dataclasses.field(default_factory=MoEConfig)
+    ssm: SSMConfig = dataclasses.field(default_factory=SSMConfig)
+    rope_theta: float = 10_000.0
+    mrope: bool = False          # qwen2-vl multimodal RoPE (3-section)
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    # encoder-decoder (seamless): n_enc encoder layers; decoder gets
+    # cross-attention. 0 => decoder-only.
+    n_enc_layers: int = 0
+    enc_seq: int = 1024          # encoder memory length for decode shapes
+    frontend: str = "none"       # none | vision_stub | audio_stub
+    attn_logit_softcap: float = 0.0
+    # numerics / execution
+    dtype: str = "bfloat16"
+    ce_chunk: int = 1024         # chunked cross-entropy token block
+    attn_chunk: int = 1024       # online-softmax KV chunk
+    remat: bool = True
+    scan_layers: bool = True
+    sequence_parallel: bool = False  # Megatron SP on layer boundaries
+    dp_over_model: bool = False      # EP+full-DP mode (batch over model too)
+    # notes for DESIGN/EXPERIMENTS
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            self.head_dim = self.d_model // self.n_heads
+        if not self.layers:
+            self.layers = tuple(LayerSpec() for _ in range(self.n_layers))
+        assert len(self.layers) == self.n_layers, \
+            f"{self.name}: layer specs {len(self.layers)} != n_layers {self.n_layers}"
+
+    # ------------------------------------------------------------ helpers
+    @property
+    def repeat_unit(self) -> tuple[LayerSpec, ...]:
+        """Repeating unit of the stack plan (see :meth:`stack_plan`)."""
+        o, p, _, _ = self.stack_plan()
+        return self.layers[o:o + p]
+
+    def stack_plan(self) -> tuple[int, int, int, int]:
+        """(head, unit_len, reps, tail): layers = head ++ unit*reps ++ tail.
+
+        Finds the periodic core of the per-layer spec list so the scanned
+        stack covers as many layers as possible (small HLO, bounded
+        compile time) while aperiodic head layers (e.g. the dense first
+        layer of deepseek-moe/moonlight) and tail remainders (gemma3's
+        62 = 10x6 + 2) stay unrolled.
+        """
+        n = len(self.layers)
+        best = (0, n, 1, 0)     # fallback: whole stack is one "unit"
+        best_cost = n
+        for o in range(0, min(3, n)):
+            for t in range(0, min(8, n - o)):
+                m = n - o - t
+                if m <= 0:
+                    continue
+                for p in range(1, m + 1):
+                    if m % p:
+                        continue
+                    if self.layers[o:o + m] == self.layers[o:o + p] * (m // p):
+                        cost = o + t + p   # unrolled layers in the HLO
+                        if cost < best_cost:
+                            best, best_cost = (o, p, m // p, t), cost
+                        break  # smallest p for this (o, t)
+        return best
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings included once if tied)."""
+        d, dh = self.d_model, self.head_dim
+        total = self.vocab * d  # embed (tied head)
+        if not self.tie_embeddings:
+            total += self.vocab * d
+        def attn_params():
+            return d * (self.n_heads * dh) * 2 + d * (self.n_kv_heads * dh) * 2
+        def mlp_params(dff):
+            return 3 * d * dff
+        for spec in self.layers:
+            if spec.mixer in ("attn", "swa"):
+                total += attn_params()
+            elif spec.mixer == "mamba":
+                di = self.ssm.expand * d
+                total += 2 * d * di + di * (2 * self.ssm.d_state + 2) \
+                    + di * self.ssm.d_conv + di * d
+            elif spec.mixer in ("mlstm", "slstm"):
+                total += 4 * d * d + 2 * d * d
+            if spec.ffn == "mlp":
+                total += mlp_params(self.d_ff)
+            elif spec.ffn == "moe":
+                m = self.moe
+                total += d * m.n_experts  # router
+                total += (m.n_experts + m.n_shared) * 3 * d * m.d_expert
+            total += 2 * d  # norms
+        for _ in range(self.n_enc_layers):
+            total += attn_params() + mlp_params(self.d_ff) + 2 * d
+            total += attn_params()  # decoder cross-attn (charged here)
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k + shared experts only)."""
+        if not any(s.ffn == "moe" for s in self.layers):
+            return self.param_count()
+        d = self.d_model
+        m = self.moe
+        total = self.param_count()
+        n_moe = sum(1 for s in self.layers if s.ffn == "moe")
+        inactive = n_moe * (m.n_experts - m.top_k) * 3 * d * m.d_expert
+        return total - inactive
+
+
+# ----------------------------------------------------------------- shapes
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# --------------------------------------------------------------- registry
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        from . import _load_all
+        _load_all()
+    return _REGISTRY[name]()
+
+
+def list_configs() -> list[str]:
+    from . import _load_all
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def smoke_reduce(cfg: ModelConfig, *, d_model: int = 64, n_layers: int | None = None,
+                 vocab: int = 512, d_ff: int = 128) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests.
+
+    Keeps the layer-pattern *structure* (one full repeat unit at least)
+    while shrinking widths, expert counts and vocab.
+    """
+    unit = cfg.repeat_unit
+    if n_layers is None:
+        n_layers = len(unit) if len(unit) > 1 else min(2, cfg.n_layers)
+    reps = max(1, -(-n_layers // len(unit)))
+    layers = (unit * reps)[:max(n_layers, len(unit))]
+    n_layers = len(layers)
+    n_heads = max(2, min(cfg.n_heads, 4))
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    while n_heads % n_kv:
+        n_kv -= 1
+    moe = dataclasses.replace(
+        cfg.moe,
+        n_experts=min(cfg.moe.n_experts, 8) if cfg.moe.n_experts else 0,
+        top_k=min(cfg.moe.top_k, 2),
+        d_expert=min(cfg.moe.d_expert, 64) if cfg.moe.d_expert else 0,
+        n_shared=min(cfg.moe.n_shared, 1),
+        group_tokens=32)
+    ssm = dataclasses.replace(cfg.ssm, d_state=8, chunk=16)
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-smoke", n_layers=n_layers, layers=tuple(layers),
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_kv,
+        head_dim=d_model // n_heads, d_ff=d_ff, vocab=vocab, moe=moe, ssm=ssm,
+        n_enc_layers=min(cfg.n_enc_layers, 2), enc_seq=32,
+        ce_chunk=64, attn_chunk=32, scan_layers=False)

@@ -1,0 +1,21 @@
+"""deepseek-moe-16b [moe]: 28L, d=2048, 16H (kv=16), vocab=102400 —
+2 shared + 64 routed experts top-6, fine-grained, d_expert=1408; first
+layer dense (d_ff=10944). [arXiv:2401.06066; hf]
+"""
+from .base import LayerSpec, ModelConfig, MoEConfig, register
+
+DENSE_FF = 10944
+
+
+@register("deepseek-moe-16b")
+def config() -> ModelConfig:
+    layers = [LayerSpec(mixer="attn", ffn="mlp")] \
+        + [LayerSpec(mixer="attn", ffn="moe") for _ in range(27)]
+    return ModelConfig(
+        name="deepseek-moe-16b", family="moe",
+        n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=DENSE_FF, vocab=102400, head_dim=128,
+        layers=tuple(layers),
+        moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408, n_shared=2,
+                      group_tokens=4096),
+        source="arXiv:2401.06066 (DeepSeekMoE-16B)")

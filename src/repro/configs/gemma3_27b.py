@@ -1,0 +1,21 @@
+"""gemma3-27b [dense]: 62L, d=5376, 32H (GQA kv=16), d_ff=21504,
+vocab=262144 — 5:1 local:global attention, 128k context.
+[hf:google/gemma-3-1b-pt family; unverified]
+"""
+from .base import LayerSpec, ModelConfig, register
+
+LOCAL_WINDOW = 1024  # gemma3 sliding window for local layers
+
+
+@register("gemma3-27b")
+def config() -> ModelConfig:
+    # 5 local (sliding-window) : 1 global, repeating; 62 = 10*6 + 2 locals
+    unit = [LayerSpec(mixer="swa", ffn="mlp", window=LOCAL_WINDOW)] * 5 \
+        + [LayerSpec(mixer="attn", ffn="mlp")]
+    layers = (unit * 11)[:62]
+    return ModelConfig(
+        name="gemma3-27b", family="dense",
+        n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16,
+        d_ff=21504, vocab=262144, head_dim=128,
+        layers=tuple(layers), rope_theta=1_000_000.0,
+        source="hf:google/gemma-3-27b (dims per assignment); 5:1 local:global")

@@ -1,0 +1,19 @@
+"""h2o-danube-3-4b [dense]: 24L, d=3840, 32H (GQA kv=8), d_ff=10240,
+vocab=32000 — llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818; unverified]
+"""
+from .base import LayerSpec, ModelConfig, register
+
+WINDOW = 4096  # mistral-style SWA
+
+
+@register("h2o-danube-3-4b")
+def config() -> ModelConfig:
+    layers = tuple(LayerSpec(mixer="swa", ffn="mlp", window=WINDOW)
+                   for _ in range(24))
+    return ModelConfig(
+        name="h2o-danube-3-4b", family="dense",
+        n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+        d_ff=10240, vocab=32000, head_dim=120,
+        layers=layers,
+        source="arXiv:2401.16818 (danube family, SWA)")

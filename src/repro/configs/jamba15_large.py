@@ -1,0 +1,27 @@
+"""jamba-1.5-large-398b [hybrid]: 72L, d=8192, 64H (GQA kv=8), d_ff=24576,
+vocab=65536, MoE 16e top-2 — Mamba+attention 1:7 interleave, MoE every
+other layer. [arXiv:2403.19887; hf]
+"""
+from .base import LayerSpec, ModelConfig, MoEConfig, SSMConfig, register
+
+
+@register("jamba-1.5-large-398b")
+def config() -> ModelConfig:
+    # Jamba block = 8 layers: attention at index 4, Mamba elsewhere;
+    # MoE replaces the MLP on every other layer (odd indices).
+    unit = []
+    for i in range(8):
+        mixer = "attn" if i == 4 else "mamba"
+        ffn = "moe" if i % 2 == 1 else "mlp"
+        unit.append(LayerSpec(mixer=mixer, ffn=ffn))
+    layers = tuple(unit * 9)  # 72 layers
+    return ModelConfig(
+        name="jamba-1.5-large-398b", family="hybrid",
+        n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=24576, vocab=65536, head_dim=128,
+        layers=layers,
+        moe=MoEConfig(n_experts=16, top_k=2, d_expert=24576, n_shared=0,
+                      group_tokens=4096),
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, chunk=64),
+        sequence_parallel=True,   # 398B on 16 GB chips needs SP residuals
+        source="arXiv:2403.19887 (Jamba-1.5-Large)")

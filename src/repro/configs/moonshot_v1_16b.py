@@ -1,0 +1,22 @@
+"""moonshot-v1-16b-a3b [moe]: 48L, d=2048, 16H (kv=16), vocab=163840,
+MoE 64 routed experts top-6 + 2 shared, d_expert=1408 — kimi/moonlight
+(deepseek-moe lineage: first layer dense).
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+"""
+from .base import LayerSpec, ModelConfig, MoEConfig, register
+
+DENSE_FF = 11264  # dense first-layer FFN (8x expert hidden, ds-moe style)
+
+
+@register("moonshot-v1-16b-a3b")
+def config() -> ModelConfig:
+    layers = [LayerSpec(mixer="attn", ffn="mlp")] \
+        + [LayerSpec(mixer="attn", ffn="moe") for _ in range(47)]
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b", family="moe",
+        n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=DENSE_FF, vocab=163840, head_dim=128,
+        layers=tuple(layers),
+        moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408, n_shared=2,
+                      group_tokens=4096),
+        source="hf:moonshotai/Moonlight-16B-A3B")

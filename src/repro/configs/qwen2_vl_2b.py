@@ -1,0 +1,16 @@
+"""qwen2-vl-2b [vlm]: 28L, d=1536, 12H (GQA kv=2), d_ff=8960,
+vocab=151936 — M-RoPE, dynamic resolution.  The vision frontend is a STUB
+(``input_specs`` supplies precomputed patch embeddings); the backbone is
+the text decoder with multimodal RoPE. [arXiv:2409.12191; hf]
+"""
+from .base import ModelConfig, register
+
+
+@register("qwen2-vl-2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b", family="vlm",
+        n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+        d_ff=8960, vocab=151936, head_dim=128,
+        mrope=True, frontend="vision_stub", rope_theta=1_000_000.0,
+        source="arXiv:2409.12191 (Qwen2-VL-2B)")

@@ -1,0 +1,17 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec, 24L each, d=1024, 16H,
+d_ff=8192, vocab=256206 — multimodal; the speech frontend is a STUB
+(``input_specs`` supplies precomputed frame embeddings to the encoder).
+[arXiv:2308.11596; hf]
+"""
+from .base import ModelConfig, register
+
+
+@register("seamless-m4t-large-v2")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2", family="audio",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=8192, vocab=256206, head_dim=64,
+        n_enc_layers=24, enc_seq=4096, frontend="audio_stub",
+        tie_embeddings=True,
+        source="arXiv:2308.11596 (SeamlessM4T-large v2 text enc-dec dims)")

@@ -1,0 +1,13 @@
+"""smollm-360m [dense]: 32L, d=960, 15H (GQA kv=5), d_ff=2560, vocab=49152.
+Llama-architecture small model. [hf:HuggingFaceTB/SmolLM-360M; hf]
+"""
+from .base import ModelConfig, register
+
+
+@register("smollm-360m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-360m", family="dense",
+        n_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+        d_ff=2560, vocab=49152, head_dim=64,
+        source="hf:HuggingFaceTB/SmolLM-360M")

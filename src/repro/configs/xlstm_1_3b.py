@@ -1,0 +1,19 @@
+"""xlstm-1.3b [ssm]: 48L, d=2048, 4H, vocab=50304 — sLSTM + mLSTM blocks
+at 7:1 (paper's xLSTM[7:1] at 1.3B scale). [arXiv:2405.04517; unverified]
+"""
+from .base import LayerSpec, ModelConfig, SSMConfig, register
+
+
+@register("xlstm-1.3b")
+def config() -> ModelConfig:
+    # xLSTM[7:1]: 7 mLSTM blocks then 1 sLSTM block, repeated (48 = 6*8).
+    unit = [LayerSpec(mixer="mlstm", ffn="none")] * 7 \
+        + [LayerSpec(mixer="slstm", ffn="none")]
+    layers = tuple(unit * 6)
+    return ModelConfig(
+        name="xlstm-1.3b", family="ssm",
+        n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab=50304, head_dim=512,
+        layers=layers,
+        ssm=SSMConfig(chunk=256),
+        source="arXiv:2405.04517 (xLSTM[7:1] 1.3B)")

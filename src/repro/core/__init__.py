@@ -1,0 +1,33 @@
+"""AGNES core: storage-based GNN training (KDD'26) in JAX-friendly form.
+
+Layers (paper §3.2):
+  storage   — block_store (+ device_model timing, layout for locality)
+  in-memory — buffer (T_buf), feature_cache (C_f/T_ch)
+  operation — hyperbatch sampler + gather (Algorithm 1), async_io
+Plus the baseline engines the paper evaluates against.
+"""
+from .agnes import AgnesConfig, AgnesEngine, PreparedMinibatch, PrepareReport
+from .async_io import BlockPrefetcher
+from .baselines import (BaselineConfig, CSRStorage, GinexLike, GNNDriveLike,
+                        MariusLike, OutreLike)
+from .block_store import (DEFAULT_BLOCK_SIZE, FeatureBlockStore, GraphBlock,
+                          GraphBlockStore)
+from .bucket import Bucket, build_bucket
+from .buffer import BlockBuffer
+from .device_model import IOStats, NVMeModel
+from .feature_cache import FeatureCache
+from .gather import FeatureGatherer
+from .hyperbatch import HyperbatchSampler
+from .layout import apply_relabel, bfs_locality_order, degree_order
+from .sampling import MFG, MFGLayer, assemble_layer, sample_indices
+
+__all__ = [
+    "AgnesConfig", "AgnesEngine", "PreparedMinibatch", "PrepareReport",
+    "BlockPrefetcher", "BaselineConfig", "CSRStorage", "GinexLike",
+    "GNNDriveLike", "MariusLike", "OutreLike", "DEFAULT_BLOCK_SIZE",
+    "FeatureBlockStore", "GraphBlock", "GraphBlockStore", "Bucket",
+    "build_bucket", "BlockBuffer", "IOStats", "NVMeModel", "FeatureCache",
+    "FeatureGatherer", "HyperbatchSampler", "apply_relabel",
+    "bfs_locality_order", "degree_order", "MFG", "MFGLayer",
+    "assemble_layer", "sample_indices",
+]

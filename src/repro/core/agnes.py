@@ -1,0 +1,184 @@
+"""AGNES engine: the paper's 3-layer architecture, assembled (§3.2, Alg 1).
+
+* storage layer   — :class:`GraphBlockStore` / :class:`FeatureBlockStore`
+* in-memory layer — graph/feature :class:`BlockBuffer` (T_buf), pinned
+  object index table (inside the stores), :class:`FeatureCache` (C_f/T_ch)
+* operation layer — :class:`HyperbatchSampler` + :class:`FeatureGatherer`
+
+``prepare(targets)`` runs data preparation for one hyperbatch: k-hop
+sampling (S-1..S-3) then gathering (G-1..G-3), returning per-minibatch
+(MFG, contiguous feature array) pairs ready for device transfer.  The
+engine reports exact I/O statistics and modeled device time per stage,
+which the benchmark harness turns into the paper's figures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .async_io import BlockPrefetcher
+from .block_store import DEFAULT_BLOCK_SIZE, FeatureBlockStore, GraphBlockStore
+from .buffer import BlockBuffer
+from .device_model import IOStats, NVMeModel
+from .feature_cache import FeatureCache
+from .gather import FeatureGatherer
+from .hyperbatch import HyperbatchSampler
+from .sampling import MFG
+
+
+@dataclasses.dataclass
+class AgnesConfig:
+    """Paper defaults: 1 MiB blocks, minibatch 1000, hyperbatch 1024."""
+
+    block_size: int = DEFAULT_BLOCK_SIZE
+    minibatch_size: int = 1000
+    hyperbatch_size: int = 1024          # minibatches per hyperbatch
+    fanouts: tuple[int, ...] = (10, 10, 10)
+    graph_buffer_bytes: int = 16 << 30   # Setting 1
+    feature_buffer_bytes: int = 16 << 30
+    feature_cache_rows: int = 0          # 0 = auto (half the feature buffer)
+    cache_admit_threshold: int = 2
+    hyperbatch_enabled: bool = True      # False = AGNES-No ablation
+    async_io: bool = True
+    prefetch_depth: int = 8
+    seed: int = 0
+
+    def buffer_blocks(self, nbytes: int) -> int:
+        return max(int(nbytes // self.block_size), 2)
+
+
+@dataclasses.dataclass
+class PreparedMinibatch:
+    mfg: MFG
+    features: np.ndarray  # (len(mfg.input_nodes), dim) contiguous
+
+    @property
+    def targets(self) -> np.ndarray:
+        return self.mfg.nodes[0]
+
+
+@dataclasses.dataclass
+class PrepareReport:
+    sample_wall_s: float
+    gather_wall_s: float
+    sample_io: dict
+    gather_io: dict
+    modeled_io_s: float
+    modeled_prepare_s: float  # max(cpu, io) if async else cpu + io
+
+    @property
+    def wall_s(self) -> float:
+        return self.sample_wall_s + self.gather_wall_s
+
+
+class AgnesEngine:
+    """Storage-based GNN data-preparation engine (the paper's framework)."""
+
+    def __init__(self, graph_store: GraphBlockStore,
+                 feature_store: FeatureBlockStore,
+                 config: AgnesConfig | None = None):
+        self.config = config or AgnesConfig()
+        cfg = self.config
+        self.graph_store = graph_store
+        self.feature_store = feature_store
+        self.graph_buffer = BlockBuffer(
+            cfg.buffer_blocks(cfg.graph_buffer_bytes), name="graph")
+        self.feature_buffer = BlockBuffer(
+            cfg.buffer_blocks(cfg.feature_buffer_bytes), name="feature")
+        cache_rows = cfg.feature_cache_rows
+        if cache_rows == 0:
+            cache_rows = (cfg.feature_buffer_bytes // 2) // max(
+                feature_store.row_bytes, 1)
+        cache_rows = min(cache_rows, feature_store.n_nodes)
+        self.feature_cache = FeatureCache(
+            cache_rows, feature_store.n_nodes, feature_store.dim,
+            admit_threshold=cfg.cache_admit_threshold,
+            dtype=feature_store.dtype)
+        self._g_prefetch = None
+        self._f_prefetch = None
+        if cfg.async_io:
+            self._g_prefetch = BlockPrefetcher(
+                graph_store.read_block, depth=cfg.prefetch_depth,
+                should_skip=lambda b: b in self.graph_buffer)
+            self._f_prefetch = BlockPrefetcher(
+                feature_store.read_block, depth=cfg.prefetch_depth,
+                should_skip=lambda b: b in self.feature_buffer)
+        self.sampler = HyperbatchSampler(
+            graph_store, self.graph_buffer, cfg.fanouts, seed=cfg.seed,
+            prefetcher=self._g_prefetch)
+        self.gatherer = FeatureGatherer(
+            feature_store, self.feature_buffer, self.feature_cache,
+            prefetcher=self._f_prefetch)
+        self.last_report: PrepareReport | None = None
+
+    # ------------------------------------------------------------ API
+    def prepare(self, targets_per_mb: list[np.ndarray],
+                epoch: int = 0) -> list[PreparedMinibatch]:
+        """Data preparation for one hyperbatch (Algorithm 1)."""
+        cfg = self.config
+        io_before = self._io_snapshot()
+        t0 = time.perf_counter()
+        if cfg.hyperbatch_enabled:
+            mfgs = self.sampler.sample_hyperbatch(targets_per_mb, epoch)
+        else:
+            mfgs = self.sampler.sample_per_minibatch(targets_per_mb, epoch)
+        t1 = time.perf_counter()
+        inputs = [m.input_nodes for m in mfgs]
+        if cfg.hyperbatch_enabled:
+            feats = self.gatherer.gather_hyperbatch(inputs)
+        else:
+            feats = self.gatherer.gather_per_minibatch(inputs)
+        t2 = time.perf_counter()
+        io_after = self._io_snapshot()
+        self.last_report = self._report(t0, t1, t2, io_before, io_after)
+        return [PreparedMinibatch(m, f) for m, f in zip(mfgs, feats)]
+
+    def iter_epoch(self, all_targets: np.ndarray, epoch: int = 0,
+                   shuffle: bool = True):
+        """Yield prepared hyperbatches covering ``all_targets`` once."""
+        cfg = self.config
+        targets = np.asarray(all_targets, dtype=np.int64)
+        if shuffle:
+            rng = np.random.default_rng(cfg.seed + epoch)
+            targets = rng.permutation(targets)
+        mb = cfg.minibatch_size
+        per_hb = mb * cfg.hyperbatch_size
+        for start in range(0, len(targets), per_hb):
+            chunk = targets[start:start + per_hb]
+            mbs = [chunk[i:i + mb] for i in range(0, len(chunk), mb)]
+            yield self.prepare(mbs, epoch)
+
+    def io_stats(self) -> dict:
+        g = self.graph_store.stats
+        f = self.feature_store.stats
+        total = IOStats().merge(g).merge(f)
+        return {
+            "graph": g.summary(), "feature": f.summary(),
+            "total": total.summary(),
+            "graph_buffer_hit": self.graph_buffer.stats.buffer_hit_ratio,
+            "feature_buffer_hit": self.feature_buffer.stats.buffer_hit_ratio,
+            "feature_cache_hit": self.feature_cache.stats.cache_hit_ratio,
+        }
+
+    def close(self) -> None:
+        for p in (self._g_prefetch, self._f_prefetch):
+            if p is not None:
+                p.close()
+
+    # ------------------------------------------------------------ internals
+    def _io_snapshot(self):
+        g, f = self.graph_store.stats, self.feature_store.stats
+        return (g.n_reads, g.bytes_read, g.modeled_read_time,
+                f.n_reads, f.bytes_read, f.modeled_read_time)
+
+    def _report(self, t0, t1, t2, before, after) -> PrepareReport:
+        d = [a - b for a, b in zip(after, before)]
+        sample_io = {"n_reads": d[0], "bytes": d[1], "modeled_s": d[2]}
+        gather_io = {"n_reads": d[3], "bytes": d[4], "modeled_s": d[5]}
+        cpu = (t1 - t0) + (t2 - t1)
+        io = d[2] + d[5]
+        modeled = max(cpu, io) if self.config.async_io else cpu + io
+        return PrepareReport(t1 - t0, t2 - t1, sample_io, gather_io,
+                             io, modeled)

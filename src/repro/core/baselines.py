@@ -1,0 +1,355 @@
+"""Baseline storage-based engines the paper compares against (§4, Fig 6).
+
+Each baseline reproduces the *I/O pattern* of the corresponding system at
+the granularity the paper analyses (node-granular small reads vs. AGNES's
+block-wise reads), while sharing the deterministic sampler so that sampled
+MFGs are identical where the system semantics allow:
+
+* :class:`GinexLike`    — superbatch two-pass (sample → build per-superbatch
+  optimal-ish feature cache → gather); node-granular 4 KiB feature I/O;
+  page-granular topology I/O through an OS-page-cache-like buffer.
+  [Ginex, VLDB'22]
+* :class:`GNNDriveLike` — no feature cache; asynchronous node-granular
+  feature extraction with deep queues; small memory footprint.
+  [GNNDrive, ICPP'24]
+* :class:`MariusLike`   — partition-buffer training: large sequential
+  partition swaps, sampling restricted to in-buffer partitions (the
+  system's documented sampling bias). [MariusGNN, EuroSys'23]
+* :class:`OutreLike`    — partition-grouped batch construction +
+  historical-embedding reuse that skips I/O for stale-but-cached nodes.
+  [OUTRE, VLDB'24]
+
+These are simulators of each system's data path, not re-implementations
+of their full codebases; DESIGN.md §6 records the fidelity envelope.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .agnes import PreparedMinibatch, PrepareReport
+from .block_store import FeatureBlockStore
+from .buffer import BlockBuffer
+from .device_model import IOStats, NVMeModel
+from .sampling import MFG, assemble_layer, sample_indices
+
+PAGE = 4096
+
+
+class CSRStorage:
+    """Node-granular topology storage (indptr pinned, indices on 'disk').
+
+    Models what Ginex/GNNDrive do: adjacency reads hit the indices file at
+    OS-page (4 KiB) granularity through a bounded page buffer.
+    """
+
+    def __init__(self, indptr: np.ndarray, indices_path: str, n_edges: int,
+                 page_buffer_bytes: int, device: NVMeModel | None = None):
+        self.indptr = indptr
+        self._mm = np.memmap(indices_path, dtype=np.int64, mode="r",
+                             shape=(n_edges,))
+        self.device = device or NVMeModel()
+        self.stats = IOStats()
+        self.page_buffer = BlockBuffer(max(page_buffer_bytes // PAGE, 2),
+                                       name="pages")
+        self.items_per_page = PAGE // 8
+
+    @classmethod
+    def build(cls, indices_path: str, indptr: np.ndarray, indices: np.ndarray,
+              page_buffer_bytes: int, device: NVMeModel | None = None):
+        indices.astype(np.int64).tofile(indices_path)
+        return cls(indptr, indices_path, len(indices), page_buffer_bytes, device)
+
+    def read_adjacencies(self, nodes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Fetch adjacency lists; charge a small I/O per missed page."""
+        nodes = np.asarray(nodes, dtype=np.int64)
+        starts, ends = self.indptr[nodes], self.indptr[nodes + 1]
+        # page-level accounting (most adjacencies span <= 2 pages; hub
+        # nodes spanning more are expanded explicitly)
+        if len(nodes):
+            p0 = starts // self.items_per_page
+            p1 = np.maximum(ends - 1, starts) // self.items_per_page
+            wide = np.nonzero(p1 - p0 > 1)[0]
+            mids = [np.arange(p0[i] + 1, p1[i]) for i in wide.tolist()]
+            pages = np.unique(np.concatenate([p0, p1] + mids))
+            n_missed = 0
+            for p in pages.tolist():
+                if p not in self.page_buffer:
+                    n_missed += 1
+                self.page_buffer.get(int(p), lambda q: True)
+            if n_missed:
+                t = self.device.batch_time(PAGE * n_missed,
+                                           n_random=n_missed)
+                self.stats.n_reads += n_missed
+                self.stats.bytes_read += PAGE * n_missed
+                self.stats.modeled_read_time += t
+                self.stats.size_histogram[PAGE // 1024] += n_missed
+        counts = ends - starts
+        total = int(counts.sum())
+        out = np.empty(total, dtype=np.int64)
+        offs = np.zeros(len(nodes) + 1, dtype=np.int64)
+        np.cumsum(counts, out=offs[1:])
+        if total:
+            idx = np.repeat(starts - offs[:-1], counts) + np.arange(total)
+            np.take(self._mm, idx, out=out)
+        return offs, out
+
+
+def _sample_frontier(csr: CSRStorage, frontier: np.ndarray, fanout: int,
+                     seed: int, epoch: int, hop: int) -> np.ndarray:
+    """Shared deterministic sampling over node-granular topology reads."""
+    offs, adj = csr.read_adjacencies(frontier)
+    deg = np.diff(offs)
+    pos = sample_indices(frontier, deg, fanout, seed, epoch, hop)
+    base = offs[:-1][:, None]
+    sel = np.where(pos >= 0, base + np.clip(pos, 0, None), 0)
+    sel = np.clip(sel, 0, max(len(adj) - 1, 0))
+    vals = adj[sel] if len(adj) else np.zeros_like(sel)
+    return np.where(pos >= 0, vals, -1)
+
+
+def _sample_minibatch(csr: CSRStorage, targets: np.ndarray,
+                      fanouts, seed: int, epoch: int) -> MFG:
+    frontier = np.unique(np.asarray(targets, dtype=np.int64))
+    mfg = MFG(nodes=[frontier], layers=[])
+    for hop, fanout in enumerate(fanouts):
+        nbrs = _sample_frontier(csr, frontier, fanout, seed, epoch, hop)
+        frontier, layer = assemble_layer(frontier, nbrs)
+        mfg.nodes.append(frontier)
+        mfg.layers.append(layer)
+    return mfg
+
+
+@dataclasses.dataclass
+class BaselineConfig:
+    fanouts: tuple[int, ...] = (10, 10, 10)
+    feature_cache_rows: int = 0       # Ginex/OUTRE row budget
+    page_buffer_bytes: int = 4 << 30  # topology page cache
+    io_unit: int = PAGE
+    seed: int = 0
+    # Marius/OUTRE partitioning
+    n_partitions: int = 16
+    buffer_partitions: int = 4
+
+
+class _BaseEngine:
+    name = "base"
+
+    def __init__(self, csr: CSRStorage, feature_store: FeatureBlockStore,
+                 config: BaselineConfig):
+        self.csr = csr
+        self.features = feature_store
+        self.cfg = config
+        self.last_report: PrepareReport | None = None
+
+    def _io_snapshot(self):
+        c, f = self.csr.stats, self.features.stats
+        return (c.n_reads, c.bytes_read, c.modeled_read_time,
+                f.n_reads, f.bytes_read, f.modeled_read_time)
+
+    def _mk_report(self, t0, t1, t2, before, after, async_io=False):
+        d = [a - b for a, b in zip(self._io_snapshot(), before)]
+        cpu = t2 - t0
+        io = d[2] + d[5]
+        return PrepareReport(
+            t1 - t0, t2 - t1,
+            {"n_reads": d[0], "bytes": d[1], "modeled_s": d[2]},
+            {"n_reads": d[3], "bytes": d[4], "modeled_s": d[5]},
+            io, max(cpu, io) if async_io else cpu + io)
+
+    def io_stats(self) -> dict:
+        total = IOStats().merge(self.csr.stats).merge(self.features.stats)
+        return {"topology": self.csr.stats.summary(),
+                "feature": self.features.stats.summary(),
+                "total": total.summary()}
+
+
+class GinexLike(_BaseEngine):
+    """Superbatch two-pass with per-superbatch near-optimal feature cache."""
+
+    name = "ginex"
+
+    def prepare(self, targets_per_mb, epoch: int = 0):
+        cfg = self.cfg
+        before = self._io_snapshot()
+        t0 = time.perf_counter()
+        mfgs = [_sample_minibatch(self.csr, t, cfg.fanouts, cfg.seed, epoch)
+                for t in targets_per_mb]
+        t1 = time.perf_counter()
+        # changeset precomputation: per-superbatch access counts -> cache set
+        inputs = [m.input_nodes for m in mfgs]
+        all_nodes, counts = np.unique(np.concatenate(inputs),
+                                      return_counts=True)
+        budget = cfg.feature_cache_rows or len(all_nodes)
+        order = np.argsort(-counts, kind="stable")
+        preload = np.sort(all_nodes[order[:budget]])
+        # cache preload (Ginex pays this up front; ascending = semi-sequential)
+        slot = np.full(self.features.n_nodes, -1, dtype=np.int64)
+        cache_rows = np.zeros((len(preload), self.features.dim),
+                              dtype=self.features.dtype)
+        if len(preload):
+            cache_rows[:] = self.features.read_rows_node_granular(
+                preload, cfg.io_unit)
+            slot[preload] = np.arange(len(preload))
+        feats = []
+        for nodes in inputs:
+            out = np.empty((len(nodes), self.features.dim),
+                           dtype=self.features.dtype)
+            s = slot[nodes]
+            hit = s >= 0
+            out[hit] = cache_rows[s[hit]]
+            misses = nodes[~hit]
+            if len(misses):
+                out[~hit] = self.features.read_rows_node_granular(
+                    misses, cfg.io_unit)
+            self.features.stats.cache_hits += int(hit.sum())
+            self.features.stats.cache_misses += int((~hit).sum())
+            feats.append(out)
+        t2 = time.perf_counter()
+        self.last_report = self._mk_report(t0, t1, t2, before, None)
+        return [PreparedMinibatch(m, f) for m, f in zip(mfgs, feats)]
+
+
+class GNNDriveLike(_BaseEngine):
+    """No feature cache; async node-granular extraction, deep queues."""
+
+    name = "gnndrive"
+
+    def prepare(self, targets_per_mb, epoch: int = 0):
+        cfg = self.cfg
+        before = self._io_snapshot()
+        t0 = time.perf_counter()
+        mfgs = [_sample_minibatch(self.csr, t, cfg.fanouts, cfg.seed, epoch)
+                for t in targets_per_mb]
+        t1 = time.perf_counter()
+        feats = []
+        for m in mfgs:
+            feats.append(self.features.read_rows_node_granular(
+                m.input_nodes, cfg.io_unit))
+        t2 = time.perf_counter()
+        self.last_report = self._mk_report(t0, t1, t2, before, None,
+                                           async_io=True)
+        return [PreparedMinibatch(m, f) for m, f in zip(mfgs, feats)]
+
+
+class MariusLike(_BaseEngine):
+    """Partition-buffer training: big sequential swaps, in-buffer sampling.
+
+    Nodes are range-partitioned; the buffer holds ``buffer_partitions`` of
+    them.  Target nodes outside the buffered partitions are deferred to a
+    later buffer state; sampled neighbors outside the buffer are dropped
+    (MariusGNN's documented in-buffer sampling restriction).
+    """
+
+    name = "marius"
+
+    def prepare(self, targets_per_mb, epoch: int = 0):
+        cfg = self.cfg
+        n = len(self.csr.indptr) - 1
+        psize = -(-n // cfg.n_partitions)
+        before = self._io_snapshot()
+        t0 = time.perf_counter()
+        # schedule buffer states round-robin over partition groups
+        rng = np.random.default_rng(cfg.seed + epoch)
+        part_order = rng.permutation(cfg.n_partitions)
+        groups = [part_order[i:i + cfg.buffer_partitions]
+                  for i in range(0, cfg.n_partitions, cfg.buffer_partitions)]
+        mfgs_out, feats_out = [], []
+        bytes_per_part_topo = self.csr._mm.nbytes // cfg.n_partitions
+        bytes_per_part_feat = (self.features.n_nodes
+                               * self.features.row_bytes // cfg.n_partitions)
+        for g in groups:
+            in_buf = np.zeros(n, dtype=bool)
+            for p in g.tolist():
+                in_buf[p * psize:min((p + 1) * psize, n)] = True
+            # partition swap: large sequential reads (topology + features)
+            swap_bytes = (bytes_per_part_topo + bytes_per_part_feat) * len(g)
+            t = self.csr.device.batch_time(swap_bytes, n_random=len(g),
+                                           n_sequential=len(g))
+            self.csr.stats.record_read(swap_bytes, t, sequential=True)
+            for targets in targets_per_mb:
+                targets = np.asarray(targets, dtype=np.int64)
+                mine = targets[in_buf[targets]]
+                if len(mine) == 0:
+                    continue
+                mfg = self._sample_in_buffer(mine, in_buf, epoch)
+                # features come from the buffered partitions: no extra I/O
+                feats = np.asarray(self.features._mm[mfg.input_nodes])
+                mfgs_out.append(mfg)
+                feats_out.append(feats)
+        t2 = time.perf_counter()
+        self.last_report = self._mk_report(t0, t2, t2, before, None)
+        return [PreparedMinibatch(m, f) for m, f in zip(mfgs_out, feats_out)]
+
+    def _sample_in_buffer(self, targets, in_buf, epoch) -> MFG:
+        frontier = np.unique(targets)
+        mfg = MFG(nodes=[frontier], layers=[])
+        for hop, fanout in enumerate(self.cfg.fanouts):
+            nbrs = _sample_frontier(self.csr, frontier, fanout,
+                                    self.cfg.seed, epoch, hop)
+            # drop out-of-buffer neighbors (sampling bias of the system)
+            nbrs = np.where((nbrs >= 0) & in_buf[np.clip(nbrs, 0, None)],
+                            nbrs, -1)
+            frontier, layer = assemble_layer(frontier, nbrs)
+            mfg.nodes.append(frontier)
+            mfg.layers.append(layer)
+        return mfg
+
+
+class OutreLike(_BaseEngine):
+    """Partition-grouped batches + historical-embedding reuse."""
+
+    name = "outre"
+
+    def __init__(self, csr, feature_store, config):
+        super().__init__(csr, feature_store, config)
+        cap = config.feature_cache_rows or 1
+        self._hist = np.full(feature_store.n_nodes, -1, dtype=np.int64)
+        self._hist_rows = np.zeros((max(cap, 1), feature_store.dim),
+                                   dtype=feature_store.dtype)
+        self._clock = 0
+        self._cap = max(cap, 1)
+        self._slot_node = np.full(self._cap, -1, dtype=np.int64)
+
+    def prepare(self, targets_per_mb, epoch: int = 0):
+        cfg = self.cfg
+        before = self._io_snapshot()
+        t0 = time.perf_counter()
+        # partition-grouped batch construction: sort each minibatch's
+        # targets so topology pages are shared within the batch
+        mfgs = [_sample_minibatch(self.csr, np.sort(np.asarray(t)),
+                                  cfg.fanouts, cfg.seed, epoch)
+                for t in targets_per_mb]
+        t1 = time.perf_counter()
+        feats = []
+        for m in mfgs:
+            nodes = m.input_nodes
+            slots = self._hist[nodes]
+            hit = slots >= 0
+            out = np.empty((len(nodes), self.features.dim),
+                           dtype=self.features.dtype)
+            out[hit] = self._hist_rows[slots[hit]]  # historical embeddings
+            misses = nodes[~hit]
+            if len(misses):
+                fresh = self.features.read_rows_node_granular(misses,
+                                                              cfg.io_unit)
+                out[~hit] = fresh
+                self._admit(misses, fresh)
+            self.features.stats.cache_hits += int(hit.sum())
+            self.features.stats.cache_misses += int((~hit).sum())
+            feats.append(out)
+        t2 = time.perf_counter()
+        self.last_report = self._mk_report(t0, t1, t2, before, None)
+        return [PreparedMinibatch(m, f) for m, f in zip(mfgs, feats)]
+
+    def _admit(self, nodes, rows):
+        k = len(nodes)
+        slots = (self._clock + np.arange(k)) % self._cap
+        self._clock = int((self._clock + k) % self._cap)
+        old = self._slot_node[slots]
+        self._hist[old[old >= 0]] = -1
+        self._slot_node[slots] = nodes
+        self._hist[nodes] = slots
+        self._hist_rows[slots] = rows

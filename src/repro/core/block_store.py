@@ -1,0 +1,305 @@
+"""Storage layer (paper §3.2): block-organized graph + feature stores.
+
+Graph topology and node features are split into fixed-size *blocks* (the
+storage I/O unit, default 1 MiB).  Two block types:
+
+* **Graph block** — multiple *objects* (a node + its adjacency list) packed
+  in ascending node-ID order.  An object larger than one block is split
+  across consecutive blocks (paper: "the object is split across multiple
+  blocks").  On-disk format per block (int32 words), directory-first so
+  decode is fully vectorized::
+
+      [n_entries][node_id x n][count x n][total_degree x n][neighbors ...]
+
+  ``count`` is the number of neighbors in *this block's* entry; an object
+  split across blocks has several entries whose counts sum to
+  ``total_degree``.
+
+* **Feature block** — ``rows_per_block`` consecutive nodes' feature rows,
+  row ``v`` living in block ``v // rows_per_block``.
+
+The *object index table* ``T_obj`` keeps only (first_node, last_node) per
+graph block (paper: "we only store the first and last object indices for
+each block"), is pinned in memory, and locates blocks via binary search.
+Both stores do real file I/O through ``np.memmap`` and charge the device
+model for every block touched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+
+import numpy as np
+
+from .device_model import IOStats, NVMeModel
+
+DEFAULT_BLOCK_SIZE = 1 << 20  # 1 MiB (paper default)
+_HDR = 3  # directory words per entry: node_id, count, total_degree
+
+
+@dataclasses.dataclass
+class GraphBlock:
+    """A decoded graph block: local CSR over the entries it contains."""
+
+    block_id: int
+    node_ids: np.ndarray      # (n_entries,) ascending (may repeat across blocks)
+    indptr: np.ndarray        # (n_entries + 1,) into indices
+    indices: np.ndarray       # concatenated neighbor ids
+    total_degree: np.ndarray  # (n_entries,) full degree of each object
+
+    def adjacency(self, entry: int) -> np.ndarray:
+        return self.indices[self.indptr[entry]:self.indptr[entry + 1]]
+
+    def find_entries(self, nodes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Locate (first) entry index for each node; mask=False if absent."""
+        pos = np.searchsorted(self.node_ids, nodes, side="left")
+        pos_c = np.clip(pos, 0, len(self.node_ids) - 1)
+        mask = (pos < len(self.node_ids)) & (self.node_ids[pos_c] == nodes)
+        return pos_c, mask
+
+
+class GraphBlockStore:
+    """Block-organized adjacency storage with pinned object index table."""
+
+    def __init__(self, path: str, block_size: int, t_obj: np.ndarray,
+                 n_nodes: int, n_edges: int,
+                 device: NVMeModel | None = None):
+        self.path = path
+        self.block_size = block_size
+        self.words_per_block = block_size // 4
+        self.t_obj = t_obj  # (n_blocks, 2): first/last node id. Pinned.
+        self.n_blocks = len(t_obj)
+        self.n_nodes = n_nodes
+        self.n_edges = n_edges
+        self.device = device or NVMeModel()
+        self.stats = IOStats()
+        self._mm = np.memmap(path, dtype=np.int32, mode="r")
+        self._last_block_read = -2  # sequential-access detection
+        self._io_lock = threading.Lock()  # prefetch thread vs consumer
+
+    # ---------------------------------------------------------- build
+    @classmethod
+    def build(cls, path: str, indptr: np.ndarray, indices: np.ndarray,
+              block_size: int = DEFAULT_BLOCK_SIZE,
+              device: NVMeModel | None = None) -> "GraphBlockStore":
+        n = len(indptr) - 1
+        wpb = block_size // 4
+        cap = wpb - 1  # payload words per block (1 word for n_entries)
+        if cap < _HDR + 1:
+            raise ValueError(f"block_size {block_size} too small")
+        deg = np.diff(indptr).astype(np.int64)
+        words = deg + _HDR
+        cum = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(words, out=cum[1:])
+
+        chunks: list[np.ndarray] = []
+        t_obj: list[tuple[int, int]] = []
+        v, off = 0, 0  # next node; neighbor offset within v (for splits)
+        while v < n:
+            ids: list[np.ndarray] = []
+            cnt: list[np.ndarray] = []
+            tot: list[np.ndarray] = []
+            pay: list[np.ndarray] = []
+            used = 0
+            first = v
+            if off > 0:  # continue a split object
+                take = min(int(deg[v]) - off, cap - _HDR)
+                ids.append(np.array([v]))
+                cnt.append(np.array([take]))
+                tot.append(np.array([deg[v]]))
+                pay.append(indices[indptr[v] + off:indptr[v] + off + take])
+                used += _HDR + take
+                off += take
+                if off >= deg[v]:
+                    v, off = v + 1, 0
+            if v < n and off == 0 and used < cap - _HDR:
+                # how many whole objects fit in the remaining capacity
+                budget = cap - used
+                m = int(np.searchsorted(cum, cum[v] + budget, side="right")) - 1 - v
+                if m > 0:
+                    ids.append(np.arange(v, v + m))
+                    cnt.append(deg[v:v + m])
+                    tot.append(deg[v:v + m])
+                    pay.append(indices[indptr[v]:indptr[v + m]])
+                    used += int(cum[v + m] - cum[v])
+                    v += m
+                elif used == 0:
+                    # single object larger than a block: start a split
+                    take = cap - _HDR
+                    ids.append(np.array([v]))
+                    cnt.append(np.array([take]))
+                    tot.append(np.array([deg[v]]))
+                    pay.append(indices[indptr[v]:indptr[v] + take])
+                    used += _HDR + take
+                    off = take
+            last = v if off > 0 else v - 1
+            e_ids = np.concatenate(ids).astype(np.int32)
+            e_cnt = np.concatenate(cnt).astype(np.int32)
+            e_tot = np.concatenate(tot).astype(np.int32)
+            e_pay = (np.concatenate(pay).astype(np.int32)
+                     if pay and sum(len(p) for p in pay) else np.zeros(0, np.int32))
+            blk = np.zeros(wpb, dtype=np.int32)
+            ne = len(e_ids)
+            blk[0] = ne
+            blk[1:1 + ne] = e_ids
+            blk[1 + ne:1 + 2 * ne] = e_cnt
+            blk[1 + 2 * ne:1 + 3 * ne] = e_tot
+            blk[1 + 3 * ne:1 + 3 * ne + len(e_pay)] = e_pay
+            chunks.append(blk)
+            t_obj.append((int(first), int(max(last, first))))
+
+        data = np.concatenate(chunks) if chunks else np.zeros(0, dtype=np.int32)
+        data.tofile(path)
+        meta = {"block_size": block_size, "n_nodes": int(n),
+                "n_edges": int(len(indices)),
+                "t_obj": np.asarray(t_obj, dtype=np.int64).tolist()}
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f)
+        return cls(path, block_size, np.asarray(t_obj, dtype=np.int64),
+                   n, len(indices), device)
+
+    @classmethod
+    def open(cls, path: str, device: NVMeModel | None = None) -> "GraphBlockStore":
+        with open(path + ".meta.json") as f:
+            meta = json.load(f)
+        return cls(path, meta["block_size"],
+                   np.asarray(meta["t_obj"], dtype=np.int64),
+                   meta["n_nodes"], meta["n_edges"], device)
+
+    # ---------------------------------------------------------- lookup
+    def blocks_for_nodes(self, nodes: np.ndarray) -> np.ndarray:
+        """All block ids containing any of ``nodes`` (ascending, unique).
+
+        Binary search on the pinned T_obj (Algorithm 1 ``LoadData``
+        lines 19-24, vectorized).  Handles split objects by expanding over
+        the contiguous run of blocks covering the node.
+        """
+        if len(nodes) == 0:
+            return np.zeros(0, dtype=np.int64)
+        nodes = np.asarray(nodes)
+        firsts = self.t_obj[:, 0]
+        lasts = self.t_obj[:, 1]
+        lo = np.searchsorted(lasts, nodes, side="left")
+        hi = np.searchsorted(firsts, nodes, side="right") - 1
+        lo = np.clip(lo, 0, self.n_blocks - 1)
+        hi = np.clip(hi, 0, self.n_blocks - 1)
+        if ((hi - lo) == 0).all():
+            return np.unique(lo)
+        out = np.concatenate([np.arange(l, h + 1) for l, h in zip(lo, hi)])
+        return np.unique(out)
+
+    # ---------------------------------------------------------- I/O
+    def read_block(self, block_id: int) -> GraphBlock:
+        """Block-wise storage I/O: one device read of ``block_size`` bytes."""
+        if not (0 <= block_id < self.n_blocks):
+            raise IndexError(block_id)
+        with self._io_lock:
+            sequential = block_id == self._last_block_read + 1
+            self._last_block_read = block_id
+            w = self.words_per_block
+            raw = np.asarray(self._mm[block_id * w:(block_id + 1) * w])
+            t = self.device.request_time(self.block_size, sequential=sequential)
+            self.stats.record_read(self.block_size, t, sequential=sequential)
+        return self._decode(block_id, raw)
+
+    @staticmethod
+    def _decode(block_id: int, raw: np.ndarray) -> GraphBlock:
+        ne = int(raw[0])
+        node_ids = raw[1:1 + ne].astype(np.int64)
+        counts = raw[1 + ne:1 + 2 * ne].astype(np.int64)
+        total_deg = raw[1 + 2 * ne:1 + 3 * ne].astype(np.int64)
+        indptr = np.zeros(ne + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        payload = raw[1 + 3 * ne:1 + 3 * ne + indptr[-1]].astype(np.int64)
+        return GraphBlock(block_id, node_ids, indptr, payload, total_deg)
+
+
+class FeatureBlockStore:
+    """Block-organized node-feature storage.
+
+    Row ``v`` lives in feature block ``v // rows_per_block`` at local offset
+    ``v % rows_per_block`` — the feature analogue of T_obj degenerates to a
+    stride, kept explicit for symmetry with the paper.
+    """
+
+    def __init__(self, path: str, n_nodes: int, dim: int, dtype: str,
+                 block_size: int, device: NVMeModel | None = None):
+        self.path = path
+        self.n_nodes = n_nodes
+        self.dim = dim
+        self.dtype = np.dtype(dtype)
+        self.block_size = block_size
+        self.row_bytes = dim * self.dtype.itemsize
+        self.rows_per_block = max(block_size // self.row_bytes, 1)
+        self.n_blocks = -(-n_nodes // self.rows_per_block)
+        self.device = device or NVMeModel()
+        self.stats = IOStats()
+        self._mm = np.memmap(path, dtype=self.dtype, mode="r",
+                             shape=(self.n_blocks * self.rows_per_block, dim))
+        self._last_block_read = -2
+        self._io_lock = threading.Lock()
+
+    @classmethod
+    def build(cls, path: str, features: np.ndarray,
+              block_size: int = DEFAULT_BLOCK_SIZE,
+              device: NVMeModel | None = None) -> "FeatureBlockStore":
+        n, dim = features.shape
+        dtype = features.dtype
+        row_bytes = dim * dtype.itemsize
+        rows_per_block = max(block_size // row_bytes, 1)
+        n_blocks = -(-n // rows_per_block)
+        padded = np.zeros((n_blocks * rows_per_block, dim), dtype=dtype)
+        padded[:n] = features
+        padded.tofile(path)
+        meta = {"n_nodes": int(n), "dim": int(dim), "dtype": dtype.name,
+                "block_size": int(block_size)}
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f)
+        return cls(path, n, dim, dtype.name, block_size, device)
+
+    @classmethod
+    def open(cls, path: str, device: NVMeModel | None = None) -> "FeatureBlockStore":
+        with open(path + ".meta.json") as f:
+            meta = json.load(f)
+        return cls(path, meta["n_nodes"], meta["dim"], meta["dtype"],
+                   meta["block_size"], device)
+
+    def block_of(self, nodes: np.ndarray) -> np.ndarray:
+        return np.asarray(nodes) // self.rows_per_block
+
+    def read_block(self, block_id: int) -> np.ndarray:
+        """One block-wise I/O; returns (rows_per_block, dim)."""
+        if not (0 <= block_id < self.n_blocks):
+            raise IndexError(block_id)
+        with self._io_lock:
+            sequential = block_id == self._last_block_read + 1
+            self._last_block_read = block_id
+            r = self.rows_per_block
+            rows = np.asarray(self._mm[block_id * r:(block_id + 1) * r])
+            t = self.device.request_time(self.block_size, sequential=sequential)
+            self.stats.record_read(self.block_size, t, sequential=sequential)
+        return rows
+
+    def read_rows_node_granular(self, nodes: np.ndarray, io_unit: int = 4096) -> np.ndarray:
+        """Baseline path (Ginex-like): one small I/O per requested row.
+
+        Each row read costs ``ceil(row_bytes / io_unit) * io_unit`` device
+        bytes at random-read latency — the paper's "large number of small
+        storage I/Os".
+        """
+        nodes = np.asarray(nodes)
+        out = np.asarray(self._mm[nodes])
+        per_io = -(-self.row_bytes // io_unit) * io_unit
+        t = self.device.batch_time(per_io * len(nodes), n_random=len(nodes))
+        self.stats.n_reads += len(nodes)
+        self.stats.bytes_read += per_io * len(nodes)
+        self.stats.modeled_read_time += t
+        self.stats.size_histogram[max(per_io // 1024, 1)] += len(nodes)
+        return out
+
+    def write_rows_node_granular(self, nodes: np.ndarray, io_unit: int = 4096) -> None:
+        """Account a node-granular write-back (feature-cache eviction path)."""
+        per_io = -(-self.row_bytes // io_unit) * io_unit
+        t = self.device.batch_time(per_io * len(nodes), n_random=len(nodes))
+        self.stats.record_write(per_io * len(nodes), t)

@@ -1,0 +1,87 @@
+"""Bucket matrix ``Bck`` for node identification (paper §3.4(3)).
+
+``Bck`` is logically a (n_blocks × hyperbatch_size) matrix whose cell
+``Bck[i, j]`` holds the nodes of minibatch *j* that live in block *i*.
+Real-world buckets are extremely sparse, so we materialize it as a sorted
+COO structure grouped by (block, minibatch): scanning "row ``Bck[i, :]``"
+is a contiguous slice.  Construction is a single vectorized
+sort-by-(block, minibatch) — no Python-per-node work.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Bucket:
+    """Sparse (block × minibatch) bucket matrix."""
+
+    block_ids: np.ndarray     # (n_groups,) ascending unique-per-(block,mb)
+    mb_ids: np.ndarray        # (n_groups,)
+    group_ptr: np.ndarray     # (n_groups + 1,) into nodes
+    nodes: np.ndarray         # concatenated node ids, grouped
+    row_ptr: np.ndarray       # (n_rows + 1,) into groups, one row per block
+    row_blocks: np.ndarray    # (n_rows,) distinct block ids, ascending
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.row_blocks)
+
+    def row(self, r: int):
+        """Iterate ``Bck[i, :]`` for row r: yields (mb_id, nodes)."""
+        for g in range(self.row_ptr[r], self.row_ptr[r + 1]):
+            yield int(self.mb_ids[g]), self.nodes[self.group_ptr[g]:self.group_ptr[g + 1]]
+
+    def row_nodes(self, r: int) -> np.ndarray:
+        """All nodes of row r across minibatches (with duplicates)."""
+        g0, g1 = self.row_ptr[r], self.row_ptr[r + 1]
+        return self.nodes[self.group_ptr[g0]:self.group_ptr[g1]]
+
+
+def build_bucket(nodes_per_mb: list[np.ndarray],
+                 blocks_of_nodes: list[np.ndarray]) -> Bucket:
+    """Build ``Bck`` from per-minibatch frontiers.
+
+    ``blocks_of_nodes[j][t]`` is the block id of ``nodes_per_mb[j][t]``
+    (a node split across several blocks may appear once per block; callers
+    pass the *primary* block and the sampler pulls continuation blocks).
+    """
+    if not nodes_per_mb:
+        return _empty()
+    nodes = np.concatenate(nodes_per_mb) if nodes_per_mb else np.zeros(0, np.int64)
+    blocks = np.concatenate(blocks_of_nodes) if blocks_of_nodes else np.zeros(0, np.int64)
+    mbs = np.repeat(np.arange(len(nodes_per_mb), dtype=np.int64),
+                    [len(x) for x in nodes_per_mb])
+    if len(nodes) == 0:
+        return _empty()
+    # sort by (block, mb, node) — one vectorized argsort
+    n_mb = len(nodes_per_mb)
+    key = (blocks * n_mb + mbs)
+    order = np.argsort(key * (nodes.max() + 1) + nodes
+                       if nodes.max() < 2**30 else key, kind="stable")
+    nodes, blocks, mbs, key = nodes[order], blocks[order], mbs[order], key[order]
+    # group boundaries by (block, mb)
+    is_new = np.empty(len(key), dtype=bool)
+    is_new[0] = True
+    np.not_equal(key[1:], key[:-1], out=is_new[1:])
+    g_start = np.nonzero(is_new)[0]
+    group_ptr = np.append(g_start, len(nodes))
+    g_block = blocks[g_start]
+    g_mb = mbs[g_start]
+    # rows: distinct blocks
+    row_new = np.empty(len(g_block), dtype=bool)
+    row_new[0] = True
+    np.not_equal(g_block[1:], g_block[:-1], out=row_new[1:])
+    r_start = np.nonzero(row_new)[0]
+    row_ptr = np.append(r_start, len(g_block))
+    row_blocks = g_block[r_start]
+    return Bucket(g_block, g_mb, group_ptr.astype(np.int64), nodes,
+                  row_ptr.astype(np.int64), row_blocks)
+
+
+def _empty() -> Bucket:
+    z = np.zeros(0, dtype=np.int64)
+    return Bucket(z, z, np.zeros(1, dtype=np.int64), z,
+                  np.zeros(1, dtype=np.int64), z)

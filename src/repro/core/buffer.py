@@ -1,0 +1,98 @@
+"""In-memory layer (paper §3.2): block buffers with LRU + pinning.
+
+The graph buffer and feature buffer hold loaded blocks in bounded main
+memory.  The buffer index tables ``T_buf^g`` / ``T_buf^f`` (paper Table 1)
+are the ``_table`` dicts mapping block-id → buffered block.  Eviction is
+LRU with *pinning* (paper §3.4(1)): blocks being processed by the current
+hyperbatch iteration are pinned and cannot be evicted until unpinned.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable
+
+from .device_model import IOStats
+
+
+class BlockBuffer:
+    """Bounded block buffer: LRU eviction, pin/unpin, hit accounting."""
+
+    def __init__(self, capacity_blocks: int, stats: IOStats | None = None,
+                 name: str = "buffer"):
+        if capacity_blocks < 1:
+            raise ValueError("buffer needs capacity >= 1")
+        self.capacity = capacity_blocks
+        self.name = name
+        self.stats = stats if stats is not None else IOStats()
+        self._table: OrderedDict[int, Any] = OrderedDict()  # T_buf
+        self._pins: dict[int, int] = {}
+        self.evictions = 0
+
+    def __contains__(self, block_id: int) -> bool:
+        return block_id in self._table
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def get(self, block_id: int, loader: Callable[[int], Any],
+            pin: bool = False) -> Any:
+        """Return the block, loading through ``loader`` on a miss."""
+        if block_id in self._table:
+            self._table.move_to_end(block_id)
+            self.stats.buffer_hits += 1
+            blk = self._table[block_id]
+        else:
+            self.stats.buffer_misses += 1
+            blk = loader(block_id)
+            self._insert(block_id, blk)
+        if pin:
+            self.pin(block_id)
+        return blk
+
+    def peek(self, block_id: int) -> Any:
+        return self._table.get(block_id)
+
+    def put(self, block_id: int, blk: Any) -> None:
+        """Insert without counting a hit/miss (prefetch path)."""
+        if block_id in self._table:
+            self._table.move_to_end(block_id)
+            self._table[block_id] = blk
+        else:
+            self._insert(block_id, blk)
+
+    def pin(self, block_id: int) -> None:
+        if block_id not in self._table:
+            raise KeyError(f"{self.name}: cannot pin absent block {block_id}")
+        self._pins[block_id] = self._pins.get(block_id, 0) + 1
+
+    def unpin(self, block_id: int) -> None:
+        c = self._pins.get(block_id, 0)
+        if c <= 1:
+            self._pins.pop(block_id, None)
+        else:
+            self._pins[block_id] = c - 1
+
+    def unpin_all(self) -> None:
+        self._pins.clear()
+
+    def pinned(self, block_id: int) -> bool:
+        return self._pins.get(block_id, 0) > 0
+
+    def _insert(self, block_id: int, blk: Any) -> None:
+        while len(self._table) >= self.capacity:
+            victim = self._evict_one()
+            if victim is None:
+                break  # everything pinned: allow temporary overflow
+        self._table[block_id] = blk
+
+    def _evict_one(self) -> int | None:
+        for bid in self._table:  # OrderedDict: LRU-first
+            if not self.pinned(bid):
+                del self._table[bid]
+                self.evictions += 1
+                return bid
+        return None
+
+    def clear(self) -> None:
+        self._table.clear()
+        self._pins.clear()

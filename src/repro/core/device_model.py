@@ -1,0 +1,142 @@
+"""Storage-device cost model + I/O accounting.
+
+The container has no NVMe SSD, so the *timing* of storage I/O is modeled
+while the I/O itself is real (bytes move through ``np.memmap`` files).
+The model is calibrated to the paper's hardware (Dell R750, PCIe Gen4 NVMe,
+~6.7 GB/s per SSD, RAID0 arrays of 1-4 drives).  Counts/bytes/hit-ratios
+reported by :class:`IOStats` are exact measurements of the algorithms.
+
+Model (per request):
+    t(req)  = latency + bytes / bw           (random)
+    t(req)  = bytes / bw                      (sequential follow-on)
+Aggregate with queue-depth QD in flight and an n-SSD RAID0 array:
+    T(batch) = max(sum_bytes / (bw * n_ssd), n_random * latency / QD)
+which captures both the bandwidth-bound regime (large block I/O: AGNES)
+and the latency/IOPS-bound regime (many 4 KB reads: Ginex-like).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+
+
+@dataclasses.dataclass
+class NVMeModel:
+    """PCIe Gen4 NVMe SSD (paper's hardware)."""
+
+    bandwidth: float = 6.7e9        # bytes/s, per SSD
+    latency: float = 80e-6          # s, random 4K read latency
+    queue_depth: int = 32           # in-flight requests
+    n_ssd: int = 1                  # RAID0 array size (paper: 1..4)
+    min_io: int = 4096              # device sector granularity
+
+    @property
+    def array_bandwidth(self) -> float:
+        return self.bandwidth * self.n_ssd
+
+    def request_time(self, nbytes: int, sequential: bool = False) -> float:
+        nbytes = max(int(nbytes), self.min_io)
+        t = nbytes / self.array_bandwidth
+        if not sequential:
+            t += self.latency
+        return t
+
+    def batch_time(self, total_bytes: int, n_random: int, n_sequential: int = 0) -> float:
+        """Time for a batch of requests issued with queue-depth overlap."""
+        total_bytes = max(int(total_bytes), self.min_io * max(n_random + n_sequential, 1))
+        bw_bound = total_bytes / self.array_bandwidth
+        iops_bound = n_random * self.latency / self.queue_depth
+        return max(bw_bound, iops_bound)
+
+
+@dataclasses.dataclass
+class IOStats:
+    """Exact I/O accounting + modeled device time."""
+
+    n_reads: int = 0
+    n_writes: int = 0
+    n_sequential_reads: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    modeled_read_time: float = 0.0
+    modeled_write_time: float = 0.0
+    size_histogram: Counter = dataclasses.field(default_factory=Counter)
+
+    # cache-level accounting (filled by the buffer layers)
+    buffer_hits: int = 0
+    buffer_misses: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    def record_read(self, nbytes: int, t: float, sequential: bool = False) -> None:
+        self.n_reads += 1
+        if sequential:
+            self.n_sequential_reads += 1
+        self.bytes_read += int(nbytes)
+        self.modeled_read_time += t
+        self.size_histogram[_bucket(nbytes)] += 1
+
+    def record_write(self, nbytes: int, t: float) -> None:
+        self.n_writes += 1
+        self.bytes_written += int(nbytes)
+        self.modeled_write_time += t
+
+    @property
+    def n_ios(self) -> int:
+        return self.n_reads + self.n_writes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_read + self.bytes_written
+
+    @property
+    def modeled_io_time(self) -> float:
+        return self.modeled_read_time + self.modeled_write_time
+
+    @property
+    def buffer_hit_ratio(self) -> float:
+        tot = self.buffer_hits + self.buffer_misses
+        return self.buffer_hits / tot if tot else 0.0
+
+    @property
+    def cache_hit_ratio(self) -> float:
+        tot = self.cache_hits + self.cache_misses
+        return self.cache_hits / tot if tot else 0.0
+
+    def achieved_bandwidth(self) -> float:
+        """Modeled achieved read bandwidth (bytes/s)."""
+        if self.modeled_read_time <= 0:
+            return 0.0
+        return self.bytes_read / self.modeled_read_time
+
+    def merge(self, other: "IOStats") -> "IOStats":
+        for f in ("n_reads", "n_writes", "n_sequential_reads", "bytes_read",
+                  "bytes_written", "buffer_hits", "buffer_misses",
+                  "cache_hits", "cache_misses"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        self.modeled_read_time += other.modeled_read_time
+        self.modeled_write_time += other.modeled_write_time
+        self.size_histogram.update(other.size_histogram)
+        return self
+
+    def summary(self) -> dict:
+        return {
+            "n_reads": self.n_reads,
+            "n_writes": self.n_writes,
+            "n_sequential_reads": self.n_sequential_reads,
+            "bytes_read": self.bytes_read,
+            "bytes_written": self.bytes_written,
+            "modeled_io_time_s": round(self.modeled_io_time, 6),
+            "achieved_bw_GBps": round(self.achieved_bandwidth() / 1e9, 3),
+            "buffer_hit_ratio": round(self.buffer_hit_ratio, 4),
+            "cache_hit_ratio": round(self.cache_hit_ratio, 4),
+        }
+
+
+def _bucket(nbytes: int) -> int:
+    """Histogram bucket: power-of-two size class in KiB."""
+    kib = max(nbytes // 1024, 1)
+    b = 1
+    while b < kib:
+        b <<= 1
+    return b

@@ -1,0 +1,100 @@
+"""Feature cache ``C_f`` + cache index table ``T_ch^f`` (paper §3.4(2)).
+
+AGNES counts accesses to each feature vector and keeps only rows whose
+access count exceeds a threshold resident in the in-memory feature cache;
+infrequently accessed rows are written back / dropped at minibatch
+boundaries and re-read from storage when needed again.
+
+Implementation is fully vectorized (this container has one CPU core):
+
+* ``T_ch`` (cache index table)  → ``slot_of[node] ∈ {-1, slot}``
+* ``C_f``  (feature cache)      → ``rows[slot, :]``
+* access counters               → ``counts[node]``
+* eviction                      → clock (second-chance-free FIFO ring),
+  which approximates the paper's LRU within the admitted set.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .device_model import IOStats
+
+
+class FeatureCache:
+    """Access-count-thresholded, vectorized feature-row cache."""
+
+    def __init__(self, capacity_rows: int, n_nodes: int, dim: int,
+                 admit_threshold: int = 2,
+                 dtype: np.dtype = np.float32,
+                 stats: IOStats | None = None):
+        self.capacity = max(int(capacity_rows), 0)
+        self.n_nodes = n_nodes
+        self.dim = dim
+        self.admit_threshold = admit_threshold
+        self.dtype = np.dtype(dtype)
+        self.stats = stats if stats is not None else IOStats()
+        cap = max(self.capacity, 1)
+        self.slot_of = np.full(n_nodes, -1, dtype=np.int64)   # T_ch
+        self.node_at = np.full(cap, -1, dtype=np.int64)
+        self.rows = np.zeros((cap, dim), dtype=self.dtype)    # C_f
+        self.counts = np.zeros(n_nodes, dtype=np.int64)
+        self._clock = 0
+        self._n_resident = 0
+
+    def __len__(self) -> int:
+        return self._n_resident
+
+    # ------------------------------------------------------------ reads
+    def lookup(self, nodes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Split ``nodes`` into (hit_mask, rows-for-hits, in nodes' order)."""
+        nodes = np.asarray(nodes)
+        slots = self.slot_of[nodes]
+        mask = slots >= 0
+        self.stats.cache_hits += int(mask.sum())
+        self.stats.cache_misses += int((~mask).sum())
+        return mask, self.rows[slots[mask]]
+
+    def note_access(self, nodes: np.ndarray) -> None:
+        np.add.at(self.counts, np.asarray(nodes), 1)
+
+    # ------------------------------------------------------------ admit
+    def admit(self, nodes: np.ndarray, rows: np.ndarray) -> int:
+        """Offer freshly-read rows; admit those above the access threshold.
+
+        Rows below the threshold are *not* kept (the paper writes them back
+        to storage each minibatch).  Returns the number admitted.
+        """
+        if self.capacity == 0 or len(nodes) == 0:
+            return 0
+        nodes = np.asarray(nodes)
+        cand = (self.counts[nodes] >= self.admit_threshold) & (self.slot_of[nodes] < 0)
+        cand_idx = np.nonzero(cand)[0]
+        if cand_idx.size == 0:
+            return 0
+        # dedupe within the batch, keep first occurrence; a single batch
+        # can admit at most `capacity` rows (slots must stay distinct)
+        uniq_nodes, first = np.unique(nodes[cand_idx], return_index=True)
+        cand_idx = cand_idx[first][:self.capacity]
+        k = len(cand_idx)
+        # allocate k slots from the clock ring, evicting current occupants
+        slots = (self._clock + np.arange(k)) % max(self.capacity, 1)
+        self._clock = int((self._clock + k) % max(self.capacity, 1))
+        evicted = self.node_at[slots]
+        live = evicted >= 0
+        self.slot_of[evicted[live]] = -1
+        self._n_resident -= int(live.sum())
+        self.node_at[slots] = nodes[cand_idx]
+        self.slot_of[nodes[cand_idx]] = slots
+        self.rows[slots] = rows[cand_idx]
+        self._n_resident += k
+        return k
+
+    def resident_nodes(self) -> np.ndarray:
+        return self.node_at[self.node_at >= 0]
+
+    def clear(self) -> None:
+        self.slot_of.fill(-1)
+        self.node_at.fill(-1)
+        self.counts.fill(0)
+        self._clock = 0
+        self._n_resident = 0

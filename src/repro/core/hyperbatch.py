@@ -1,0 +1,195 @@
+"""Hyperbatch-based sampling (paper §3.3, Algorithm 1 lines 3-12).
+
+The loop-order inversion that is the paper's key idea: instead of walking
+*target nodes* and fetching whatever blocks they need (reloading blocks
+that fall out of the bounded buffer — Fig 5(a)), AGNES walks *blocks* in
+ascending ID order and, for each loaded block, serves every minibatch of
+the hyperbatch that needs anything in it (Fig 5(b)).  One block-wise I/O
+per needed block per hop, and the ascending visit order makes those I/Os
+largely sequential.
+
+Both processing modes share all mechanics and the deterministic sampler,
+so they produce *identical* MFGs:
+
+* :meth:`HyperbatchSampler.sample_hyperbatch`  — block-major (AGNES-HB)
+* :meth:`HyperbatchSampler.sample_per_minibatch` — target-major (AGNES-No)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .block_store import GraphBlock, GraphBlockStore
+from .bucket import build_bucket
+from .buffer import BlockBuffer
+from .sampling import MFG, assemble_layer, sample_indices
+
+
+class HyperbatchSampler:
+    """k-hop neighbor sampler over a :class:`GraphBlockStore`."""
+
+    def __init__(self, store: GraphBlockStore, buffer: BlockBuffer,
+                 fanouts: tuple[int, ...], seed: int = 0,
+                 prefetcher=None):
+        self.store = store
+        self.buffer = buffer
+        self.fanouts = tuple(fanouts)
+        self.seed = seed
+        self.prefetcher = prefetcher
+
+    # ------------------------------------------------------------ public
+    def sample_hyperbatch(self, targets_per_mb: list[np.ndarray],
+                          epoch: int = 0) -> list[MFG]:
+        """Block-major sampling for a full hyperbatch (Algorithm 1)."""
+        n_mb = len(targets_per_mb)
+        frontiers = [np.unique(np.asarray(t, dtype=np.int64)) for t in targets_per_mb]
+        mfgs = [MFG(nodes=[f], layers=[]) for f in frontiers]
+        for hop, fanout in enumerate(self.fanouts):
+            # Bck_{i,j} <- N_in^j in B_g(i)    (Algorithm 1 line 6)
+            primary = [self._primary_block(f) for f in frontiers]
+            bck = build_bucket(frontiers, primary)
+            sampled = [np.full((len(f), fanout), -1, dtype=np.int64)
+                       for f in frontiers]
+            if self.prefetcher is not None:
+                self.prefetcher.plan(bck.row_blocks)
+            for r in range(bck.n_rows):  # ascending blocks (line 7)
+                self._process_row(bck, r, frontiers, sampled,
+                                  fanout, epoch, hop)
+            frontiers = self._advance(mfgs, frontiers, sampled)
+        return mfgs
+
+    def sample_per_minibatch(self, targets_per_mb: list[np.ndarray],
+                             epoch: int = 0) -> list[MFG]:
+        """Target-major sampling (no hyperbatch): one minibatch at a time.
+
+        Identical sampling decisions; only the block visit order differs,
+        so the bounded buffer may thrash across minibatches (Fig 5(a)).
+        """
+        out = []
+        for t in targets_per_mb:
+            out.extend(self._sample_one([np.unique(np.asarray(t, np.int64))],
+                                        epoch))
+        return out
+
+    def _sample_one(self, frontiers: list[np.ndarray], epoch: int) -> list[MFG]:
+        mfgs = [MFG(nodes=[f], layers=[]) for f in frontiers]
+        for hop, fanout in enumerate(self.fanouts):
+            primary = [self._primary_block(f) for f in frontiers]
+            bck = build_bucket(frontiers, primary)
+            sampled = [np.full((len(f), fanout), -1, dtype=np.int64)
+                       for f in frontiers]
+            for r in range(bck.n_rows):
+                self._process_row(bck, r, frontiers, sampled,
+                                  fanout, epoch, hop)
+            frontiers = self._advance(mfgs, frontiers, sampled)
+        return mfgs
+
+    # ------------------------------------------------------------ internals
+    def _primary_block(self, nodes: np.ndarray) -> np.ndarray:
+        """First block containing each node (vectorized T_obj search)."""
+        if len(nodes) == 0:
+            return np.zeros(0, dtype=np.int64)
+        lasts = self.store.t_obj[:, 1]
+        lo = np.searchsorted(lasts, nodes, side="left")
+        return np.clip(lo, 0, self.store.n_blocks - 1)
+
+    def _load(self, block_id: int, pin: bool) -> GraphBlock:
+        if block_id not in self.buffer and self.prefetcher is not None:
+            blk = self.prefetcher.take(block_id)
+            if blk is not None:
+                # the I/O already happened on the prefetch thread: count a miss
+                self.buffer.stats.buffer_misses += 1
+                self.buffer.put(block_id, blk)
+                if pin:
+                    self.buffer.pin(block_id)
+                return blk
+        return self.buffer.get(block_id, self.store.read_block, pin=pin)
+
+    def _process_row(self, bck, r: int, frontiers, sampled,
+                     fanout: int, epoch: int, hop: int) -> None:
+        """Process row ``Bck[i, :]`` — one block serves all minibatches."""
+        b = int(bck.row_blocks[r])
+        blk = self._load(b, pin=True)
+        pinned = [b]
+        try:
+            row_nodes = np.unique(bck.row_nodes(r))
+            nbrs, ok = self._sample_nodes_in_block(
+                blk, row_nodes, fanout, epoch, hop, pinned)
+            row_nodes = row_nodes[ok]
+            nbrs = nbrs[ok]
+            # fan the shared sample out to every minibatch in the row
+            for g in range(bck.row_ptr[r], bck.row_ptr[r + 1]):
+                j = int(bck.mb_ids[g])
+                g_nodes = bck.nodes[bck.group_ptr[g]:bck.group_ptr[g + 1]]
+                sel = np.searchsorted(row_nodes, g_nodes)
+                sel_ok = (sel < len(row_nodes))
+                sel_c = np.clip(sel, 0, max(len(row_nodes) - 1, 0))
+                sel_ok &= row_nodes[sel_c] == g_nodes if len(row_nodes) else False
+                dst_pos = np.searchsorted(frontiers[j], g_nodes)
+                sampled[j][dst_pos[sel_ok]] = nbrs[sel_c[sel_ok]]
+        finally:
+            for p in pinned:
+                self.buffer.unpin(p)
+
+    def _sample_nodes_in_block(self, blk: GraphBlock, nodes: np.ndarray,
+                               fanout: int, epoch: int, hop: int,
+                               pinned: list[int]) -> tuple[np.ndarray, np.ndarray]:
+        """Sample ``fanout`` neighbors for each node whose object starts in
+        ``blk``.  Returns ((n, fanout) neighbor ids with -1 pad, ok mask)."""
+        entry, present = blk.find_entries(nodes)
+        nbrs = np.full((len(nodes), fanout), -1, dtype=np.int64)
+        if not present.any():
+            return nbrs, present
+        e = entry[present]
+        deg = blk.total_degree[e]
+        pos = sample_indices(nodes[present], deg, fanout, self.seed, epoch, hop)
+        counts = blk.indptr[e + 1] - blk.indptr[e]
+        whole = counts == deg  # object fully inside this block
+        # vectorized path: positions index directly into the block payload
+        w = np.nonzero(whole)[0]
+        if w.size and len(blk.indices):
+            base = blk.indptr[e[w]][:, None]
+            p = pos[w]
+            sel = np.where(p >= 0, base + p, 0)
+            vals = blk.indices[sel]
+            nbrs_present = np.where(p >= 0, vals, -1)
+            out_idx = np.nonzero(present)[0][w]
+            nbrs[out_idx] = nbrs_present
+        # split objects (hub nodes): stitch continuation blocks
+        s = np.nonzero(~whole)[0]
+        for i in s.tolist():
+            node = int(nodes[present][i])
+            adj = self._stitch_split(blk, int(e[i]), node, int(deg[i]), pinned)
+            p = pos[i]
+            row = np.where(p >= 0, adj[np.clip(p, 0, len(adj) - 1)], -1)
+            nbrs[np.nonzero(present)[0][i]] = row
+        return nbrs, present
+
+    def _stitch_split(self, blk: GraphBlock, entry: int, node: int,
+                      total_deg: int, pinned: list[int]) -> np.ndarray:
+        """Assemble the full adjacency of an object split across blocks."""
+        parts = [blk.adjacency(entry)]
+        got = len(parts[0])
+        bid = blk.block_id
+        while got < total_deg:
+            bid += 1
+            nxt = self._load(bid, pin=True)
+            pinned.append(bid)
+            ent, ok = nxt.find_entries(np.array([node]))
+            if not ok[0]:
+                raise RuntimeError(
+                    f"split object {node} not found in continuation block {bid}")
+            part = nxt.adjacency(int(ent[0]))
+            parts.append(part)
+            got += len(part)
+        return np.concatenate(parts)
+
+    @staticmethod
+    def _advance(mfgs: list[MFG], frontiers: list[np.ndarray],
+                 sampled: list[np.ndarray]) -> list[np.ndarray]:
+        nxt_frontiers = []
+        for j, mfg in enumerate(mfgs):
+            nxt, layer = assemble_layer(frontiers[j], sampled[j])
+            mfg.nodes.append(nxt)
+            mfg.layers.append(layer)
+            nxt_frontiers.append(nxt)
+        return nxt_frontiers

@@ -1,0 +1,108 @@
+"""Deterministic neighbor sampling + message-flow-graph assembly.
+
+Neighbor choice uses a *counter-based hash* keyed by (seed, epoch, hop,
+node): the sample drawn for a node is a pure function of those values and
+never of execution order.  This is what makes hyperbatch (block-order)
+processing *provably equivalent* to per-minibatch (target-order)
+processing — the property tests assert bit-equality — and underpins the
+paper's Fig-12 "same accuracy, less time" claim.
+
+For a node with degree ``d``:
+* ``d <= fanout``  → take the whole neighborhood (no randomness);
+* ``d  > fanout``  → take ``fanout`` draws-with-replacement
+  ``hash(seed, epoch, hop, node, j) mod d`` (GraphSAGE-style; duplicates
+  are deduped by the MFG `unique` step).
+
+The MFG (message-flow graph) per minibatch per hop is a padded neighbor
+table ``nbr_idx: (n_dst, fanout) int32`` indexing into the next layer's
+node array, with ``-1`` padding — the dense layout TPU/JAX GNN compute
+wants (gathers, not scatters).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    x = (x + np.uint64(0x9E3779B97F4A7C15))
+    x = (x ^ (x >> np.uint64(30))) * _M1
+    x = (x ^ (x >> np.uint64(27))) * _M2
+    return x ^ (x >> np.uint64(31))
+
+
+def sample_indices(nodes: np.ndarray, degrees: np.ndarray, fanout: int,
+                   seed: int, epoch: int, hop: int) -> np.ndarray:
+    """(n, fanout) positions into each node's adjacency list; -1 pad.
+
+    Pure function of (seed, epoch, hop, node) — order-independent.
+    """
+    n = len(nodes)
+    with np.errstate(over="ignore"):
+        base = _splitmix64(
+            np.uint64(seed) * np.uint64(0x9E3779B97F4A7C15)
+            ^ (np.uint64(epoch) << np.uint64(40))
+            ^ (np.uint64(hop) << np.uint64(32))
+            ^ nodes.astype(np.uint64))
+        draws = _splitmix64(base[:, None]
+                            + np.arange(1, fanout + 1, dtype=np.uint64)[None, :])
+    deg = degrees.astype(np.int64)
+    out = np.empty((n, fanout), dtype=np.int64)
+    big = deg > fanout
+    # d > fanout: hashed draws mod d
+    safe = np.maximum(deg, 1)
+    out[:] = (draws % safe.astype(np.uint64)[:, None]).astype(np.int64)
+    # d <= fanout: positions 0..d-1 then -1 padding
+    ar = np.arange(fanout, dtype=np.int64)[None, :]
+    small_take = np.where(ar < deg[:, None], ar, -1)
+    out = np.where(big[:, None], out, small_take)
+    return out
+
+
+@dataclasses.dataclass
+class MFGLayer:
+    """One hop of a sampled message-flow graph."""
+
+    nbr_idx: np.ndarray   # (n_dst, fanout) int32 → index into next layer nodes; -1 pad
+    self_idx: np.ndarray  # (n_dst,) int32 → index of dst nodes in next layer nodes
+    n_src: int            # size of next layer's node array
+
+
+@dataclasses.dataclass
+class MFG:
+    """Sampled k-hop computation graph for one minibatch.
+
+    ``nodes[0]`` are the targets; ``nodes[k]`` is the full receptive field
+    (self-inclusive, so features for ``nodes[k]`` suffice for all hops).
+    """
+
+    nodes: list[np.ndarray]    # per hop: node ids, hop 0 = targets
+    layers: list[MFGLayer]     # len k; layers[h] maps nodes[h] ← nodes[h+1]
+
+    @property
+    def input_nodes(self) -> np.ndarray:
+        return self.nodes[-1]
+
+    @property
+    def all_sampled(self) -> np.ndarray:
+        return np.unique(np.concatenate(self.nodes))
+
+
+def assemble_layer(dst_nodes: np.ndarray, sampled_nbrs: np.ndarray) -> tuple[np.ndarray, MFGLayer]:
+    """Build one MFG layer from dst nodes + their sampled neighbors.
+
+    ``sampled_nbrs``: (n_dst, fanout) node ids with -1 padding.
+    Returns (next_layer_nodes, MFGLayer); next layer includes dst nodes
+    (self edges) so receptive fields nest.
+    """
+    valid = sampled_nbrs >= 0
+    cat = np.concatenate([dst_nodes, sampled_nbrs[valid]])
+    nxt, inv = np.unique(cat, return_inverse=True)
+    self_idx = inv[:len(dst_nodes)].astype(np.int32)
+    nbr_idx = np.full(sampled_nbrs.shape, -1, dtype=np.int32)
+    nbr_idx[valid] = inv[len(dst_nodes):].astype(np.int32)
+    return nxt, MFGLayer(nbr_idx, self_idx, int(len(nxt)))

@@ -1,0 +1,5 @@
+from .synth import powerlaw_graph, rmat_graph, make_features
+from .datasets import DATASETS, GraphDataset, build_dataset
+
+__all__ = ["powerlaw_graph", "rmat_graph", "make_features",
+           "DATASETS", "GraphDataset", "build_dataset"]

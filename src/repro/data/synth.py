@@ -1,0 +1,94 @@
+"""Synthetic power-law graph generation (container-scale stand-ins).
+
+Real-world graphs have power-law degree distributions (paper §1, [15]) —
+that skew is exactly what creates the many-small-I/O problem AGNES solves,
+so the generators here are built to reproduce it:
+
+* :func:`rmat_graph` — Kronecker/R-MAT edges (a,b,c,d), the standard
+  web/social-graph generator (Graph500 uses it).
+* :func:`powerlaw_graph` — preferential-attachment-flavored generator with
+  an explicit Zipf exponent (vectorized; no Python-per-edge loops).
+
+Both return deduplicated, symmetrized-optional CSR.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def rmat_graph(n_nodes: int, n_edges: int, *, a: float = 0.57, b: float = 0.19,
+               c: float = 0.19, seed: int = 0,
+               symmetrize: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """R-MAT graph as CSR (indptr, indices)."""
+    rng = np.random.default_rng(seed)
+    scale = max(int(np.ceil(np.log2(max(n_nodes, 2)))), 1)
+    m = int(n_edges)
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    pa, pb, pc = a, a + b, a + b + c
+    for bit in range(scale):
+        r = rng.random(m)
+        quad_b = (r >= pa) & (r < pb)
+        quad_c = (r >= pb) & (r < pc)
+        quad_d = r >= pc
+        src = (src << 1) | (quad_c | quad_d)
+        dst = (dst << 1) | (quad_b | quad_d)
+    src %= n_nodes
+    dst %= n_nodes
+    return _to_csr(n_nodes, src, dst, symmetrize)
+
+
+def powerlaw_graph(n_nodes: int, avg_degree: int = 15, *, alpha: float = 1.8,
+                   seed: int = 0,
+                   symmetrize: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """Zipf-skewed multigraph: endpoints drawn from a truncated zipf."""
+    rng = np.random.default_rng(seed)
+    m = n_nodes * avg_degree // (2 if symmetrize else 1)
+    # endpoint popularity ~ zipf(alpha) over a shuffled identity
+    ranks = rng.permutation(n_nodes)
+    u = rng.random(m)
+    v = rng.random(m)
+    # inverse-CDF for truncated zipf on [1, n]
+    x = _zipf_inv(u, alpha, n_nodes)
+    y = (rng.random(m) * n_nodes).astype(np.int64)  # uniform other end
+    src = ranks[x]
+    dst = ranks[np.minimum(y, n_nodes - 1)]
+    keep = src != dst
+    return _to_csr(n_nodes, src[keep], dst[keep], symmetrize)
+
+
+def _zipf_inv(u: np.ndarray, alpha: float, n: int) -> np.ndarray:
+    if abs(alpha - 1.0) < 1e-9:
+        alpha = 1.0000001
+    h = lambda x: (x ** (1 - alpha) - 1) / (1 - alpha)  # noqa: E731
+    total = h(n + 1.0)
+    x = ((u * total) * (1 - alpha) + 1) ** (1.0 / (1 - alpha))
+    return np.clip(x.astype(np.int64), 1, n) - 1
+
+
+def _to_csr(n: int, src: np.ndarray, dst: np.ndarray,
+            symmetrize: bool) -> tuple[np.ndarray, np.ndarray]:
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    # dedupe
+    key = src * n + dst
+    key = np.unique(key)
+    src = key // n
+    dst = key % n
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, src + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return indptr, dst.astype(np.int64)
+
+
+def make_features(n_nodes: int, dim: int, seed: int = 0,
+                  n_classes: int = 16,
+                  dtype=np.float32) -> tuple[np.ndarray, np.ndarray]:
+    """Class-conditional Gaussian features + labels (classification-able)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, n_nodes)
+    centers = rng.normal(0, 1.0, (n_classes, dim))
+    feats = centers[labels] + rng.normal(0, 1.0, (n_nodes, dim))
+    return feats.astype(dtype), labels.astype(np.int32)

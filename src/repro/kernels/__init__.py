@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+kernel files (pl.pallas_call + BlockSpec) | ops.py (jit wrappers) | ref.py
+(pure-jnp oracles).  Validated in interpret mode on CPU; compiled for TPU
+as the deployment target.
+"""
+from .ops import flash_attention, gather_aggregate, gather_rows
+from . import ref
+
+__all__ = ["flash_attention", "gather_aggregate", "gather_rows", "ref"]

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: flash attention (tiled online-softmax), GQA + SWA.
+
+The LM-side compute hot spot.  The paper's insight — organize data
+movement around the transfer unit the hardware likes, and batch consumers
+per loaded block — is literally what flash attention does one level down
+the memory hierarchy: KV tiles are the "blocks" (HBM→VMEM DMAs), and all
+query rows of the Q tile are the "hyperbatch" consuming each loaded KV
+tile before it is evicted.
+
+Layout: q (B*H, S, D) processed on a grid (bh, q_tiles, kv_tiles);
+running max ``m``, normalizer ``l`` and the unnormalized accumulator
+``acc`` live in VMEM scratch across the kv_tile loop; the output tile is
+written on the last kv step.  Causal + sliding-window masks are applied
+per tile, and fully-masked tiles short-circuit (no MXU work) — with
+causal + ascending kv order that skips ~half the grid.
+
+Block sizes default to (128, 128): MXU-aligned in both matmul dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, kv_steps: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                                  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    if causal or window > 0:
+        # skip tiles that are fully masked (the mask above is static per
+        # (qi, ki) only in the diagonal sense; compute reachability)
+        first_q = qi * block_q
+        last_q = first_q + block_q - 1
+        first_k = ki * block_k
+        last_k = first_k + block_k - 1
+        reach = jnp.array(True)
+        if causal:
+            reach &= first_k <= last_q
+        if window > 0:
+            reach &= last_k > first_q - window
+        pl.when(reach)(_tile)
+    else:
+        _tile()
+
+    @pl.when(ki == kv_steps - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, window: int = 0,
+                           scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D) → (B, Hq, S, D).
+
+    GQA handled by folding the group into the batch*head grid axis and
+    pointing the K/V BlockSpecs at head ``h // (Hq // Hkv)``.
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    q_steps = pl.cdiv(S, block_q)
+    kv_steps = pl.cdiv(S, block_k)
+
+    qr = q.reshape(B * Hq, S, D)
+    kr = k.reshape(B * Hkv, S, D)
+    vr = v.reshape(B * Hkv, S, D)
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, kv_steps=kv_steps)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(B * Hq, q_steps, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # normalizer l
+            pltpu.VMEM((block_q, D), jnp.float32),   # accumulator
+        ],
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, D), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, S, D)

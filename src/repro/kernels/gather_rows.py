@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: block-wise feature-row gather.
+
+The TPU analogue of AGNES's gathering stage (paper G-1/G-2): rows are
+pulled HBM→VMEM in *blocks* chosen by a scalar-prefetched index vector —
+the BlockSpec index_map plays the role of the object index table
+``T_obj``: it maps each grid step to the (block-sized) region of the
+feature table that must be resident in VMEM.
+
+Tiling: the row dimension of the table is pre-blocked at ``rows_per_blk``
+(the "feature block"); the gather processes ``idx_per_step`` output rows
+per grid step with the *whole row width* resident (feature dims are
+128-aligned by the caller: MXU/VPU lane width).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, table_ref, out_ref):
+    """One output row per grid step, row block selected by idx prefetch."""
+    out_ref[...] = table_ref[...]
+
+
+def gather_rows_kernel(table: jnp.ndarray, idx: jnp.ndarray, *,
+                       interpret: bool = False) -> jnp.ndarray:
+    """out[i] = table[idx[i]].
+
+    table: (M, D) with D a multiple of 128 ideally; idx: (N,) int32.
+    Grid is (N,); each step DMA's exactly the needed (1, D) row block —
+    the index map consumes the scalar-prefetched ``idx`` so the DMA
+    address is known before the step runs (double-buffered by Mosaic).
+    """
+    n = idx.shape[0]
+    m, d = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), table)

@@ -1,0 +1,66 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each op dispatches: Pallas TPU kernel on TPU backends, Pallas interpret
+mode when ``interpret=True`` (CPU validation), and the jnp oracle
+otherwise — so the same call sites run everywhere.  The oracle *is* the
+semantics (``ref.py``); tests sweep shapes/dtypes asserting the kernels
+match it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_kernel
+from .gather_rows import gather_rows_kernel
+from .segment_agg import gather_aggregate_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def gather_rows(table: jnp.ndarray, idx: jnp.ndarray, *,
+                use_kernel: bool | None = None,
+                interpret: bool = False) -> jnp.ndarray:
+    """out[i] = table[idx[i]] (block feature gather)."""
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use or interpret:
+        return gather_rows_kernel(table, idx, interpret=interpret or not _on_tpu())
+    return ref.gather_rows_ref(table, idx)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mean", "use_kernel", "interpret"))
+def gather_aggregate(table: jnp.ndarray, nbr_idx: jnp.ndarray, *,
+                     mean: bool = True, use_kernel: bool | None = None,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Fused GNN neighbor gather + masked sum/mean."""
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use or interpret:
+        return gather_aggregate_kernel(
+            table, nbr_idx, mean=mean, interpret=interpret or not _on_tpu())
+    return ref.gather_aggregate_ref(table, nbr_idx, mean=mean)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "use_kernel", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    use_kernel: bool | None = None,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Tiled online-softmax attention with GQA + sliding window."""
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use or interpret:
+        return flash_attention_kernel(
+            q, k, v, causal=causal, window=window, scale=scale,
+            block_q=block_q, block_k=block_k,
+            interpret=interpret or not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   scale=scale)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the semantic specification its kernel is tested against
+(`tests/test_kernels.py` sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = table[idx[i]] — block feature gather (paper G-1/G-2)."""
+    return jnp.take(table, idx, axis=0)
+
+
+def gather_aggregate_ref(table: jnp.ndarray, nbr_idx: jnp.ndarray,
+                         mean: bool = True) -> jnp.ndarray:
+    """Fused neighbor gather + masked sum/mean (GNN aggregation).
+
+    nbr_idx: (n_dst, fanout) int32, -1 padding.
+    out[v]  = sum_f table[nbr_idx[v, f]]  (masked; mean divides by count).
+    """
+    mask = (nbr_idx >= 0)
+    vals = jnp.take(table, jnp.clip(nbr_idx, 0), axis=0)
+    m = mask[..., None].astype(vals.dtype)
+    s = jnp.sum(vals * m, axis=1)
+    if mean:
+        c = jnp.maximum(jnp.sum(m, axis=1), 1.0)
+        return s / c
+    return s
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Reference attention. q: (B, Hq, S, D), k/v: (B, Hkv, S, D).
+
+    GQA: Hq % Hkv == 0; query head h reads kv head h // (Hq // Hkv).
+    ``window`` > 0 restricts to a causal sliding window of that size.
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, S, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qf, kf) * scale
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window > 0:
+        mask &= pos_k > pos_q - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p, vf)
+    return out.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, lengths: jnp.ndarray,
+                         scale: float | None = None) -> jnp.ndarray:
+    """Single-token decode attention over a (ragged) KV cache.
+
+    q: (B, Hq, D); k/v_cache: (B, Hkv, Smax, D); lengths: (B,) valid length.
+    """
+    B, Hq, D = q.shape
+    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, D)
+    logits = jnp.einsum("bhgd,bhtd->bhgt", qf, k_cache.astype(jnp.float32))
+    logits = logits * scale
+    mask = jnp.arange(Smax)[None, None, None, :] < lengths[:, None, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

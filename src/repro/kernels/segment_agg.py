@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused neighbor gather + aggregate (GNN hot spot).
+
+GNN aggregation ``h_v = mean_{u in N(v)} x_u`` on GPU is a scatter-add
+(cuSPARSE SpMM); on TPU the efficient form is the inverse — a *gather*
+driven by the padded neighbor table the AGNES sampler emits, accumulated
+in VMEM.  This is the hardware adaptation DESIGN.md §3 describes: the
+random access moves into the BlockSpec index_map (sequential, prefetched
+DMA schedule) instead of a scattered write stream.
+
+Grid: (n_dst, fanout).  For each dst row we walk its fanout neighbor
+rows; the neighbor feature block is selected by the scalar-prefetched
+``nbr_idx``; a VMEM f32 accumulator carries the partial sum; on the last
+fanout step the (optionally mean-normalized) row is written out.
+Padding (-1) contributes zero via a mask multiply; the index map clamps
+-1 to row 0 so the DMA stays in bounds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _agg_kernel(idx_ref, cnt_ref, table_ref, out_ref, acc_ref, *,
+                fanout: int, mean: bool):
+    v = pl.program_id(0)
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = idx_ref[v * fanout + f] >= 0
+    w = jnp.where(valid, 1.0, 0.0).astype(jnp.float32)
+    acc_ref[...] += table_ref[...].astype(jnp.float32) * w
+
+    @pl.when(f == fanout - 1)
+    def _finalize():
+        acc = acc_ref[...]
+        if mean:
+            c = jnp.maximum(cnt_ref[v].astype(jnp.float32), 1.0)
+            acc = acc / c
+        out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def gather_aggregate_kernel(table: jnp.ndarray, nbr_idx: jnp.ndarray, *,
+                            mean: bool = True,
+                            interpret: bool = False) -> jnp.ndarray:
+    """out[v] = sum/mean_f table[nbr_idx[v, f]] with -1 padding masked."""
+    n_dst, fanout = nbr_idx.shape
+    m, d = table.shape
+    flat_idx = nbr_idx.reshape(-1).astype(jnp.int32)
+    counts = jnp.sum(nbr_idx >= 0, axis=1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # flat_idx, counts
+        grid=(n_dst, fanout),
+        in_specs=[
+            pl.BlockSpec(
+                (1, d),
+                lambda v, f, idx_ref, cnt_ref: (
+                    jnp.maximum(idx_ref[v * fanout + f], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d),
+                               lambda v, f, idx_ref, cnt_ref: (v, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    kern = functools.partial(_agg_kernel, fanout=fanout, mean=mean)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dst, d), table.dtype),
+        interpret=interpret,
+    )(flat_idx, counts, table)

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+data-parallel only and rides the inter-pod DCN link — the sharding rules
+keep every latency-sensitive collective (TP) on intra-pod ICI.
+
+Defined as functions (never module-level) so importing this module never
+touches jax device state; ``dryrun.py`` sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import to fabricate the devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_devices: int | None = None):
+    """Small mesh over whatever devices exist (tests on 1-8 host devices)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

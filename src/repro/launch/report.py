@@ -1,0 +1,63 @@
+"""Generate EXPERIMENTS.md tables from results/*.json artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def dryrun_table(path: str) -> str:
+    if not os.path.exists(path):
+        return f"_missing: {path}_\n"
+    rows = json.load(open(path))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | status | lower s | compile s | args GiB/dev | "
+           "temp GiB/dev | HLO flops | collective B |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        st = r.get("status", "?")
+        if st == "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | ok | {r['lower_s']} | "
+                f"{r['compile_s']} | {r['memory']['args_GiB_per_dev']} | "
+                f"{r['memory']['temp_GiB_per_dev']} | "
+                f"{r['cost']['flops']:.3e} | "
+                f"{r['collectives']['total_bytes']:.3e} |")
+        elif st == "FAIL":
+            out.append(f"| {r['arch']} | {r['shape']} | **FAIL** "
+                       f"{r.get('error','')[:60]} | | | | | | |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | "
+                       f"{st.split(chr(10))[0][:70]} | | | | | | |")
+    return "\n".join(out) + "\n"
+
+
+def roofline_table(path: str) -> str:
+    if not os.path.exists(path):
+        return f"_missing: {path}_\n"
+    rows = json.load(open(path))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | bound MFU |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        st = r.get("status", "?")
+        if st == "ok":
+            t = r["terms_s"]
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+                f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+                f"{r['dominant'].replace('_s','')} | "
+                f"{r['useful_ratio']} | {r['bound_mfu']} |")
+        elif st == "FAIL":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | skip (see DESIGN §4)"
+                       f" | | | | | |")
+    return "\n".join(out) + "\n"
+
+
+if __name__ == "__main__":
+    import sys
+    kind = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
+    path = sys.argv[2]
+    print(dryrun_table(path) if kind == "dryrun" else roofline_table(path))

@@ -1,0 +1,272 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Method (DESIGN.md §8).  ``cost_analysis()`` counts a ``scan``/``while``
+body ONCE (verified empirically), so depth-scanned lowering undercounts.
+Every cell is therefore lowered twice in *loop-free* form:
+
+  * layer stack **unrolled** at depths L1 = head+tail+2·unit and
+    L2 = head+tail+4·unit (repeat-unit reps 2 and 4),
+  * all inner chunk loops removed by config overrides — attention
+    ``full``, one CE chunk, one Mamba/mLSTM time chunk, one MoE dispatch
+    group, a single grad-accumulation microbatch over the full global
+    batch.  These transforms are flop-preserving (chunking never changes
+    the math); buffers get huge but nothing is allocated (compile only).
+
+HLO cost is exactly affine in the rep count: cost(reps) = a + b·reps.
+We solve (a, b) from (L1, L2) and report cost(full reps).  The only
+remaining loop is sLSTM's true time recurrence — corrected by a separate
+mini-unroll (S=8 vs 16) slope, scaled to the full sequence.
+
+Terms per (arch × shape), single-pod mesh (256 chips), TPU v5e:
+  compute_s    = flops_per_chip / 197e12
+  memory_s     = hbm_bytes_per_chip / 819e9
+  collective_s = collective_bytes_per_chip / 50e9   (ICI link)
+``cost_analysis()`` of the post-SPMD module is per-chip; collective
+operand sizes parsed from the compiled HLO are per-chip shard sizes.
+
+Bound MFU = MODEL_FLOPS / (chips · peak · max(terms)) — the score §Perf
+hillclimbs.
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config
+from ..configs.base import ModelConfig
+from .dryrun import collective_bytes, input_specs, lower_cell, should_skip
+from .mesh import make_production_mesh
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+CHIPS = 256
+
+
+def _loopfree_overrides(cfg: ModelConfig) -> dict:
+    big = 1 << 30
+    # NOTE: MoE dispatch keeps the REAL group size — one-hot dispatch
+    # flops scale linearly in group size, so a giant merged group is NOT
+    # flop-preserving (verified: 70x inflation).  The group loop unrolls
+    # via unroll_inner; MoE cells additionally extrapolate over a reduced
+    # batch (see roofline_cell) to bound the unrolled group count.
+    return {
+        "ce_chunk": big,
+        "attn_chunk": big,
+        "ssm": dataclasses.replace(cfg.ssm, chunk=big),
+        "scan_layers": False,
+    }
+
+
+def _lower_costs(arch: str, shape_name: str, mesh, n_layers: int,
+                 enc_override: int | None = None,
+                 extra_overrides: dict | None = None,
+                 fsdp_threshold: int | None = None,
+                 batch_override: int | None = None) -> dict:
+    """Loop-free lowering at a given depth; returns flops/bytes/coll."""
+    cfg = get_config(arch)
+    overrides = _loopfree_overrides(cfg)
+    if extra_overrides:
+        overrides.update(extra_overrides)
+
+    rec = lower_cell(
+        arch, shape_name, mesh,
+        unroll_inner=False,   # remaining loops (MoE groups, sLSTM time)
+        n_layers_override=n_layers,   # are scan-once + corrected
+        scan_layers=False,
+        n_micro=1,
+        cfg_overrides=overrides,
+        enc_layers_override=enc_override,
+        attn_impl="full",
+        fsdp_threshold=fsdp_threshold,
+        batch_override=batch_override,
+    )
+    return {"flops": rec["cost"]["flops"], "bytes": rec["cost"]["bytes"],
+            "coll": rec["collectives"]["total_bytes"],
+            "coll_by_op": rec["collectives"]["bytes"],
+            "memory": rec["memory"]}
+
+
+def _slstm_correction(cfg: ModelConfig, shape, kind: str) -> dict:
+    """Per-step recurrent cost of sLSTM layers × (S-1) (see module doc)."""
+    n_slstm = sum(1 for s in cfg.layers if s.mixer == "slstm")
+    if n_slstm == 0 or kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0}
+    from ..models.xlstm import slstm_apply, slstm_init
+    B = shape.global_batch
+    key = jax.random.PRNGKey(0)
+    sc = dataclasses.replace(cfg)
+    p = jax.eval_shape(lambda: slstm_init(key, sc))
+
+    def run(S):
+        x = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        if kind == "train":
+            fn = jax.grad(lambda pp, xx: slstm_apply(pp, xx, sc).sum()
+                          .astype(jnp.float32))
+            lowered = jax.jit(fn).lower(p, x)
+        else:
+            lowered = jax.jit(lambda pp, xx: slstm_apply(pp, xx, sc)).lower(p, x)
+        c = lowered.compile().cost_analysis()
+        return float(c.get("flops", 0)), float(c.get("bytes accessed", 0))
+
+    f8, b8 = run(8)
+    f16, b16 = run(16)
+    per_step_f = (f16 - f8) / 8.0
+    per_step_b = (b16 - b8) / 8.0
+    extra_steps = shape.seq_len - 1  # scan body was counted once
+    return {"flops": n_slstm * per_step_f * extra_steps / CHIPS * 1.0,
+            "bytes": n_slstm * per_step_b * extra_steps / CHIPS * 1.0}
+
+
+def _moe_correction(cfg: ModelConfig, shape, kind: str) -> dict:
+    """(n_groups - 1) × per-group dispatch/expert cost per MoE layer.
+
+    The MoE group loop stays a ``lax.scan`` in the roofline lowering
+    (unrolling 256 groups would explode the HLO; merging groups is not
+    flop-preserving), so the body is counted once — this adds the
+    remaining groups from a standalone lowering of one dispatch group.
+    """
+    n_moe = sum(1 for s in cfg.layers if s.ffn == "moe")
+    if n_moe == 0 or kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0}
+    from ..models.moe import _dispatch_one_group, moe_init
+    tokens_total = shape.global_batch * shape.seq_len
+    n_groups = max(1, tokens_total // cfg.moe.group_tokens)
+    if n_groups <= 1:
+        return {"flops": 0.0, "bytes": 0.0}
+    p = jax.eval_shape(lambda: moe_init(jax.random.PRNGKey(0), cfg))
+    xg = jax.ShapeDtypeStruct((cfg.moe.group_tokens, cfg.d_model),
+                              jnp.bfloat16)
+    if kind == "train":
+        fn = jax.grad(lambda pp, xx: _dispatch_one_group(pp, xx, cfg)[0]
+                      .astype(jnp.float32).sum(), argnums=(0,))
+    else:
+        fn = lambda pp, xx: _dispatch_one_group(pp, xx, cfg)[0]  # noqa: E731
+    c = jax.jit(fn).lower(p, xg).compile().cost_analysis()
+    per_group_f = float(c.get("flops", 0))
+    per_group_b = float(c.get("bytes accessed", 0))
+    return {"flops": n_moe * (n_groups - 1) * per_group_f / CHIPS,
+            "bytes": n_moe * (n_groups - 1) * per_group_b / CHIPS}
+
+
+def roofline_cell(arch: str, shape_name: str, mesh,
+                  extra_overrides: dict | None = None,
+                  fsdp_threshold: int | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    o, u, k, t = cfg.stack_plan()
+    r1, r2 = (1, 2) if k < 4 else (2, 4)
+    L1, L2 = o + t + r1 * u, o + t + r2 * u
+    enc1 = enc2 = None
+    if cfg.n_enc_layers:
+        enc1, enc2 = r1, r2   # scale encoder depth with the same reps
+
+    c1 = _lower_costs(arch, shape_name, mesh, L1, enc1, extra_overrides,
+                      fsdp_threshold)
+    c2 = _lower_costs(arch, shape_name, mesh, L2, enc2, extra_overrides,
+                      fsdp_threshold)
+
+    def extrap(key):
+        slope = (c2[key] - c1[key]) / (r2 - r1)
+        intercept = c1[key] - slope * r1
+        return intercept + slope * k
+
+    flops = extrap("flops")
+    bytes_ = extrap("bytes")
+    coll = extrap("coll")
+    # all-to-all bytes come only from the MoE dispatch, whose group scan
+    # body is counted once -> scale by the group count
+    n_groups = 1
+    if any(s.ffn == "moe" for s in cfg.layers) and shape.kind != "decode":
+        tokens_total = shape.global_batch * shape.seq_len
+        n_groups = max(1, tokens_total // cfg.moe.group_tokens)
+        a2a_1 = c1["coll_by_op"].get("all-to-all", 0)
+        a2a_slope = (c2["coll_by_op"].get("all-to-all", 0) - a2a_1) / (r2 - r1)
+        a2a_full = (a2a_1 - a2a_slope * r1) + a2a_slope * k
+        coll += a2a_full * (n_groups - 1)
+    corr = _slstm_correction(cfg, shape, shape.kind)
+    corr_moe = _moe_correction(cfg, shape, shape.kind)
+    flops += corr["flops"] + corr_moe["flops"]
+    bytes_ += corr["bytes"] + corr_moe["bytes"]
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_ / HBM_BW
+    coll_s = coll / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    n_active = cfg.active_param_count()
+    model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+    hlo_flops_global = flops * CHIPS
+    step_lb = max(terms.values())
+    bound_mfu = model_flops / (CHIPS * PEAK_FLOPS * step_lb) if step_lb else 0
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "L_extrapolation": {"L1": L1, "L2": L2, "reps": [r1, r2],
+                            "full_reps": k},
+        "per_chip": {"flops": flops, "hbm_bytes": bytes_,
+                     "collective_bytes": coll},
+        "terms_s": {k2: round(v, 6) for k2, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": round(model_flops / hlo_flops_global, 4)
+        if hlo_flops_global else None,
+        "bound_mfu": round(bound_mfu, 4),
+        "collectives_by_op": c2["coll_by_op"],
+        "memory_at_L2": c2["memory"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/roofline_16x16.json")
+    args = ap.parse_args()
+    from ..configs import list_configs
+    mesh = make_production_mesh()
+    archs = [args.arch] if args.arch else list_configs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"]) for r in results}
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    for arch in archs:
+        for shape_name in shapes:
+            if (arch, shape_name) in done and not args.arch:
+                continue
+            skip = should_skip(arch, shape_name)
+            if skip:
+                rec = {"arch": arch, "shape": shape_name, "status": skip}
+            else:
+                print(f"[roofline] {arch} x {shape_name} ...", flush=True)
+                try:
+                    rec = roofline_cell(arch, shape_name, mesh)
+                    print(f"  {rec['terms_s']} dom={rec['dominant']} "
+                          f"bound_mfu={rec['bound_mfu']}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    import traceback
+                    rec = {"arch": arch, "shape": shape_name,
+                           "status": "FAIL",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-1500:]}
+                    print(f"  FAIL {e}", flush=True)
+            results = [r for r in results
+                       if not (r["arch"] == arch and r["shape"] == shape_name)]
+            results.append(rec)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

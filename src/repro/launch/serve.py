@@ -1,0 +1,90 @@
+"""LM serving driver: batched decode with paged KV admission.
+
+Smoke-scale demo of the serving path: admits a queue of requests through
+the AGNES-style paged KV manager, decodes them as one hyperbatch per
+step, retires finished requests and back-fills from the queue
+(continuous batching).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, smoke_reduce
+from ..models import build_model
+from ..train.loop import make_serve_step
+from ..train.paged_kv import PagedKVConfig, PagedKVManager
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_reduce(cfg)
+    if cfg.n_enc_layers:
+        print("[serve] enc-dec serving demo uses zero encoder memory stub")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    B = args.batch
+    caches = model.init_cache(B, args.max_len)
+    kv = PagedKVManager(PagedKVConfig(
+        page_tokens=16, n_pages=B * args.max_len // 16 + 8,
+        max_requests=B))
+
+    rng = np.random.default_rng(0)
+    pending = [(rid, int(rng.integers(4, 12)))
+               for rid in range(args.requests)]
+    done, generated = [], {}
+    tokens = jnp.zeros((B,), jnp.int32)
+    t0 = time.time()
+    pos = 0
+    slot_of = {}
+    while pending or kv.tables:
+        # continuous batching: back-fill free slots
+        while pending and len(kv.tables) < B:
+            rid, plen = pending.pop(0)
+            if not kv.admit(rid, plen):
+                pending.insert(0, (rid, plen))
+                break
+            slot_of[rid] = len(slot_of) % B
+            generated[rid] = []
+        tokens_next, logits, caches = serve_step(
+            params, caches, tokens, jnp.asarray(pos, jnp.int32))
+        pos += 1
+        tokens = tokens_next
+        batch = kv.decode_batch()
+        for rid in list(kv.tables):
+            kv.extend(rid, 1)
+            generated[rid].append(int(tokens[slot_of[rid] % B]))
+            if len(generated[rid]) >= args.gen_tokens or pos >= args.max_len:
+                kv.release(rid)
+                done.append(rid)
+        if pos >= args.max_len:
+            break
+    dt = time.time() - t0
+    n_tok = sum(len(g) for g in generated.values())
+    print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/max(dt,1e-9):.1f} tok/s); "
+          f"kv utilization peak={kv.utilization:.2f} "
+          f"fragmentation={kv.fragmentation():.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

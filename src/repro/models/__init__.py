@@ -1,0 +1,3 @@
+from .lm import CausalLM, EncDecLM, build_model, chunked_cross_entropy
+
+__all__ = ["CausalLM", "EncDecLM", "build_model", "chunked_cross_entropy"]

@@ -1,0 +1,283 @@
+"""Attention: GQA + RoPE/M-RoPE + sliding window; chunked online-softmax
+for prefill/train (memory-bounded at 32k), cache-based decode.
+
+Three executable paths with identical semantics:
+* ``full``    — materialized S×S (smoke tests / roofline-unrolled lowering)
+* ``chunked`` — pure-jnp flash pattern (q-chunk outer, kv-chunk online
+  softmax inner) used for real training shapes
+* Pallas ``repro.kernels.flash_attention`` — the TPU hot path.
+
+Decode attends over a (optionally ring-buffered, for SWA) KV cache; the
+``long_500k`` shape shards the cache on the sequence axis — the softmax
+over the sharded axis is expressed with log-sum-exp-safe ops that GSPMD
+partitions into (all-reduce max, all-reduce sum), flash-decoding style.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LayerSpec, ModelConfig
+from .common import apply_mrope, apply_rope, dense_init, softcap
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": dense_init(k1, (d, cfg.n_heads * dh), dtype=dt),
+        "wk": dense_init(k2, (d, cfg.n_kv_heads * dh), dtype=dt),
+        "wv": dense_init(k3, (d, cfg.n_kv_heads * dh), dtype=dt),
+        "wo": dense_init(k4, (cfg.n_heads * dh, d), dtype=dt),
+    }
+
+
+def cross_attn_init(key, cfg: ModelConfig) -> dict:
+    return attn_init(key, cfg)
+
+
+# ------------------------------------------------------------- core math
+def _scores_mask(q_pos, k_pos, causal: bool, window: int):
+    m = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+    if causal:
+        m &= k_pos <= q_pos
+    if window > 0:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def full_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                   scale: float, logit_cap: float = 0.0) -> jnp.ndarray:
+    """q: (B, Hq, Sq, Dh), k/v: (B, Hkv, Sk, Dh)."""
+    B, Hq, Sq, Dh = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, Sq, Dh)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qf, k.astype(jnp.float32)) * scale
+    s = softcap(s, logit_cap)
+    mask = _scores_mask(q_pos[:, None], k_pos[None, :], causal, window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, Dh).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                      scale: float, q_chunk: int, kv_chunk: int,
+                      logit_cap: float = 0.0,
+                      unroll: bool = False) -> jnp.ndarray:
+    """Online-softmax attention; memory O(q_chunk * kv_chunk) per head."""
+    B, Hq, S, Dh = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    q_chunk = min(q_chunk, S)
+    while S % q_chunk:          # chunks must tile the sequence exactly
+        q_chunk //= 2
+    Sk = k.shape[2]
+    kv_chunk = min(kv_chunk, Sk)
+    while Sk % kv_chunk:
+        kv_chunk //= 2
+    nq = S // q_chunk
+    nk = Sk // kv_chunk
+
+    qg = q.reshape(B, Hkv, g, S, Dh)   # cast to f32 per chunk, not upfront
+
+    def one_q_chunk(qi):
+        qs = qi * q_chunk
+        qb = jax.lax.dynamic_slice_in_dim(qg, qs, q_chunk, axis=3)
+        qb = qb.astype(jnp.float32)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, qs, q_chunk, axis=0)
+
+        def kv_step(carry, ki):
+            m_prev, l_prev, acc = carry
+            ks = ki * kv_chunk
+            kb = jax.lax.dynamic_slice_in_dim(k, ks, kv_chunk, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v, ks, kv_chunk, axis=2)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, ks, kv_chunk, axis=0)
+            s = jnp.einsum("bhgsd,bhtd->bhgst", qb,
+                           kb.astype(jnp.float32)) * scale
+            s = softcap(s, logit_cap)
+            mask = _scores_mask(qp[:, None], kp[None, :], causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            pv = jnp.einsum("bhgst,bhtd->bhgsd", p, vb.astype(jnp.float32))
+            acc = acc * alpha[..., 0][..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, Hkv, g, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, q_chunk, Dh), jnp.float32)
+        if unroll:
+            carry = (m0, l0, a0)
+            for ki in range(nk):
+                carry, _ = kv_step(carry, ki)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+        return (acc / jnp.maximum(l[..., 0][..., None], 1e-30))
+
+    if unroll:
+        blocks = [one_q_chunk(qi) for qi in range(nq)]
+        out = jnp.concatenate(blocks, axis=3)
+    else:
+        # remat per q-chunk: backward recomputes the kv online-softmax scan
+        # instead of saving per-step probability tiles (flash backward).
+        out = jax.lax.map(jax.checkpoint(one_q_chunk), jnp.arange(nq))
+        out = jnp.moveaxis(out, 0, 3).reshape(B, Hkv, g, nq * q_chunk, Dh)
+    out = out[:, :, :, :S]
+    return out.reshape(B, Hq, S, Dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, k_pos, q_pos, *, window: int,
+                     scale: float, logit_cap: float = 0.0) -> jnp.ndarray:
+    """One-token decode. q: (B, Hq, Dh); caches: (B, Hkv, Sc, Dh).
+
+    ``k_pos``: (Sc,) absolute positions stored in each cache slot (ring
+    buffers store out-of-order positions); invalid slots hold -1.
+    Softmax over the (possibly seq-sharded) cache axis is the flash-
+    decoding LSE pattern: max / sum reduce over that axis partition.
+    """
+    B, Hq, Dh = q.shape
+    Hkv = k_cache.shape[1]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, Dh)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qf, k_cache.astype(jnp.float32)) * scale
+    s = softcap(s, logit_cap)
+    valid = (k_pos >= 0) & (k_pos <= q_pos)
+    if window > 0:
+        valid &= k_pos > q_pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgt,bhtd->bhgd", p, v_cache.astype(jnp.float32))
+    o = o / jnp.maximum(l, 1e-30)
+    return o.reshape(B, Hq, Dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------- module
+def attention_apply(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                    cfg: ModelConfig, spec: LayerSpec, *,
+                    impl: str = "chunked", unroll: bool = False,
+                    kv_override: jnp.ndarray | None = None,
+                    bidirectional: bool = False) -> jnp.ndarray:
+    """Train/prefill path. x: (B, S, D); positions (B, S) or (3, B, S).
+
+    ``kv_override`` switches to cross-attention (no RoPE, non-causal);
+    ``bidirectional`` drops causality for encoder self-attention.
+    """
+    B, S, D = x.shape
+    dh = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, dh)
+    kv_src = x if kv_override is None else kv_override
+    Skv = kv_src.shape[1]
+    k = (kv_src @ p["wk"]).reshape(B, Skv, cfg.n_kv_heads, dh)
+    v = (kv_src @ p["wv"]).reshape(B, Skv, cfg.n_kv_heads, dh)
+    cross = kv_override is not None
+    if not cross:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    pos_q = positions[0][0] if cfg.mrope else positions[0]
+    q = jnp.swapaxes(q, 1, 2)   # (B, H, S, dh)
+    k = jnp.swapaxes(k, 1, 2)
+    v = jnp.swapaxes(v, 1, 2)
+    scale = dh ** -0.5
+    causal = not (cross or bidirectional)
+    window = spec.window if not cross else 0
+    pos_k = pos_q if not cross else jnp.arange(Skv)
+    if impl == "full" or S <= 256:
+        o = full_attention(q, k, v, pos_q, pos_k, causal=causal,
+                           window=window, scale=scale,
+                           logit_cap=cfg.attn_logit_softcap)
+    else:
+        o = chunked_attention(q, k, v, pos_q, pos_k, causal=causal,
+                              window=window, scale=scale,
+                              q_chunk=min(cfg.attn_chunk, 512),
+                              kv_chunk=cfg.attn_chunk,
+                              logit_cap=cfg.attn_logit_softcap,
+                              unroll=unroll)
+    o = jnp.swapaxes(o, 1, 2).reshape(B, S, cfg.n_heads * dh)
+    return o @ p["wo"]
+
+
+# ----------------------------------------------------------------- cache
+@dataclasses.dataclass
+class AttnCache:
+    k: jnp.ndarray       # (B, Hkv, Sc, Dh)
+    v: jnp.ndarray
+    slot_pos: jnp.ndarray  # (Sc,) absolute position in each slot, -1 empty
+
+
+jax.tree_util.register_dataclass(AttnCache,
+                                 data_fields=["k", "v", "slot_pos"],
+                                 meta_fields=[])
+
+
+def attn_cache_init(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                    max_len: int, dtype) -> AttnCache:
+    sc = min(spec.window, max_len) if spec.window > 0 else max_len
+    return AttnCache(
+        k=jnp.zeros((batch, cfg.n_kv_heads, sc, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, cfg.n_kv_heads, sc, cfg.head_dim), dtype),
+        slot_pos=jnp.full((sc,), -1, jnp.int32))
+
+
+def attention_decode(p: dict, x: jnp.ndarray, pos: jnp.ndarray,
+                     cache: AttnCache, cfg: ModelConfig,
+                     spec: LayerSpec) -> tuple[jnp.ndarray, AttnCache]:
+    """One-token decode. x: (B, D); pos: scalar int32 absolute position."""
+    B, D = x.shape
+    dh = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, dh)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, dh)
+    pos_b = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    if cfg.mrope:
+        pos3 = jnp.stack([pos_b, pos_b, pos_b], axis=0)
+        q = apply_mrope(q, pos3, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+        k = apply_rope(k, pos_b, cfg.rope_theta)
+    sc = cache.k.shape[2]
+    slot = pos % sc   # ring slot (== pos while pos < sc for full caches)
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, jnp.swapaxes(k, 1, 2), slot, axis=2)
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, jnp.swapaxes(v, 1, 2), slot, axis=2)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.slot_pos, jnp.reshape(pos, (1,)).astype(jnp.int32), slot, axis=0)
+    o = decode_attention(q.reshape(B, cfg.n_heads, dh),
+                         new_k, new_v, slot_pos, pos,
+                         window=spec.window, scale=dh ** -0.5,
+                         logit_cap=cfg.attn_logit_softcap)
+    out = o.reshape(B, cfg.n_heads * dh) @ p["wo"]
+    return out, AttnCache(new_k, new_v, slot_pos)
+
+
+def cross_attention_decode(p: dict, x: jnp.ndarray, memory_kv,
+                           cfg: ModelConfig) -> jnp.ndarray:
+    """Decoder cross-attention over precomputed encoder memory (k, v)."""
+    B, D = x.shape
+    dh = cfg.head_dim
+    k, v = memory_kv
+    q = (x @ p["wq"]).reshape(B, cfg.n_heads, dh)
+    pos = jnp.asarray(k.shape[2], jnp.int32)
+    slot_pos = jnp.arange(k.shape[2], dtype=jnp.int32)
+    o = decode_attention(q, k, v, slot_pos, pos, window=0, scale=dh ** -0.5)
+    return o.reshape(B, cfg.n_heads * dh) @ p["wo"]

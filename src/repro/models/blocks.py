@@ -1,0 +1,129 @@
+"""Layer dispatch: (mixer × ffn) per LayerSpec, with decode variants.
+
+A decoder layer is pre-norm residual:
+    x = x + Mixer(RMSNorm(x))
+    x = x + FFN(RMSNorm(x))          (skipped when ffn == "none")
+Mixers: attn / swa / mamba / mlstm / slstm.  FFNs: mlp (gated SiLU) / moe.
+One implementation covers all 10 assigned families via the per-layer spec
+list each config generates.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LayerSpec, ModelConfig
+from .attention import (AttnCache, attention_apply, attention_decode,
+                        attn_cache_init, attn_init)
+from .common import constrain_batch, dense_init, rms_norm
+from .moe import moe_apply, moe_decode, moe_init
+from .ssm import MambaCache, mamba_apply, mamba_cache_init, mamba_decode, mamba_init
+from .xlstm import (MLSTMCache, SLSTMCache, mlstm_apply, mlstm_cache_init,
+                    mlstm_decode, mlstm_init, slstm_apply, slstm_cache_init,
+                    slstm_decode, slstm_init)
+
+
+# ------------------------------------------------------------------- MLP
+def mlp_init(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, (d, f), dtype=dt),
+            "w_up": dense_init(k2, (d, f), dtype=dt),
+            "w_down": dense_init(k3, (f, d), dtype=dt)}
+
+
+def mlp_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    return (h * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ----------------------------------------------------------------- layer
+def layer_init(key, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    km, kf, kn = jax.random.split(key, 3)
+    p: dict[str, Any] = {"norm_mixer": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if spec.mixer in ("attn", "swa"):
+        p["attn"] = attn_init(km, cfg)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mamba_init(km, cfg)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = mlstm_init(km, cfg)
+    elif spec.mixer == "slstm":
+        p["slstm"] = slstm_init(km, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn != "none":
+        p["norm_ffn"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if spec.ffn == "mlp":
+            p["mlp"] = mlp_init(kf, cfg)
+        elif spec.ffn == "moe":
+            p["moe"] = moe_init(kf, cfg)
+        else:
+            raise ValueError(spec.ffn)
+    return p
+
+
+def layer_apply(p: dict, x: jnp.ndarray, positions, cfg: ModelConfig,
+                spec: LayerSpec, *, impl: str = "chunked",
+                unroll: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = constrain_batch(x, seq_shard=cfg.sequence_parallel, dp_model=cfg.dp_over_model)
+    h = rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+    if spec.mixer in ("attn", "swa"):
+        h = attention_apply(p["attn"], h, positions, cfg, spec,
+                            impl=impl, unroll=unroll)
+    elif spec.mixer == "mamba":
+        h = mamba_apply(p["mamba"], h, cfg, unroll=unroll)
+    elif spec.mixer == "mlstm":
+        h = mlstm_apply(p["mlstm"], h, cfg, unroll=unroll)
+    elif spec.mixer == "slstm":
+        h = slstm_apply(p["slstm"], h, cfg, unroll=unroll)
+    x = constrain_batch(x + h, seq_shard=cfg.sequence_parallel, dp_model=cfg.dp_over_model)
+    if spec.ffn != "none":
+        h = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        if spec.ffn == "mlp":
+            h = mlp_apply(p["mlp"], h)
+        else:
+            h, aux = moe_apply(p["moe"], h, cfg, unroll=unroll)
+        x = constrain_batch(x + h, seq_shard=cfg.sequence_parallel, dp_model=cfg.dp_over_model)
+    return x, aux
+
+
+# ----------------------------------------------------------------- decode
+def layer_cache_init(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int, dtype) -> Any:
+    if spec.mixer in ("attn", "swa"):
+        return attn_cache_init(cfg, spec, batch, max_len, dtype)
+    if spec.mixer == "mamba":
+        return mamba_cache_init(cfg, batch, dtype)
+    if spec.mixer == "mlstm":
+        return mlstm_cache_init(cfg, batch)
+    if spec.mixer == "slstm":
+        return slstm_cache_init(cfg, batch)
+    raise ValueError(spec.mixer)
+
+
+def layer_decode(p: dict, x: jnp.ndarray, pos, cache, cfg: ModelConfig,
+                 spec: LayerSpec) -> tuple[jnp.ndarray, Any]:
+    """One-token decode. x: (B, D)."""
+    h = rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+    if spec.mixer in ("attn", "swa"):
+        h, cache = attention_decode(p["attn"], h, pos, cache, cfg, spec)
+    elif spec.mixer == "mamba":
+        h, cache = mamba_decode(p["mamba"], h, cache, cfg)
+    elif spec.mixer == "mlstm":
+        h, cache = mlstm_decode(p["mlstm"], h, cache, cfg)
+    elif spec.mixer == "slstm":
+        h, cache = slstm_decode(p["slstm"], h, cache, cfg)
+    x = x + h
+    if spec.ffn != "none":
+        h = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        if spec.ffn == "mlp":
+            h = mlp_apply(p["mlp"], h)
+        else:
+            h = moe_decode(p["moe"], h, cfg)
+        x = x + h
+    return x, cache

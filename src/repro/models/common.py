@@ -1,0 +1,125 @@
+"""Shared LM building blocks: norms, RoPE/M-RoPE, init helpers,
+activation sharding constraints."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def constrain_batch(x: jnp.ndarray, seq_shard: bool = False,
+                    dp_model: bool = False) -> jnp.ndarray:
+    """Pin layer-boundary activations: batch sharded over (pod, data);
+    with ``seq_shard`` also shard the sequence dim over ``model``
+    (Megatron sequence parallelism — GSPMD inserts the seq all-gather
+    before each mixer and the reduce-scatter after, cutting layer-
+    boundary residual memory by the TP width).
+
+    GSPMD propagation through scan bodies with mixed producers (Mamba
+    conv / associative scan / MoE dispatch) can silently drop the batch
+    sharding — this constraint at every layer boundary keeps activations
+    data-parallel.  No-op outside a mesh context (requires
+    ``jax.sharding.set_mesh``) or when dims aren't divisible.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if dp_model and "model" in mesh.axis_names:
+        axes = axes + ("model",)
+    if not axes:
+        return x
+    dsize = 1
+    for a in axes:
+        dsize *= mesh.shape[a]
+    if x.ndim == 0 or x.shape[0] % dsize:
+        return x
+    spec = [axes if len(axes) > 1 else axes[0]] + [None] * (x.ndim - 1)
+    if seq_shard and not dp_model and x.ndim >= 3 \
+            and "model" in mesh.axis_names \
+            and x.shape[1] % mesh.shape["model"] == 0:
+        spec[1] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.bfloat16):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                theta: float = 10_000.0,
+                sections: tuple[int, int, int] = (1, 1, 2)) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: 3 position streams (t, h, w).
+
+    x: (B, S, H, Dh); positions3: (3, B, S).  The rotary dimension is
+    split into ``sections`` (normalized ratios over Dh/2); each section
+    rotates by its own position stream.  Text tokens carry identical
+    t/h/w positions, which reduces exactly to standard RoPE.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = rope_freqs(dh, theta)                       # (half,)
+    total = sum(sections)
+    bounds = []
+    acc = 0
+    for s in sections:
+        acc += s
+        bounds.append(half * acc // total)
+    # section id per freq index
+    idx = jnp.arange(half)
+    sec = jnp.zeros(half, jnp.int32)
+    sec = jnp.where(idx >= bounds[0], 1, sec)
+    sec = jnp.where(idx >= bounds[1], 2, sec)
+    pos = positions3.astype(jnp.float32)                # (3, B, S)
+    pos_sel = jnp.take(pos, sec, axis=0)                # (half, B, S) -> via take on axis0?
+    # jnp.take maps sec (half,) over axis 0: result (half, B, S)
+    ang = jnp.moveaxis(pos_sel, 0, -1) * freqs          # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def make_mrope_positions(batch: int, seq: int) -> jnp.ndarray:
+    """Stub M-RoPE positions for precomputed-patch inputs: text-like ramp.
+
+    The vision frontend (stubbed per assignment) would supply true
+    (t, h, w) grids for image patches; text positions are (p, p, p).
+    """
+    p = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+    return jnp.stack([p, p, p], axis=0)

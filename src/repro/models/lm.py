@@ -1,0 +1,396 @@
+"""CausalLM / EncDecLM: embed → layer stack → norm → (chunked) CE loss,
+plus the one-token ``decode_step`` used by serving and the decode shapes.
+
+Layer-stack execution has two modes sharing one code path:
+
+* ``scan_layers=True``  — parameters of each repeat-unit position are
+  stacked ``(n_reps, ...)`` and the stack runs under ``lax.scan`` with
+  remat: small HLO, bounded activation memory (the real training config;
+  what the dry-run compiles).
+* ``scan_layers=False`` — unrolled Python loop (smoke tests, and the
+  roofline lowering where per-layer HLO cost must be visible; DESIGN.md
+  §8).
+
+The LM head is tied to the embedding; cross-entropy is computed in token
+chunks so the (tokens × vocab) logits never materialize (262k vocabs at
+4k×256 tokens would be 4.3 TB in f32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LayerSpec, ModelConfig
+from .attention import attention_apply, attn_init, cross_attention_decode
+from .blocks import layer_apply, layer_cache_init, layer_decode, layer_init, \
+    mlp_apply, mlp_init
+from .common import dense_init, make_mrope_positions, rms_norm
+
+
+# ------------------------------------------------------------------ model
+class CausalLM:
+    """Decoder-only LM over a per-layer spec list (all 10 families)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_head, p, self.n_reps, self.n_tail = cfg.stack_plan()
+        self.unit = cfg.layers[self.n_head:self.n_head + p]
+
+    # ------------------------------------------------------------ params
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        k_embed, k_head, k_layers, k_tail = jax.random.split(key, 4)
+        params: dict[str, Any] = {
+            "embed": dense_init(k_embed, (cfg.vocab, cfg.d_model),
+                                scale=cfg.d_model ** -0.5, dtype=dt),  # tied head: keeps logit std O(1)
+            "norm_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if self.n_head:
+            keys = jax.random.split(k_head, self.n_head)
+            params["head_layers"] = [
+                layer_init(keys[i], cfg, cfg.layers[i])
+                for i in range(self.n_head)]
+        if cfg.scan_layers and self.n_reps > 1:
+            keys = jax.random.split(k_layers, self.n_reps)
+            stacked = [
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[layer_init(jax.random.fold_in(keys[r], j),
+                                          cfg, spec)
+                               for r in range(self.n_reps)])
+                for j, spec in enumerate(self.unit)]
+            params["units"] = stacked
+        else:
+            keys = jax.random.split(k_layers, cfg.n_layers)
+            params["layers"] = [
+                layer_init(keys[i], cfg, cfg.layers[self.n_head + i])
+                for i in range(self.n_reps * len(self.unit))]
+        if self.n_tail:
+            keys = jax.random.split(k_tail, self.n_tail)
+            params["tail"] = [
+                layer_init(keys[i], cfg,
+                           cfg.layers[self.n_head
+                                      + self.n_reps * len(self.unit) + i])
+                for i in range(self.n_tail)]
+        return params
+
+    def param_specs(self) -> Any:
+        """Abstract params (no allocation) for dry-run lowering."""
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ----------------------------------------------------------- forward
+    def hidden_states(self, params: dict, tokens: jnp.ndarray,
+                      prefix_embeds: jnp.ndarray | None = None,
+                      *, unroll_inner: bool = False,
+                      attn_impl: str | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """tokens: (B, S_t) → (B, S, D) final hidden states + moe aux."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if prefix_embeds is not None:  # vlm/audio stub frontends
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        B, S, _ = x.shape
+        if cfg.mrope:
+            positions = make_mrope_positions(B, S)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                         (B, S))
+        impl = attn_impl or ("full" if S <= 512 else "chunked")
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def one_layer(p, x, spec):
+            def fn(p, x, positions):
+                return layer_apply(p, x, positions, cfg, spec,
+                                   impl=impl, unroll=unroll_inner)
+            fn = jax.checkpoint(fn) if cfg.remat else fn
+            return fn(p, x, positions)
+
+        def apply_unit(x, unit_params):
+            aux_u = jnp.zeros((), jnp.float32)
+            for j, spec in enumerate(self.unit):
+                x, aux = layer_apply(unit_params[j], x, positions, cfg, spec,
+                                     impl=impl, unroll=unroll_inner)
+                aux_u += aux
+            return x, aux_u
+
+        for i, p in enumerate(params.get("head_layers", [])):
+            x, aux = one_layer(p, x, cfg.layers[i])
+            aux_total += aux
+        if "units" in params:
+            def body(carry, unit_params):
+                x, aux_acc = carry
+                fn = jax.checkpoint(apply_unit) if cfg.remat else apply_unit
+                x, aux = fn(x, unit_params)
+                return (x, aux_acc + aux), None
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), params["units"])
+        else:
+            for i, p in enumerate(params.get("layers", [])):
+                x, aux = one_layer(p, x, cfg.layers[self.n_head + i])
+                aux_total += aux
+        for i, p in enumerate(params.get("tail", [])):
+            spec = cfg.layers[self.n_head + self.n_reps * len(self.unit) + i]
+            x, aux = one_layer(p, x, spec)
+            aux_total += aux
+        x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+        return x, aux_total
+
+    def loss(self, params: dict, batch: dict, *,
+             unroll_inner: bool = False,
+             attn_impl: str | None = None) -> jnp.ndarray:
+        """Next-token CE (chunked over tokens) + MoE aux."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h, aux = self.hidden_states(params, tokens,
+                                    batch.get("prefix_embeds"),
+                                    unroll_inner=unroll_inner,
+                                    attn_impl=attn_impl)
+        P = h.shape[1] - tokens.shape[1]  # prefix length (vlm/audio stubs)
+        h = h[:, P:]
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:]), jnp.zeros_like(tokens[:, :1])],
+            axis=1).astype(jnp.float32)
+        ce = chunked_cross_entropy(h, params["embed"], targets, mask,
+                                   chunk=cfg.ce_chunk,
+                                   unroll=unroll_inner)
+        return ce + 0.01 * aux
+
+    # ------------------------------------------------------------ decode
+    def init_cache(self, batch: int, max_len: int) -> list:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        return [layer_cache_init(cfg, spec, batch, max_len, dt)
+                for spec in cfg.layers]
+
+    def cache_specs(self, batch: int, max_len: int) -> list:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def decode_step(self, params: dict, caches: list, tokens: jnp.ndarray,
+                    pos: jnp.ndarray) -> tuple[jnp.ndarray, list]:
+        """One decode step. tokens: (B,) int32; pos: scalar position."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)       # (B, D)
+        new_caches = []
+
+        def get_layer_params(i):
+            if i < self.n_head:
+                return params["head_layers"][i]
+            j = i - self.n_head
+            core = self.n_reps * len(self.unit)
+            if j >= core:
+                return params["tail"][j - core]
+            if "units" in params:
+                r, u = divmod(j, len(self.unit))
+                return jax.tree.map(lambda t: t[r], params["units"][u])
+            return params["layers"][j]
+        for i, spec in enumerate(cfg.layers):
+            p = get_layer_params(i)
+            x, c = layer_decode(p, x, pos, caches[i], cfg, spec)
+            new_caches.append(c)
+        x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        return logits, new_caches
+
+
+def chunked_cross_entropy(h: jnp.ndarray, embed: jnp.ndarray,
+                          targets: jnp.ndarray, mask: jnp.ndarray,
+                          chunk: int = 1024,
+                          unroll: bool = False) -> jnp.ndarray:
+    """Token-chunked CE: logits (chunk, vocab) never exceed one chunk."""
+    B, S, D = h.shape
+    hf = h.reshape(B * S, D)
+    tf = targets.reshape(B * S)
+    mf = mask.reshape(B * S)
+    T = B * S
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk //= 2
+    n = T // chunk
+    # strided chunking keeps every chunk data-sharded (see moe_apply)
+    hc = jnp.swapaxes(hf.reshape(chunk, n, D), 0, 1)
+    tc = jnp.swapaxes(tf.reshape(chunk, n), 0, 1)
+    mc = jnp.swapaxes(mf.reshape(chunk, n), 0, 1)
+
+    def one(args):
+        hx, tx, mx = args
+        logits = (hx @ embed.T).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tx[:, None], axis=-1)[:, 0]
+        return jnp.sum((lse - gold) * mx)
+
+    if unroll:
+        tot = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            tot += one((hc[i], tc[i], mc[i]))
+    else:
+        def body(acc, args):
+            return acc + one(args), None
+        # remat per token chunk: (chunk, vocab) logits never persist
+        tot, _ = jax.lax.scan(jax.checkpoint(body),
+                              jnp.zeros((), jnp.float32), (hc, tc, mc))
+    return tot / jnp.maximum(mf.sum(), 1.0)
+
+
+# ------------------------------------------------------------- enc-dec LM
+class EncDecLM:
+    """Encoder-decoder (seamless-m4t): stubbed modality frontend feeds the
+    encoder precomputed frame embeddings; text decoder has cross-attention.
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _one_enc(self, key, spec):
+        return layer_init(key, self.cfg, spec)
+
+    def _one_dec(self, key, spec):
+        p = layer_init(key, self.cfg, spec)
+        p["xattn"] = attn_init(jax.random.fold_in(key, 7), self.cfg)
+        p["norm_xattn"] = jnp.zeros((self.cfg.d_model,), jnp.float32)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 4 + cfg.n_enc_layers + cfg.n_layers)
+        params = {
+            "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model),
+                                scale=cfg.d_model ** -0.5, dtype=dt),  # tied head: keeps logit std O(1)
+            "norm_enc": jnp.zeros((cfg.d_model,), jnp.float32),
+            "norm_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        spec = LayerSpec(mixer="attn", ffn="mlp")
+        enc = [self._one_enc(ks[2 + i], spec)
+               for i in range(cfg.n_enc_layers)]
+        dec = [self._one_dec(ks[2 + cfg.n_enc_layers + i], spec)
+               for i in range(cfg.n_layers)]
+        if cfg.scan_layers and cfg.n_enc_layers > 1:
+            params["enc_units"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                               *enc)
+            params["dec_units"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                               *dec)
+        else:
+            params["enc"] = enc
+            params["dec"] = dec
+        return params
+
+    def param_specs(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def _dec_layers(self, params) -> list:
+        if "dec" in params:
+            return params["dec"]
+        n = self.cfg.n_layers
+        return [jax.tree.map(lambda t: t[i], params["dec_units"])
+                for i in range(n)]
+
+    def encode(self, params, src_embeds: jnp.ndarray,
+               unroll_inner: bool = False) -> jnp.ndarray:
+        cfg = self.cfg
+        x = src_embeds.astype(jnp.dtype(cfg.dtype))
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        spec = LayerSpec(mixer="attn", ffn="mlp")
+
+        def enc_layer(x, p):
+            h = rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+            h = attention_apply(p["attn"], h, positions, cfg, spec,
+                                impl="full" if S <= 512 else "chunked",
+                                unroll=unroll_inner, bidirectional=True)
+            x = x + h
+            h = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+            return x + mlp_apply(p["mlp"], h)
+
+        if "enc_units" in params:
+            def body(x, p):
+                fn = jax.checkpoint(enc_layer) if cfg.remat else enc_layer
+                return fn(x, p), None
+            x, _ = jax.lax.scan(body, x, params["enc_units"])
+        else:
+            for p in params["enc"]:
+                x = enc_layer(x, p)
+        return rms_norm(x, params["norm_enc"], cfg.norm_eps)
+
+    def loss(self, params, batch, *, unroll_inner: bool = False,
+             attn_impl: str | None = None) -> jnp.ndarray:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        memory = self.encode(params, batch["src_embeds"], unroll_inner)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        spec = LayerSpec(mixer="attn", ffn="mlp")
+        impl = attn_impl or ("full" if S <= 512 else "chunked")
+
+        def dec_layer(x, p):
+            h = rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+            h = attention_apply(p["attn"], h, positions, cfg, spec,
+                                impl=impl, unroll=unroll_inner)
+            x = x + h
+            h = rms_norm(x, p["norm_xattn"], cfg.norm_eps)
+            h = attention_apply(p["xattn"], h, positions, cfg, spec,
+                                impl=impl, unroll=unroll_inner,
+                                kv_override=memory)
+            x = x + h
+            h = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+            return x + mlp_apply(p["mlp"], h)
+
+        if "dec_units" in params:
+            def body(x, p):
+                fn = jax.checkpoint(dec_layer) if cfg.remat else dec_layer
+                return fn(x, p), None
+            x, _ = jax.lax.scan(body, x, params["dec_units"])
+        else:
+            for p in params["dec"]:
+                x = dec_layer(x, p)
+        x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:]), jnp.zeros_like(tokens[:, :1])],
+            axis=1).astype(jnp.float32)
+        return chunked_cross_entropy(x, params["embed"], targets, mask,
+                                     chunk=cfg.ce_chunk, unroll=unroll_inner)
+
+    # ------------------------------------------------------------ decode
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        spec = LayerSpec(mixer="attn", ffn="mlp")
+        self_caches = [layer_cache_init(cfg, spec, batch, max_len, dt)
+                       for _ in range(cfg.n_layers)]
+        # precomputed encoder memory K/V per decoder layer
+        mem = [(jnp.zeros((batch, cfg.n_kv_heads, cfg.enc_seq, cfg.head_dim), dt),
+                jnp.zeros((batch, cfg.n_kv_heads, cfg.enc_seq, cfg.head_dim), dt))
+               for _ in range(cfg.n_layers)]
+        return {"self": self_caches, "memory": mem}
+
+    def decode_step(self, params, caches, tokens: jnp.ndarray,
+                    pos: jnp.ndarray):
+        cfg = self.cfg
+        spec = LayerSpec(mixer="attn", ffn="mlp")
+        x = jnp.take(params["embed"], tokens, axis=0)
+        new_self = []
+        for i, p in enumerate(self._dec_layers(params)):
+            h = rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+            from .attention import attention_decode
+            h, c = attention_decode(p["attn"], h, pos, caches["self"][i],
+                                    cfg, spec)
+            new_self.append(c)
+            x = x + h
+            h = rms_norm(x, p["norm_xattn"], cfg.norm_eps)
+            x = x + cross_attention_decode(p["xattn"], h,
+                                           caches["memory"][i], cfg)
+            h = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+            x = x + mlp_apply(p["mlp"], h)
+        x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        return logits, {"self": new_self, "memory": caches["memory"]}
+
+
+def build_model(cfg: ModelConfig):
+    return EncDecLM(cfg) if cfg.n_enc_layers > 0 else CausalLM(cfg)

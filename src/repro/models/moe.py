@@ -1,0 +1,155 @@
+"""Fine-grained MoE: top-k routing, shared experts, EP-shardable dispatch.
+
+This is where the paper's idea transfers deepest (DESIGN.md §4,
+"AGNES-for-MoE"): top-6-of-64 routing produces a power-law stream of
+small gathers against a large expert store — the same many-small-I/Os
+shape AGNES fixes with bucketing.  The dispatch below is the bucket
+matrix made dense: tokens are grouped (GShard groups = hyperbatch), each
+group builds a (token → expert, capacity-slot) one-hot ``Bck`` and every
+expert processes its whole bucket in one contraction.  Experts shard over
+the ``model`` axis (EP); GSPMD lowers the dispatch/combine einsums to
+all-to-alls on that axis.
+
+Capacity: C = ceil(tokens_per_group * top_k / n_experts * capacity_factor)
+(128-aligned).  Overflowing tokens are dropped (standard GShard behavior);
+the router uses f32 and adds the usual load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import dense_init
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, m.n_experts), dtype=jnp.float32),
+        # routed experts: stacked (E, ...)
+        "w_gate": dense_init(ks[1], (m.n_experts, d, m.d_expert), dtype=dt),
+        "w_up": dense_init(ks[2], (m.n_experts, d, m.d_expert), dtype=dt),
+        "w_down": dense_init(ks[3], (m.n_experts, m.d_expert, d), dtype=dt),
+    }
+    if m.n_shared:
+        p["s_gate"] = dense_init(ks[4], (d, m.n_shared * m.d_expert), dtype=dt)
+        p["s_up"] = dense_init(ks[5], (d, m.n_shared * m.d_expert), dtype=dt)
+        p["s_down"] = dense_init(ks[6], (m.n_shared * m.d_expert, d), dtype=dt)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(tokens_per_group * m.top_k / m.n_experts * m.capacity_factor)
+    return max(-(-c // 8) * 8, 8)
+
+
+def _dispatch_one_group(p, x, cfg: ModelConfig):
+    """x: (T, D) one dispatch group. Returns (T, D) output + aux loss."""
+    m = cfg.moe
+    T, D = x.shape
+    C = _capacity(T, cfg)
+    logits = (x.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # iterative top-k with capacity assignment (GShard generalized to k)
+    remaining = probs
+    combine = jnp.zeros((T, m.n_experts, C), jnp.float32)
+    fill = jnp.zeros((m.n_experts,), jnp.int32)
+    for _ in range(m.top_k):
+        gate = jnp.max(remaining, axis=-1)                   # (T,)
+        eid = jnp.argmax(remaining, axis=-1)                 # (T,)
+        onehot = jax.nn.one_hot(eid, m.n_experts, dtype=jnp.int32)
+        # position of each token within its expert queue
+        pos_in_e = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # (T, E)
+        slot = jnp.sum(pos_in_e, axis=-1) + fill[eid]        # (T,)
+        keep = slot < C
+        combine += (gate * keep)[:, None, None] \
+            * jax.nn.one_hot(eid, m.n_experts)[:, :, None] \
+            * jax.nn.one_hot(jnp.clip(slot, 0, C - 1), C)[:, None, :]
+        fill = fill + jnp.sum(onehot, axis=0)
+        remaining = remaining * (1.0 - jax.nn.one_hot(eid, m.n_experts))
+    # renormalize combine weights over the selected experts
+    denom = jnp.sum(combine, axis=(1, 2), keepdims=True)
+    combine = combine / jnp.maximum(denom, 1e-9)
+    dispatch = (combine > 0).astype(x.dtype)                 # (T, E, C)
+    xe = jnp.einsum("td,tec->ecd", x, dispatch)              # (E, C, D)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # (E, C, D)
+    y = jnp.einsum("ecd,tec->td", ye, combine.astype(x.dtype))
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    f = jnp.mean(jnp.sum(dispatch, axis=-1).astype(jnp.float32), axis=0)
+    pbar = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(f * pbar)
+    return y, aux
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+              unroll: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) → (B, S, D), aux-loss scalar.
+
+    Tokens are split into dispatch groups of ~``moe.group_tokens``
+    (bounding the (T, E, C) bucket tensors to a fixed size regardless of
+    batch·seq) and processed by a scanned/unrolled loop — the hyperbatch
+    loop shape.
+    """
+    B, S, D = x.shape
+    m = cfg.moe
+    tokens = x.reshape(B * S, D)
+    n_groups = max(1, min((B * S) // max(m.group_tokens, 1), B * S))
+    while (B * S) % n_groups:
+        n_groups -= 1
+    # STRIDED grouping: group i takes tokens {i, i+n, i+2n, ...} so every
+    # group spans all data shards (a contiguous reshape would land whole
+    # groups on single shards and serialize the scan).
+    groups = jnp.swapaxes(
+        tokens.reshape((B * S) // n_groups, n_groups, D), 0, 1)
+
+    if unroll:
+        outs, auxs = [], []
+        for gi in range(n_groups):
+            y, a = _dispatch_one_group(p, groups[gi], cfg)
+            outs.append(y)
+            auxs.append(a)
+        out = jnp.stack(outs)
+        aux = jnp.stack(auxs).mean()
+    else:
+        def body(_, g):
+            y, a = _dispatch_one_group(p, g, cfg)
+            return None, (y, a)
+        # remat per dispatch group: the (T, E, C) bucket tensors are
+        # recomputed in backward, never stored across groups
+        _, (out, aux) = jax.lax.scan(jax.checkpoint(body), None, groups)
+        aux = aux.mean()
+    # invert the strided grouping: (n_groups, G_len, D) -> (B*S, D)
+    y = jnp.swapaxes(out, 0, 1).reshape(B, S, D)
+    if m.n_shared:
+        h = jax.nn.silu((tokens @ p["s_gate"]).astype(jnp.float32)).astype(x.dtype)
+        u = tokens @ p["s_up"]
+        y = y + ((h * u) @ p["s_down"]).reshape(B, S, D)
+    return y, aux
+
+
+def moe_decode(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Single-token MoE (B, D) through the same EP dispatch einsums.
+
+    (A per-token gather of expert weights would materialize B·k full
+    expert matrices — 100+ GB for jamba — whereas the dispatch form keeps
+    experts in place and moves only (E, C, D) token buckets over the EP
+    axis.)  Decode uses a generous capacity factor since a B-token step
+    is far more skewed than a 4k-token training group.
+    """
+    import dataclasses as _dc
+    m = cfg.moe
+    decode_cfg = cfg if m.capacity_factor >= 4.0 else _dc.replace(
+        cfg, moe=_dc.replace(m, capacity_factor=4.0))
+    y, _ = _dispatch_one_group(p, x, decode_cfg)
+    if m.n_shared:
+        hs = jax.nn.silu((x @ p["s_gate"]).astype(jnp.float32)).astype(x.dtype)
+        y = y + (hs * (x @ p["s_up"])) @ p["s_down"]
+    return y

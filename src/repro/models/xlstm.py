@@ -1,0 +1,258 @@
+"""xLSTM mixers: mLSTM (matrix memory, chunk-parallel) + sLSTM (scalar
+memory, exponential gating, sequential).
+
+mLSTM is a gated linear-attention form: per head, memory C_t ∈ R^{dh×dh},
+C_t = f_t C_{t-1} + i_t v_t k_tᵀ, output h_t = C_t q_t / max(|n_tᵀq_t|, 1)
+with exponential input gates stabilized by a running max m_t.  We run it
+chunkwise (intra-chunk quadratic in chunk length, inter-chunk via the
+(C, n, m) carry) — same memory-bounding shape as the attention/Mamba
+chunking.  sLSTM keeps the recurrent R h_{t-1} term and is therefore a
+true sequential ``lax.scan`` over time (block-diagonal per head R).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import dense_init
+
+
+# ================================================================== mLSTM
+def mlstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, d), dtype=dt),
+        "wk": dense_init(ks[1], (d, d), dtype=dt),
+        "wv": dense_init(ks[2], (d, d), dtype=dt),
+        "w_if": dense_init(ks[3], (d, 2 * H), scale=0.01, dtype=jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "w_o_gate": dense_init(ks[4], (d, d), dtype=dt),
+        "w_out": dense_init(ks[5], (d, d), dtype=dt),
+    }
+
+
+def _mlstm_chunk(q, k, v, logi, logf, carry):
+    """One chunk, heads folded into batch.
+
+    q,k,v: (B, T, dh); logi/logf: (B, T); carry = (C, n, m) with the
+    convention that C/n are stored at scale exp(m) (stabilized
+    exponential gating per the xLSTM paper, eqs. 19-27).  q arrives
+    pre-scaled by dh^-0.5.
+    """
+    B, T, dh = q.shape
+    C0, n0, m0 = carry
+    F = jnp.cumsum(logf, axis=1)                      # (B, T) log-decay prefix
+    # intra-chunk log weight of source s for target t: F_t - F_s + logi_s
+    d_mat = F[:, :, None] - F[:, None, :] + logi[:, None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    d_mat = jnp.where(mask[None], d_mat, -jnp.inf)
+    inter_log = F + m0[:, None]                       # carry contribution
+    m_t = jnp.maximum(jnp.max(d_mat, axis=2), inter_log)  # (B, T) stabilizer
+    d_exp = jnp.exp(d_mat - m_t[:, :, None])          # (B, T, T)
+    w_inter = jnp.exp(inter_log - m_t)                # (B, T)
+    s = jnp.einsum("btd,bsd->bts", q, k)
+    num = jnp.einsum("bts,bsd->btd", s * d_exp, v) \
+        + jnp.einsum("btd,bde->bte", q * w_inter[:, :, None], C0)
+    # normalizer accumulates exactly like C with v -> k identity weights
+    n_full = jnp.einsum("bts,bsd->btd", d_exp, k) \
+        + w_inter[:, :, None] * n0[:, None, :]
+    qn = jnp.abs(jnp.einsum("btd,btd->bt", q, n_full))
+    h = num / jnp.maximum(qn, jnp.exp(-m_t))[:, :, None]
+    # chunk-final carry at scale m_T
+    m_T = m_t[:, -1]
+    decay_to_T = jnp.exp(F[:, -1:] - F + logi - m_T[:, None])   # (B, T)
+    C_new = jnp.exp(F[:, -1] + m0 - m_T)[:, None, None] * C0 \
+        + jnp.einsum("bt,btd,bte->bde", decay_to_T, k, v)
+    n_new = jnp.exp(F[:, -1] + m0 - m_T)[:, None] * n0 \
+        + jnp.einsum("bt,btd->bd", decay_to_T, k)
+    return h, (C_new, n_new, m_T)
+
+
+def mlstm_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                unroll: bool = False) -> jnp.ndarray:
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, H, dh)
+    v = (x @ p["wv"]).reshape(B, S, H, dh)
+    gates = x.astype(jnp.float32) @ p["w_if"] + p["b_if"]   # (B, S, 2H)
+    logi = jax.nn.log_sigmoid(gates[..., :H])   # stabilized input gate (log)
+    logf = jax.nn.log_sigmoid(gates[..., H:])
+    # fold heads into batch
+    fold = lambda t: jnp.moveaxis(t, 2, 1).reshape(B * H, S, dh)  # noqa: E731
+    qf = fold(q).astype(jnp.float32) * (dh ** -0.5)
+    kf = fold(k).astype(jnp.float32)
+    vf = fold(v).astype(jnp.float32)
+    li = jnp.moveaxis(logi, 2, 1).reshape(B * H, S)
+    lf = jnp.moveaxis(logf, 2, 1).reshape(B * H, S)
+
+    chunk = min(cfg.ssm.chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+    C0 = jnp.zeros((B * H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B * H, dh), jnp.float32)
+    m0 = jnp.full((B * H,), -1e30, jnp.float32)
+
+    def body(carry, i):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * chunk, chunk, 1)  # noqa: E731
+        h, carry = _mlstm_chunk(sl(qf), sl(kf), sl(vf), sl(li), sl(lf), carry)
+        return carry, h
+
+    if unroll:
+        hs = []
+        carry = (C0, n0, m0)
+        for i in range(n_chunks):
+            carry, h = body(carry, i)
+            hs.append(h)
+        h = jnp.concatenate(hs, axis=1)
+    else:
+        # remat per chunk: keep only the (C, n, m) carries
+        _, h = jax.lax.scan(jax.checkpoint(body), (C0, n0, m0),
+                            jnp.arange(n_chunks))
+        h = jnp.moveaxis(h, 0, 1).reshape(B * H, S, dh)
+    h = h.reshape(B, H, S, dh).swapaxes(1, 2).reshape(B, S, D)
+    og = jax.nn.sigmoid((x @ p["w_o_gate"]).astype(jnp.float32))
+    return ((h * og).astype(x.dtype)) @ p["w_out"]
+
+
+@dataclasses.dataclass
+class MLSTMCache:
+    C: jnp.ndarray   # (B*H, dh, dh)
+    n: jnp.ndarray   # (B*H, dh)
+    m: jnp.ndarray   # (B*H,)
+
+
+jax.tree_util.register_dataclass(MLSTMCache, data_fields=["C", "n", "m"],
+                                 meta_fields=[])
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int) -> MLSTMCache:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return MLSTMCache(C=jnp.zeros((batch * H, dh, dh), jnp.float32),
+                      n=jnp.zeros((batch * H, dh), jnp.float32),
+                      m=jnp.full((batch * H,), -1e30, jnp.float32))
+
+
+def mlstm_decode(p, x, cache: MLSTMCache, cfg: ModelConfig):
+    B, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    q = (x @ p["wq"]).reshape(B * H, dh).astype(jnp.float32)
+    k = (x @ p["wk"]).reshape(B * H, dh).astype(jnp.float32)
+    v = (x @ p["wv"]).reshape(B * H, dh).astype(jnp.float32)
+    gates = x.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    li = jax.nn.log_sigmoid(gates[..., :H]).reshape(B * H)
+    lf = jax.nn.log_sigmoid(gates[..., H:]).reshape(B * H)
+    m_new = jnp.maximum(lf + cache.m, li)
+    fw = jnp.exp(lf + cache.m - m_new)
+    iw = jnp.exp(li - m_new)
+    C = fw[:, None, None] * cache.C + iw[:, None, None] * v[:, :, None] \
+        * k[:, None, :]
+    n = fw[:, None] * cache.n + iw[:, None] * k
+    num = jnp.einsum("bde,be->bd", C, q) * (dh ** -0.5)
+    qn = jnp.abs(jnp.einsum("bd,bd->b", n, q)) * (dh ** -0.5)
+    h = num / jnp.maximum(qn, jnp.exp(-m_new))[:, None]
+    h = h.reshape(B, D)
+    og = jax.nn.sigmoid((x @ p["w_o_gate"]).astype(jnp.float32))
+    out = ((h * og).astype(x.dtype)) @ p["w_out"]
+    return out, MLSTMCache(C=C, n=n, m=m_new)
+
+
+# ================================================================== sLSTM
+def slstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w": dense_init(ks[0], (d, 4 * d), dtype=dt),       # i, f, z, o
+        # recurrent block-diagonal per head: (H, dh, 4*dh)
+        "r": dense_init(ks[1], (H, dh, 4 * dh), scale=0.3, dtype=jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((2 * d,))]),
+        "w_out": dense_init(ks[2], (d, d), dtype=dt),
+    }
+
+
+def slstm_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                unroll: bool = False) -> jnp.ndarray:
+    """Sequential scan over time (true recurrence; xLSTM paper §2.1)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    wx = (x @ p["w"]).astype(jnp.float32)                  # (B, S, 4D)
+
+    def step(carry, wx_t):
+        h, c, n, m = carry                                 # (B, D) each
+        hr = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hr, p["r"]).reshape(B, 4 * D)
+        z = wx_t + rec + p["b"]
+        zi, zf, zz, zo = jnp.split(z, 4, axis=-1)
+        m_new = jnp.maximum(zf + m, zi)                    # stabilizer
+        iw = jnp.exp(zi - m_new)
+        fw = jnp.exp(zf + m - m_new)
+        c_new = fw * c + iw * jnp.tanh(zz)
+        n_new = fw * n + iw
+        h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    zeros = jnp.zeros((B, D), jnp.float32)
+    carry = (zeros, zeros, zeros, jnp.full((B, D), -1e30, jnp.float32))
+    wx_t = jnp.moveaxis(wx, 1, 0)                          # (S, B, 4D)
+    if unroll and S <= 64:
+        hs = []
+        for t in range(S):
+            carry, h = step(carry, wx_t[t])
+            hs.append(h)
+        h = jnp.stack(hs)
+    else:
+        _, h = jax.lax.scan(step, carry, wx_t)
+    h = jnp.moveaxis(h, 0, 1).astype(x.dtype)              # (B, S, D)
+    return h @ p["w_out"]
+
+
+@dataclasses.dataclass
+class SLSTMCache:
+    h: jnp.ndarray
+    c: jnp.ndarray
+    n: jnp.ndarray
+    m: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(SLSTMCache, data_fields=["h", "c", "n", "m"],
+                                 meta_fields=[])
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int) -> SLSTMCache:
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return SLSTMCache(h=z, c=z, n=z, m=jnp.full_like(z, -1e30))
+
+
+def slstm_decode(p, x, cache: SLSTMCache, cfg: ModelConfig):
+    B, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    wx = (x @ p["w"]).astype(jnp.float32)
+    hr = cache.h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hr, p["r"]).reshape(B, 4 * D)
+    z = wx + rec + p["b"]
+    zi, zf, zz, zo = jnp.split(z, 4, axis=-1)
+    m_new = jnp.maximum(zf + cache.m, zi)
+    iw = jnp.exp(zi - m_new)
+    fw = jnp.exp(zf + cache.m - m_new)
+    c_new = fw * cache.c + iw * jnp.tanh(zz)
+    n_new = fw * cache.n + iw
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+    out = (h_new.astype(x.dtype)) @ p["w_out"]
+    return out, SLSTMCache(h=h_new, c=c_new, n=n_new, m=m_new)

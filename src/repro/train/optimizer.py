@@ -1,0 +1,84 @@
+"""Pure-JAX optimizers (no external deps): AdamW + schedules + clipping.
+
+Written as init/update pairs over arbitrary pytrees so the same code
+drives the GNN trainer and the sharded LM trainer.  For the LM path the
+moments can be kept in a *different* sharding than the params (ZeRO-1:
+optimizer states sharded over the data axis) — the update is elementwise,
+so XLA inserts the reduce-scatter/all-gather pair automatically from the
+in/out shardings requested by the caller.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any        # first moment, pytree like params
+    nu: Any        # second moment, pytree like params
+
+
+def adamw_init(params: Any, dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)  # noqa: E731
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState, *,
+                 lr: float | jnp.ndarray = 1e-3, b1: float = 0.9,
+                 b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.01) -> tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        mdt = m.dtype  # f32 default; bf16 for 100B+ models (memory budget)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mh = m32 / c1
+        vh = v32 / c2
+        new_p = p.astype(jnp.float32) - lr * (
+            mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int,
+                    total_steps: int, min_ratio: float = 0.1
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return sched

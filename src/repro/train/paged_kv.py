@@ -1,0 +1,100 @@
+"""Paged KV-cache manager — the AGNES block discipline applied to serving.
+
+Serving many variable-length requests fragments KV memory exactly the way
+per-node reads fragment NVMe bandwidth: the fix is the same as the
+paper's — fixed-size *blocks* (pages), an object-index-table analogue
+mapping request → page list, and hyperbatch-style grouping of requests so
+every resident page serves all requests in the step.
+
+This manager owns the host-side bookkeeping (page tables, free lists,
+admission); the device-side cache the model consumes is the dense ring
+described in ``attention.py`` — on TPU the paged layout is materialized
+per decode step by a gather over the page table (the same
+``gather_rows`` Pallas kernel used for feature blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PagedKVConfig:
+    page_tokens: int = 128        # tokens per page (block)
+    n_pages: int = 4096           # device pool size
+    max_requests: int = 256
+
+
+class PagedKVManager:
+    """Page tables + free list + hyperbatch grouping for decode."""
+
+    def __init__(self, cfg: PagedKVConfig):
+        self.cfg = cfg
+        self.free = list(range(cfg.n_pages - 1, -1, -1))
+        self.tables: dict[int, list[int]] = {}     # request -> page ids
+        self.lengths: dict[int, int] = {}
+        self.evictions = 0
+
+    # ------------------------------------------------------------ admit
+    def admit(self, request_id: int, prompt_len: int) -> bool:
+        need = -(-prompt_len // self.cfg.page_tokens)
+        if len(self.free) < need or len(self.tables) >= self.cfg.max_requests:
+            return False
+        self.tables[request_id] = [self.free.pop() for _ in range(need)]
+        self.lengths[request_id] = prompt_len
+        return True
+
+    def extend(self, request_id: int, n_tokens: int = 1) -> bool:
+        """Grow a request; allocates a new page on block boundary."""
+        length = self.lengths[request_id]
+        new_len = length + n_tokens
+        have = len(self.tables[request_id]) * self.cfg.page_tokens
+        while new_len > have:
+            if not self.free:
+                return False
+            self.tables[request_id].append(self.free.pop())
+            have += self.cfg.page_tokens
+        self.lengths[request_id] = new_len
+        return True
+
+    def release(self, request_id: int) -> None:
+        self.free.extend(reversed(self.tables.pop(request_id)))
+        self.lengths.pop(request_id)
+
+    # -------------------------------------------------------- hyperbatch
+    def decode_batch(self) -> dict:
+        """Group all active requests into one decode step (hyperbatch).
+
+        Returns the page-table matrix (R, max_pages) the device gather
+        uses, plus lengths — every resident page serves every request
+        that maps to it in a single step.
+        """
+        if not self.tables:
+            return {"request_ids": np.zeros(0, np.int64),
+                    "page_table": np.zeros((0, 0), np.int32),
+                    "lengths": np.zeros(0, np.int32)}
+        rids = sorted(self.tables)
+        max_pages = max(len(self.tables[r]) for r in rids)
+        table = np.full((len(rids), max_pages), -1, dtype=np.int32)
+        for i, r in enumerate(rids):
+            pages = self.tables[r]
+            table[i, :len(pages)] = pages
+        return {"request_ids": np.asarray(rids),
+                "page_table": table,
+                "lengths": np.asarray([self.lengths[r] for r in rids],
+                                      dtype=np.int32)}
+
+    @property
+    def utilization(self) -> float:
+        used = self.cfg.n_pages - len(self.free)
+        return used / self.cfg.n_pages
+
+    def fragmentation(self) -> float:
+        """Wasted tail slots / allocated slots (bounded by page size)."""
+        alloc = sum(len(t) for t in self.tables.values()) \
+            * self.cfg.page_tokens
+        if alloc == 0:
+            return 0.0
+        live = sum(self.lengths.values())
+        return 1.0 - live / alloc

@@ -1,0 +1,25 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.data import build_dataset
+
+
+@pytest.fixture(scope="session")
+def workdir(tmp_path_factory):
+    return str(tmp_path_factory.mktemp("agnes_store"))
+
+
+@pytest.fixture(scope="session")
+def tiny_ds(workdir):
+    """Small power-law graph with on-disk block layout (shared)."""
+    return build_dataset("tiny", workdir, dim=32, block_size=16384)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

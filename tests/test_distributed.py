@@ -1,0 +1,176 @@
+"""Distributed substrate: checkpoint restore, fault tolerance drill,
+gradient compression, paged KV, sharding rules on a debug mesh."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.compression import (compressed_bytes, dequantize_int8,
+                                           ef_compress_tree, init_residuals,
+                                           quantize_int8)
+from repro.distributed.fault import (ElasticTrainer, FaultMonitor,
+                                     plan_elastic_mesh)
+from repro.train.paged_kv import PagedKVConfig, PagedKVManager
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.asarray(3)}
+    for step in (10, 20, 30):
+        mgr.save(step, tree, blocking=True)
+    assert mgr.list_steps() == [20, 30]  # keep=2 garbage collection
+    out = mgr.restore(jax.tree.map(lambda x: x, tree))
+    assert np.allclose(out["w"], tree["w"])
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+    assert int(out["step"]) == 3
+
+
+def test_checkpoint_restore_survives_partial_write(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.ones((3,))}
+    mgr.save(1, tree, blocking=True)
+    # simulate a torn write of a newer checkpoint (no COMMIT marker)
+    os.makedirs(str(tmp_path / "step_0000000002"))
+    assert mgr.latest_step() == 1
+    out = mgr.restore(tree)
+    assert np.allclose(out["w"], 1.0)
+
+
+# ------------------------------------------------------------------ fault
+def test_fault_monitor_detects_death_and_stragglers():
+    t = [0.0]
+    mon = FaultMonitor(4, timeout_s=10, straggler_factor=2.0,
+                       straggler_patience=2, clock=lambda: t[0])
+    flagged = set()
+    for step in range(5):
+        t[0] += 1.0
+        for h in range(4):
+            if h == 3 and step >= 2:
+                continue  # host 3 goes silent
+            mon.heartbeat(h, 1.0 if h != 2 else 5.0)  # host 2 straggles
+        flagged |= set(mon.check()["stragglers"])  # strikes per check
+    assert flagged == {2}
+    t[0] += 20.0
+    rep = mon.check()
+    assert 3 in rep["dead"]
+
+
+def test_elastic_remesh_preserves_tp_groups():
+    # 16 hosts, 4 per TP group; hosts 5 and 11 die -> groups 1 and 2 lost
+    alive = [h for h in range(16) if h not in (5, 11)]
+    plan = plan_elastic_mesh(alive, hosts_per_tp_group=4, model_axis=16)
+    assert plan["data_axis"] == 2
+    assert plan["tp_groups"] == [0, 3]
+    assert 4 in plan["dropped_hosts"] and 6 in plan["dropped_hosts"]
+
+
+def test_elastic_trainer_recovery_plan(tmp_path):
+    t = [0.0]
+    mon = FaultMonitor(8, timeout_s=5, clock=lambda: t[0])
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(40, {"w": jnp.ones(2)}, blocking=True)
+    trainer = ElasticTrainer(mon, mgr, hosts_per_tp_group=2, model_axis=8,
+                             global_batch=256)
+    for h in range(8):
+        mon.heartbeat(h, 1.0)
+    assert trainer.recovery_plan() is None
+    t[0] += 10.0
+    for h in range(6):   # hosts 6,7 never report again
+        mon.heartbeat(h, 1.0)
+    plan = trainer.recovery_plan()
+    assert plan is not None
+    assert plan["restore_step"] == 40
+    assert plan["data_axis"] == 3  # groups {0,1,2} survive
+
+
+# ------------------------------------------------------------ compression
+def test_int8_quantization_error_bounded():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1000,)) * 3)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, x.shape, x.dtype)
+    err = np.abs(np.asarray(back - x))
+    block_max = np.abs(np.asarray(x)).reshape(-1, 250).max()  # loose bound
+    assert err.max() <= block_max / 127 + 1e-6
+
+
+def test_error_feedback_accumulates_to_truth():
+    """Sum of EF-compressed grads converges to sum of true grads."""
+    rng = np.random.default_rng(1)
+    grads = [{"w": jnp.asarray(rng.normal(size=(64,)) * 0.01)}
+             for _ in range(30)]
+    res = init_residuals(grads[0])
+    total_c = jnp.zeros(64)
+    total_t = jnp.zeros(64)
+    for g in grads:
+        dec, res = ef_compress_tree(g, res)
+        total_c += dec["w"]
+        total_t += g["w"]
+    # residual carries the outstanding error; totals match within it
+    gap = np.abs(np.asarray(total_c + res["w"] - total_t))
+    assert gap.max() < 1e-5
+    assert compressed_bytes(grads[0]) < 64 * 4  # beats f32 wire format
+
+
+# --------------------------------------------------------------- paged KV
+def test_paged_kv_alloc_release_fragmentation():
+    kv = PagedKVManager(PagedKVConfig(page_tokens=16, n_pages=32,
+                                      max_requests=8))
+    assert kv.admit(1, 20)   # 2 pages
+    assert kv.admit(2, 16)   # 1 page
+    assert kv.utilization == pytest.approx(3 / 32)
+    for _ in range(13):      # grow request 1 by 13 tokens -> 33 total
+        assert kv.extend(1)
+    assert len(kv.tables[1]) == 3
+    batch = kv.decode_batch()
+    assert batch["page_table"].shape == (2, 3)
+    assert (batch["lengths"] == [33, 16]).all()
+    kv.release(1)
+    assert kv.utilization == pytest.approx(1 / 32)
+    assert 0.0 <= kv.fragmentation() < 1.0
+
+
+def test_paged_kv_admission_control():
+    kv = PagedKVManager(PagedKVConfig(page_tokens=16, n_pages=4,
+                                      max_requests=8))
+    assert kv.admit(1, 64)       # takes all 4 pages
+    assert not kv.admit(2, 16)   # pool exhausted
+    kv.release(1)
+    assert kv.admit(2, 16)
+
+
+# ----------------------------------------------------------- sharding
+def test_sharded_train_step_debug_mesh():
+    """End-to-end sharded train step on a small host-device mesh."""
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    from repro.configs import get_config, smoke_reduce
+    from repro.distributed.sharding import (batch_sharding,
+                                            opt_state_shardings,
+                                            param_shardings)
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import build_model
+    from repro.train.loop import make_train_step
+    from repro.train.optimizer import adamw_init
+
+    cfg = smoke_reduce(get_config("smollm-360m"))
+    model = build_model(cfg)
+    mesh = make_debug_mesh()
+    with jax.sharding.set_mesh(mesh):
+        pshard = param_shardings(model.param_specs(), mesh)
+        params = jax.jit(model.init, out_shardings=pshard)(
+            jax.random.PRNGKey(0))
+        oshard = opt_state_shardings(jax.eval_shape(adamw_init, params),
+                                     mesh)
+        opt = jax.jit(adamw_init, out_shardings=oshard)(params)
+        step = jax.jit(make_train_step(model, n_microbatches=2, lr=1e-3))
+        toks = jnp.ones((2, 2, 16), jnp.int32)
+        batch = {"tokens": jax.device_put(
+            toks, batch_sharding(mesh, ndim=3, batch_axis=1))}
+        params, opt, metrics = step(params, opt, batch)
+        assert jnp.isfinite(metrics["loss"])

@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, gather_aggregate, gather_rows
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("m,d", [(16, 128), (64, 128), (33, 256)])
+@pytest.mark.parametrize("n", [1, 8, 57])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_rows_sweep(m, d, n, dtype):
+    table = jax.random.normal(KEY, (m, d), dtype)
+    idx = jax.random.randint(jax.random.fold_in(KEY, n), (n,), 0, m)
+    out = gather_rows(table, idx, use_kernel=True, interpret=True)
+    expect = ref.gather_rows_ref(table, idx)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32))
+
+
+@pytest.mark.parametrize("n_dst,fanout", [(4, 3), (16, 10), (33, 7)])
+@pytest.mark.parametrize("mean", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_aggregate_sweep(n_dst, fanout, mean, dtype):
+    m, d = 48, 128
+    table = jax.random.normal(KEY, (m, d), dtype)
+    nbr = jax.random.randint(jax.random.fold_in(KEY, n_dst),
+                             (n_dst, fanout), -1, m)
+    out = gather_aggregate(table, nbr, mean=mean, use_kernel=True,
+                           interpret=True)
+    expect = ref.gather_aggregate_ref(table, nbr, mean=mean)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("s,bq,bk", [(128, 64, 64), (256, 128, 128),
+                                     (192, 64, 64)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])
+def test_flash_attention_sweep(s, bq, bk, causal, window):
+    B, Hq, Hkv, D = 1, 4, 2, 64
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, Hq, s, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hkv, s, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, Hkv, s, D))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk,
+                          use_kernel=True, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, expect, rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_bf16():
+    B, Hq, Hkv, S, D = 2, 2, 1, 128, 64
+    q = jax.random.normal(KEY, (B, Hq, S, D), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 9), (B, Hkv, S, D),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 8), (B, Hkv, S, D),
+                          jnp.bfloat16)
+    out = flash_attention(q, k, v, use_kernel=True, interpret=True,
+                          block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_chunked_attention_matches_ref():
+    """The pure-jnp chunked path (model hot path on CPU) vs oracle."""
+    from repro.models.attention import chunked_attention
+    B, Hq, Hkv, S, D = 1, 4, 2, 256, 32
+    q = jax.random.normal(KEY, (B, Hq, S, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 5), (B, Hkv, S, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (B, Hkv, S, D))
+    pos = jnp.arange(S)
+    for window in (0, 64):
+        out = chunked_attention(q, k, v, pos, pos, causal=True,
+                                window=window, scale=D ** -0.5,
+                                q_chunk=64, kv_chunk=64)
+        expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_matches_ref():
+    from repro.models.attention import decode_attention
+    B, Hq, Hkv, Sc, D = 3, 4, 2, 64, 32
+    q = jax.random.normal(KEY, (B, Hq, D))
+    kc = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hkv, Sc, D))
+    vc = jax.random.normal(jax.random.fold_in(KEY, 3), (B, Hkv, Sc, D))
+    lengths = jnp.full((B,), 40)
+    expect = ref.decode_attention_ref(q, kc, vc, lengths)
+    slot_pos = jnp.where(jnp.arange(Sc) < 40, jnp.arange(Sc), -1)
+    out = decode_attention(q, kc, vc, slot_pos, jnp.asarray(39),
+                           window=0, scale=D ** -0.5)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GraphBlockStore, build_bucket, sample_indices
+from repro.core.feature_cache import FeatureCache
+from repro.data.synth import powerlaw_graph
+
+
+@st.composite
+def csr_graphs(draw):
+    n = draw(st.integers(10, 120))
+    avg = draw(st.integers(1, 12))
+    seed = draw(st.integers(0, 10_000))
+    return powerlaw_graph(n, avg, seed=seed)
+
+
+@given(csr_graphs(), st.sampled_from([512, 1024, 4096]))
+@settings(max_examples=15, deadline=None)
+def test_block_store_preserves_graph(tmp_path_factory, g, block_size):
+    indptr, indices = g
+    path = str(tmp_path_factory.mktemp("bs") / "g.blk")
+    store = GraphBlockStore.build(path, indptr, indices, block_size)
+    # every edge recoverable; T_obj ranges cover all nodes in order
+    n = len(indptr) - 1
+    per_node = {v: [] for v in range(n)}
+    for b in range(store.n_blocks):
+        blk = store.read_block(b)
+        lo, hi = store.t_obj[b]
+        assert (blk.node_ids >= lo).all() and (blk.node_ids <= hi).all()
+        assert np.all(np.diff(blk.node_ids) >= 0)
+        for e in range(len(blk.node_ids)):
+            per_node[int(blk.node_ids[e])].append(blk.adjacency(e))
+    for v in range(n):
+        ref = np.sort(indices[indptr[v]:indptr[v + 1]])
+        got = np.sort(np.concatenate(per_node[v])
+                      if per_node[v] else np.zeros(0, np.int64))
+        assert np.array_equal(ref, got)
+
+
+@given(st.integers(0, 2**20), st.integers(0, 50), st.integers(0, 3),
+       st.integers(1, 64), st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_sample_indices_bounds(seed, epoch, hop, deg, fanout):
+    nodes = np.arange(7, dtype=np.int64) * 13
+    degs = np.full(7, deg)
+    out = sample_indices(nodes, degs, fanout, seed, epoch, hop)
+    assert out.shape == (7, fanout)
+    valid = out >= 0
+    assert (out[valid] < deg).all()
+    if deg <= fanout:   # small-degree nodes take the whole neighborhood
+        assert (valid.sum(axis=1) == deg).all()
+    else:
+        assert valid.all()
+
+
+@given(st.lists(st.lists(st.integers(0, 499), min_size=0, max_size=40),
+                min_size=1, max_size=6))
+@settings(max_examples=30, deadline=None)
+def test_bucket_is_lossless_partition(mb_nodes):
+    nodes = [np.asarray(sorted(set(x)), dtype=np.int64) for x in mb_nodes]
+    blocks = [n // 7 for n in nodes]
+    bck = build_bucket(nodes, blocks)
+    rebuilt = {j: [] for j in range(len(nodes))}
+    for r in range(bck.n_rows):
+        for mb, ns in bck.row(r):
+            rebuilt[mb].extend(ns.tolist())
+    for j, n in enumerate(nodes):
+        assert sorted(rebuilt[j]) == n.tolist()
+
+
+@given(st.integers(1, 200), st.integers(1, 50), st.integers(1, 5))
+@settings(max_examples=25, deadline=None)
+def test_feature_cache_never_lies(capacity, n_rows, threshold):
+    """Whatever the cache returns must equal what was admitted for it."""
+    n_nodes = 300
+    dim = 4
+    cache = FeatureCache(capacity, n_nodes, dim, admit_threshold=threshold)
+    rng = np.random.default_rng(capacity * 1000 + n_rows)
+    truth = rng.normal(size=(n_nodes, dim)).astype(np.float32)
+    for _ in range(4):
+        nodes = rng.integers(0, n_nodes, n_rows)
+        nodes = np.unique(nodes)
+        cache.note_access(nodes)
+        mask, rows = cache.lookup(nodes)
+        if mask.any():
+            assert np.allclose(rows, truth[nodes[mask]])
+        cache.admit(nodes, truth[nodes])
+        assert len(cache) <= max(capacity, 1)
+
+
+@given(st.integers(2, 64), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_mfg_assembly_invariants(n_dst, pad_rows):
+    from repro.core import assemble_layer
+    rng = np.random.default_rng(n_dst)
+    dst = np.unique(rng.integers(0, 500, n_dst))
+    nbrs = rng.integers(-1, 500, (len(dst), 5))
+    nxt, layer = assemble_layer(dst, nbrs)
+    # self nesting: every dst appears in next layer
+    assert np.isin(dst, nxt).all()
+    assert np.array_equal(nxt[layer.self_idx], dst)
+    valid = layer.nbr_idx >= 0
+    assert np.array_equal(np.sort(np.unique(nxt[layer.nbr_idx[valid]])),
+                          np.sort(np.unique(nbrs[nbrs >= 0])))
