@@ -1,6 +1,6 @@
 """Benchmark harness: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [fig2 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12]
+  PYTHONPATH=src python -m benchmarks.run [fig2 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 pipeline]
 
 Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
 """
@@ -9,7 +9,8 @@ import time
 
 from . import (bench_fig2_breakdown, bench_fig4_io_unit, bench_fig6_eq1,
                bench_fig7_distdgl, bench_fig8_hyperbatch, bench_fig9_sweep,
-               bench_fig10_sensitivity, bench_fig11_bw, bench_fig12_accuracy)
+               bench_fig10_sensitivity, bench_fig11_bw, bench_fig12_accuracy,
+               bench_pipeline_overlap)
 
 ALL = {
     "fig2": bench_fig2_breakdown.run,
@@ -21,6 +22,7 @@ ALL = {
     "fig10": bench_fig10_sensitivity.run,
     "fig11": bench_fig11_bw.run,
     "fig12": bench_fig12_accuracy.run,
+    "pipeline": bench_pipeline_overlap.run,
 }
 
 

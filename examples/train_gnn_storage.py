@@ -17,7 +17,7 @@ import numpy as np
 from repro.core import (AgnesConfig, AgnesEngine, BaselineConfig, GinexLike,
                         NVMeModel)
 from repro.data import build_dataset
-from repro.gnn import GNNTrainer
+from repro.gnn import GNNTrainer, PipelinedExecutor
 
 
 def main():
@@ -25,7 +25,20 @@ def main():
     ap.add_argument("--epochs", type=int, default=3)
     ap.add_argument("--arch", default="gcn", choices=["gcn", "sage", "gat"])
     ap.add_argument("--dataset", default="pa-mini")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"],
+                    help="aggregation primitives (pallas = TPU kernels, "
+                         "interpret mode on CPU)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="overlap data preparation with training "
+                         "(engines with a plan_epoch hook)")
     args = ap.parse_args()
+
+    if args.backend == "pallas":
+        import jax
+        if jax.default_backend() != "tpu":
+            print("warning: backend=pallas off-TPU runs interpret mode — "
+                  "orders of magnitude slower at this problem size; "
+                  "use it for small-scale kernel validation.", flush=True)
 
     ds = build_dataset(args.dataset, "/tmp/agnes_e2e", dim=128)
     train_nodes = np.arange(16384)
@@ -33,27 +46,41 @@ def main():
 
     def run(name, engine):
         tr = GNNTrainer(arch=args.arch, in_dim=128, hidden=128,
-                        n_classes=16, n_layers=3, seed=3)
+                        n_classes=16, n_layers=3, seed=3,
+                        backend=args.backend)
         tr.labels = ds.labels
         io_time = 0.0
+        pipelined = args.pipeline and hasattr(engine, "plan_epoch")
+        executor = PipelinedExecutor(engine, tr) if pipelined else None
         for epoch in range(args.epochs):
-            losses = []
-            if hasattr(engine, "iter_epoch"):
+            overlap = ""
+            if pipelined:
                 # shuffle=False so both engines see identical minibatches
                 # (the sample-equivalence property then makes accuracy exact)
-                batches = engine.iter_epoch(train_nodes, epoch=epoch,
-                                            shuffle=False)
+                rep = executor.run_epoch(train_nodes, epoch=epoch,
+                                         shuffle=False)
+                losses = rep.losses
+                io_time += sum(r.modeled_io_s for r in rep.prepare_reports)
+                overlap = f" prep_hidden {rep.hidden_fraction:.0%}"
             else:
-                mbs = [train_nodes[i:i + 1000]
-                       for i in range(0, len(train_nodes), 1000)]
-                batches = [engine.prepare(mbs, epoch=epoch)]
-            for prepared in batches:
-                io_time += engine.last_report.modeled_io_s
-                for p in prepared:
-                    losses.append(tr.train_minibatch(p))
+                losses = []
+                if hasattr(engine, "iter_epoch"):
+                    batches = engine.iter_epoch(train_nodes, epoch=epoch,
+                                                shuffle=False)
+                else:
+                    mbs = [train_nodes[i:i + 1000]
+                           for i in range(0, len(train_nodes), 1000)]
+                    batches = [engine.prepare(mbs, epoch=epoch)]
+                for prepared in batches:
+                    io_time += engine.last_report.modeled_io_s
+                    for p in prepared:
+                        losses.append(tr.train_minibatch(p))
             acc = tr.evaluate(engine.prepare(holdout, epoch=900 + epoch))
             print(f"[{name}] epoch {epoch}: loss {np.mean(losses):.4f} "
-                  f"acc {acc:.3f} modeled_io {io_time:.3f}s", flush=True)
+                  f"acc {acc:.3f} modeled_io {io_time:.3f}s{overlap}",
+                  flush=True)
+        if executor is not None:
+            executor.close()
         return acc, io_time
 
     agnes = AgnesEngine(*ds.reopen_stores(NVMeModel()), AgnesConfig(

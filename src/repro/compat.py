@@ -1,0 +1,51 @@
+"""jax version-compatibility shims.
+
+The codebase targets the jax 0.5+/0.6 sharding surface
+(``jax.sharding.get_abstract_mesh`` / ``set_mesh`` / ``AxisType``); the
+pinned container toolchain ships jax 0.4.37 where none of those exist.
+Every use of the newer API goes through this module so the rest of the
+tree stays version-agnostic: on new jax the shims are thin pass-throughs,
+on 0.4.x they fall back to the legacy mesh-context machinery
+(``with mesh:`` sets ``thread_resources.env.physical_mesh``, which is
+what ``with_sharding_constraint`` consults there).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def get_abstract_mesh():
+    """Mesh currently in scope, or None outside any mesh context.
+
+    Returns an object with ``.axis_names`` and a mapping ``.shape`` —
+    either jax's AbstractMesh (0.5+) or the legacy physical Mesh (0.4.x).
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    mesh = jax._src.mesh.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``jax.sharding.set_mesh`` when available, else the legacy
+    ``with mesh:`` context (same effect for GSPMD constraint lookup)."""
+    ctx = getattr(jax.sharding, "set_mesh", None)
+    if ctx is not None:
+        with ctx(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)

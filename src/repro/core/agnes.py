@@ -135,9 +135,16 @@ class AgnesEngine:
         self.last_report = self._report(t0, t1, t2, io_before, io_after)
         return [PreparedMinibatch(m, f) for m, f in zip(mfgs, feats)]
 
-    def iter_epoch(self, all_targets: np.ndarray, epoch: int = 0,
-                   shuffle: bool = True):
-        """Yield prepared hyperbatches covering ``all_targets`` once."""
+    def plan_epoch(self, all_targets: np.ndarray, epoch: int = 0,
+                   shuffle: bool = True) -> list[list[np.ndarray]]:
+        """Deterministic hyperbatch plan: list of per-hyperbatch minibatch
+        target lists covering ``all_targets`` once.
+
+        Shared by :meth:`iter_epoch` and the pipelined executor
+        (``repro.gnn.pipeline``) so the serial and overlapped paths see
+        byte-identical work in identical order — which, together with the
+        counter-hash sampler, makes pipelined losses equal serial losses.
+        """
         cfg = self.config
         targets = np.asarray(all_targets, dtype=np.int64)
         if shuffle:
@@ -145,9 +152,16 @@ class AgnesEngine:
             targets = rng.permutation(targets)
         mb = cfg.minibatch_size
         per_hb = mb * cfg.hyperbatch_size
+        plan = []
         for start in range(0, len(targets), per_hb):
             chunk = targets[start:start + per_hb]
-            mbs = [chunk[i:i + mb] for i in range(0, len(chunk), mb)]
+            plan.append([chunk[i:i + mb] for i in range(0, len(chunk), mb)])
+        return plan
+
+    def iter_epoch(self, all_targets: np.ndarray, epoch: int = 0,
+                   shuffle: bool = True):
+        """Yield prepared hyperbatches covering ``all_targets`` once."""
+        for mbs in self.plan_epoch(all_targets, epoch=epoch, shuffle=shuffle):
             yield self.prepare(mbs, epoch)
 
     def io_stats(self) -> dict:

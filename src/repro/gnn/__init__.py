@@ -1,5 +1,8 @@
-from .models import GNN_ARCHS, init_gnn, gnn_apply, pad_mfg, PaddedMFG
+from .models import (AGG_BACKENDS, GNN_ARCHS, init_gnn, gnn_apply, pad_mfg,
+                     PaddedMFG)
+from .pipeline import OverlapReport, PipelinedExecutor
 from .training import GNNTrainer, gnn_loss
 
-__all__ = ["GNN_ARCHS", "init_gnn", "gnn_apply", "pad_mfg", "PaddedMFG",
-           "GNNTrainer", "gnn_loss"]
+__all__ = ["AGG_BACKENDS", "GNN_ARCHS", "init_gnn", "gnn_apply", "pad_mfg",
+           "PaddedMFG", "GNNTrainer", "gnn_loss", "OverlapReport",
+           "PipelinedExecutor"]

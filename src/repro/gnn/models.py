@@ -2,10 +2,15 @@
 
 The sampler emits per-hop padded neighbor tables (``nbr_idx`` with -1
 padding) — the dense-gather layout TPU compute wants: aggregation is a
-``take`` + masked mean instead of scatter.  The Pallas ``segment_sum`` /
-``gather_rows`` kernels in ``repro.kernels`` implement the same contraction
-for the TPU hot path; these jnp versions are the reference semantics (and
-what runs on CPU).
+``take`` + masked mean instead of scatter.
+
+Aggregation is **pluggable** via ``backend``:
+
+* ``"jnp"``   — inline jnp gathers (reference semantics; CPU default).
+* ``"pallas"`` — the ``gather_rows`` / ``gather_aggregate`` Pallas
+  kernels from ``repro.kernels``: compiled on TPU, interpret mode
+  elsewhere, verified against the jnp path within fp32 tolerance
+  (``tests/test_kernel_parity.py``).
 
 All three models follow Eq. (1) of the paper:
 ``h_v^{i+1} = psi(phi(h_{v'}^i | v' in N(v), h_v^i))``.
@@ -20,8 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.sampling import MFG
+from ..kernels import gather_aggregate, gather_rows
 
 GNN_ARCHS = ("gcn", "sage", "gat")
+AGG_BACKENDS = ("jnp", "pallas")
 
 
 # --------------------------------------------------------------------- MFG
@@ -123,32 +130,47 @@ def _masked_mean(h_nbr: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return s / c
 
 
-def _gcn_layer(p, h_next, nbr_idx, self_idx):
+def _gather(h: jnp.ndarray, idx: jnp.ndarray, backend: str) -> jnp.ndarray:
+    """Row gather h[idx]; Pallas ``gather_rows`` on the kernel backend."""
+    if backend == "pallas":
+        return gather_rows(h, idx, use_kernel=True)
+    return h[idx]
+
+
+def _agg(h: jnp.ndarray, nbr_idx: jnp.ndarray, backend: str,
+         mean: bool) -> jnp.ndarray:
+    """Masked neighbor sum/mean; Pallas fused kernel on the kernel backend."""
+    if backend == "pallas":
+        return gather_aggregate(h, nbr_idx, mean=mean, use_kernel=True)
     mask = nbr_idx >= 0
-    h_nbr = h_next[jnp.clip(nbr_idx, 0)]             # dense gather
-    h_self = h_next[self_idx]
+    h_nbr = h[jnp.clip(nbr_idx, 0)]                  # dense gather
+    if mean:
+        return _masked_mean(h_nbr, mask)
+    return jnp.sum(h_nbr * mask[..., None].astype(h.dtype), axis=1)
+
+
+def _gcn_layer(p, h_next, nbr_idx, self_idx, backend):
+    h_self = _gather(h_next, self_idx, backend)
     # mean over {v} ∪ N(v)  (paper Eq. 1 with mean aggregator)
-    m = mask[..., None].astype(h_next.dtype)
-    s = jnp.sum(h_nbr * m, axis=1) + h_self
-    c = jnp.sum(mask, axis=1, keepdims=True).astype(h_next.dtype) + 1.0
+    s = _agg(h_next, nbr_idx, backend, mean=False) + h_self
+    c = jnp.sum(nbr_idx >= 0, axis=1, keepdims=True).astype(h_next.dtype) + 1.0
     return (s / c) @ p["w"] + p["b"]
 
 
-def _sage_layer(p, h_next, nbr_idx, self_idx):
-    mask = nbr_idx >= 0
-    h_nbr = h_next[jnp.clip(nbr_idx, 0)]
-    h_self = h_next[self_idx]
-    agg = _masked_mean(h_nbr, mask)
+def _sage_layer(p, h_next, nbr_idx, self_idx, backend):
+    h_self = _gather(h_next, self_idx, backend)
+    agg = _agg(h_next, nbr_idx, backend, mean=True)
     return h_self @ p["w_self"] + agg @ p["w_neigh"] + p["b"]
 
 
-def _gat_layer(p, h_next, nbr_idx, self_idx):
+def _gat_layer(p, h_next, nbr_idx, self_idx, backend):
     H, dh = p["a_src"].shape  # static under jit
+    n, fan = nbr_idx.shape
     mask = nbr_idx >= 0
     z = h_next @ p["w"]                                # (n_src, H*dh)
-    z = z.reshape(z.shape[0], H, dh)
-    z_dst = z[self_idx]                                # (n, H, dh)
-    z_nbr = z[jnp.clip(nbr_idx, 0)]                    # (n, fan, H, dh)
+    z_dst = _gather(z, self_idx, backend).reshape(n, H, dh)
+    z_nbr = _gather(z, jnp.clip(nbr_idx, 0).reshape(-1), backend)
+    z_nbr = z_nbr.reshape(n, fan, H, dh)               # (n, fan, H, dh)
     e_dst = jnp.einsum("nhd,hd->nh", z_dst, p["a_dst"])
     e_nbr = jnp.einsum("nfhd,hd->nfh", z_nbr, p["a_src"])
     e = jax.nn.leaky_relu(e_dst[:, None, :] + e_nbr, 0.2)
@@ -165,15 +187,23 @@ def _gat_layer(p, h_next, nbr_idx, self_idx):
 _LAYER_FNS = {"gcn": _gcn_layer, "sage": _sage_layer, "gat": _gat_layer}
 
 
-def gnn_apply(params: dict, mfg: PaddedMFG, arch: str) -> jnp.ndarray:
-    """Forward pass: hop-k features → target logits (paper's computation)."""
+def gnn_apply(params: dict, mfg: PaddedMFG, arch: str,
+              backend: str = "jnp") -> jnp.ndarray:
+    """Forward pass: hop-k features → target logits (paper's computation).
+
+    ``backend`` selects the aggregation primitives: ``"jnp"`` (inline
+    reference) or ``"pallas"`` (kernels; compiled on TPU, interpret on
+    CPU).  Static under jit.
+    """
+    if backend not in AGG_BACKENDS:
+        raise ValueError(f"unknown backend {backend}")
     layer_fn = _LAYER_FNS[arch]
     h = mfg.features
     k = len(params["layers"])
     # params.layers[0] consumes raw features => applies to the deepest hop
     for i, p in enumerate(params["layers"]):
         l = k - 1 - i  # MFG hop index: nodes[l] <- nodes[l+1]
-        h = layer_fn(p, h, mfg.nbr_idx[l], mfg.self_idx[l])
+        h = layer_fn(p, h, mfg.nbr_idx[l], mfg.self_idx[l], backend)
         h = jnp.where(mfg.node_mask[l][:, None], h, 0.0)
         if i < k - 1:
             h = jax.nn.relu(h)

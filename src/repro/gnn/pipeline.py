@@ -1,0 +1,217 @@
+"""Pipelined prepare→train executor: hide data preparation behind compute.
+
+The paper's Fig-2 point is that data preparation dominates storage-based
+GNN training; the fix is overlap.  This module runs
+:meth:`AgnesEngine.prepare` for hyperbatch *i+1* on a background thread
+while the jitted train step consumes hyperbatch *i* — the same bounded
+read-ahead pattern as :class:`repro.core.async_io.BlockPrefetcher`, one
+level up the stack (hyperbatches instead of storage blocks).
+
+Determinism: the producer walks :meth:`AgnesEngine.plan_epoch` in order
+on a single thread, so every buffer/cache mutation happens in the same
+sequence as the serial loop, and the counter-hash sampler is
+order-independent anyway — pipelined losses are bit-identical to the
+serial loop at a fixed seed (``tests/test_pipeline.py`` asserts this).
+
+Accounting follows :class:`PrepareReport`'s ``max(cpu, io)`` overlap
+model: with perfect overlap the epoch wall is ``max(prepare, train)``
+instead of ``prepare + train``.  :class:`OverlapReport.hidden_fraction`
+reports the measured fraction of prepare wall time hidden behind the
+train steps (train releases the GIL inside XLA, prepare is numpy + I/O,
+so overlap is real even in-process).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import numpy as np
+
+from ..core.agnes import PrepareReport
+
+
+@dataclasses.dataclass
+class OverlapReport:
+    """Measured overlap for one pipelined epoch."""
+
+    epoch_wall_s: float
+    prepare_wall_s: float        # producer time inside engine.prepare
+    train_wall_s: float          # consumer time inside train steps
+    n_hyperbatches: int
+    n_minibatches: int
+    losses: list[float]
+    prepare_reports: list[PrepareReport]
+
+    @property
+    def exposed_prepare_s(self) -> float:
+        """Prepare time the consumer actually waited on (not hidden)."""
+        return max(self.epoch_wall_s - self.train_wall_s, 0.0)
+
+    @property
+    def hidden_fraction(self) -> float:
+        """Fraction of prepare wall time overlapped with training.
+
+        1.0 = fully hidden (epoch wall == train wall); 0.0 = serial.
+        """
+        if self.prepare_wall_s <= 0.0:
+            return 0.0
+        hidden = self.prepare_wall_s - self.exposed_prepare_s
+        return min(max(hidden / self.prepare_wall_s, 0.0), 1.0)
+
+    @property
+    def serial_estimate_s(self) -> float:
+        return self.prepare_wall_s + self.train_wall_s
+
+    def summary(self) -> dict:
+        return {
+            "epoch_wall_s": self.epoch_wall_s,
+            "prepare_wall_s": self.prepare_wall_s,
+            "train_wall_s": self.train_wall_s,
+            "exposed_prepare_s": self.exposed_prepare_s,
+            "hidden_fraction": self.hidden_fraction,
+            "n_hyperbatches": self.n_hyperbatches,
+            "n_minibatches": self.n_minibatches,
+        }
+
+
+class PipelinedExecutor:
+    """Bounded-depth producer/consumer over (engine, trainer).
+
+    ``depth`` hyperbatches of prepared minibatches may be in flight at
+    once — enough to keep the trainer fed, small enough to bound host
+    memory (a hyperbatch of features is the largest transient object in
+    the system).
+
+    Use as a context manager or call :meth:`close`; a mid-epoch
+    exception on either side stops and joins the background thread
+    before propagating.
+    """
+
+    def __init__(self, engine, trainer, depth: int = 2):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self.engine = engine
+        self.trainer = trainer
+        self.depth = depth
+        self._stop = threading.Event()
+        self._producer: threading.Thread | None = None
+        self._queue: queue.Queue | None = None
+
+    # ---------------------------------------------------------- epoch
+    def run_epoch(self, all_targets: np.ndarray, epoch: int = 0,
+                  shuffle: bool = True) -> OverlapReport:
+        """Train one epoch with prepare/compute overlap; returns stats.
+
+        Trainer state (params/opt) advances in place, exactly as the
+        serial ``for prepared in engine.iter_epoch(...)`` loop would.
+        """
+        if self._producer is not None and self._producer.is_alive():
+            raise RuntimeError("an epoch is already running")
+        plan = self.engine.plan_epoch(all_targets, epoch=epoch,
+                                      shuffle=shuffle)
+        q: queue.Queue = queue.Queue(maxsize=self.depth)
+        # fresh per-epoch stop event: a producer from a previous epoch that
+        # outlived its join timeout keeps seeing its own (set) event and can
+        # never be revived by a later epoch
+        stop = threading.Event()
+        self._queue = q
+        self._stop = stop
+        prepare_s = [0.0]
+
+        def produce():
+            try:
+                for mbs in plan:
+                    if stop.is_set():
+                        return
+                    t0 = time.perf_counter()
+                    prepared = self.engine.prepare(mbs, epoch=epoch)
+                    prepare_s[0] += time.perf_counter() - t0
+                    if not self._offer(q, stop, ("batch", prepared,
+                                                 self.engine.last_report)):
+                        return
+                self._offer(q, stop, ("done", None, None))
+            except BaseException as exc:  # propagate into the consumer
+                self._offer(q, stop, ("error", exc, None))
+
+        self._producer = threading.Thread(target=produce, daemon=True,
+                                          name="agnes-prepare-pipeline")
+        losses: list[float] = []
+        reports: list[PrepareReport] = []
+        train_s = 0.0
+        n_hb = n_mb = 0
+        t_epoch = time.perf_counter()
+        self._producer.start()
+        try:
+            while True:
+                try:
+                    kind, payload, report = q.get(timeout=0.5)
+                except queue.Empty:
+                    if self._producer.is_alive():
+                        continue
+                    try:
+                        # the producer may have enqueued its sentinel and
+                        # exited between our timeout and the liveness check
+                        kind, payload, report = q.get_nowait()
+                    except queue.Empty:
+                        raise RuntimeError(
+                            "prepare thread died without a sentinel") \
+                            from None
+                if kind == "done":
+                    break
+                if kind == "error":
+                    raise payload
+                n_hb += 1
+                if report is not None:
+                    reports.append(report)
+                t0 = time.perf_counter()
+                for p in payload:
+                    losses.append(self.trainer.train_minibatch(p))
+                    n_mb += 1
+                train_s += time.perf_counter() - t0
+        finally:
+            self._shutdown()
+        wall = time.perf_counter() - t_epoch
+        return OverlapReport(wall, prepare_s[0], train_s, n_hb, n_mb,
+                             losses, reports)
+
+    # ------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Stop and join any in-flight prepare thread (idempotent)."""
+        self._shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------- internals
+    @staticmethod
+    def _offer(q: queue.Queue, stop: threading.Event, item) -> bool:
+        """Backpressure-aware put that stays responsive to its stop event."""
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _shutdown(self) -> None:
+        self._stop.set()
+        if self._queue is not None:
+            try:  # unblock a producer stuck on a full queue
+                while True:
+                    self._queue.get_nowait()
+            except queue.Empty:
+                pass
+        if self._producer is not None:
+            self._producer.join(timeout=10.0)
+            if self._producer.is_alive():
+                # keep the handle: the next run_epoch must refuse to start
+                # while a wedged prepare call is still mutating the engine
+                return
+            self._producer = None
+        self._queue = None

@@ -19,8 +19,9 @@ from ..train.optimizer import adamw_init, adamw_update, clip_by_global_norm
 from .models import PaddedMFG, gnn_apply, init_gnn, pad_mfg
 
 
-def gnn_loss(params: dict, mfg: PaddedMFG, arch: str) -> jnp.ndarray:
-    logits = gnn_apply(params, mfg, arch)
+def gnn_loss(params: dict, mfg: PaddedMFG, arch: str,
+             backend: str = "jnp") -> jnp.ndarray:
+    logits = gnn_apply(params, mfg, arch, backend)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, mfg.labels[:, None], axis=-1)[:, 0]
     # only real target rows contribute
@@ -38,6 +39,7 @@ class GNNTrainer:
     n_layers: int = 3
     lr: float = 1e-3
     seed: int = 0
+    backend: str = "jnp"   # aggregation primitives: "jnp" | "pallas"
     labels: np.ndarray | None = None
 
     def __post_init__(self):
@@ -47,20 +49,23 @@ class GNNTrainer:
         self.opt_state = adamw_init(self.params)
         self.compute_time = 0.0
         self.steps = 0
-        self._step_fn = jax.jit(self._train_step, static_argnames=("arch",))
-        self._eval_fn = jax.jit(self._eval_step, static_argnames=("arch",))
+        self._step_fn = jax.jit(self._train_step,
+                                static_argnames=("arch", "backend"))
+        self._eval_fn = jax.jit(self._eval_step,
+                                static_argnames=("arch", "backend"))
 
     # ------------------------------------------------------------ jitted
     @staticmethod
-    def _train_step(params, opt_state, mfg: PaddedMFG, arch: str, lr):
-        loss, grads = jax.value_and_grad(gnn_loss)(params, mfg, arch)
+    def _train_step(params, opt_state, mfg: PaddedMFG, arch: str, lr,
+                    backend: str = "jnp"):
+        loss, grads = jax.value_and_grad(gnn_loss)(params, mfg, arch, backend)
         grads, gn = clip_by_global_norm(grads, 1.0)
         params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
         return params, opt_state, loss, gn
 
     @staticmethod
-    def _eval_step(params, mfg: PaddedMFG, arch: str):
-        logits = gnn_apply(params, mfg, arch)
+    def _eval_step(params, mfg: PaddedMFG, arch: str, backend: str = "jnp"):
+        logits = gnn_apply(params, mfg, arch, backend)
         pred = jnp.argmax(logits, axis=-1)
         idx = jnp.arange(pred.shape[0])
         ok = (pred == mfg.labels) & (idx < mfg.n_targets)
@@ -72,7 +77,8 @@ class GNNTrainer:
         mfg = pad_mfg(prepared.mfg, prepared.features, self.labels)
         t0 = time.perf_counter()
         self.params, self.opt_state, loss, _ = self._step_fn(
-            self.params, self.opt_state, mfg, self.arch, self.lr)
+            self.params, self.opt_state, mfg, self.arch, self.lr,
+            self.backend)
         loss = float(loss)  # block for honest timing
         self.compute_time += time.perf_counter() - t0
         self.steps += 1
@@ -82,7 +88,7 @@ class GNNTrainer:
         correct = total = 0
         for p in prepared_list:
             mfg = pad_mfg(p.mfg, p.features, self.labels)
-            c, t = self._eval_fn(self.params, mfg, self.arch)
+            c, t = self._eval_fn(self.params, mfg, self.arch, self.backend)
             correct += int(c)
             total += int(t)
         return correct / max(total, 1)

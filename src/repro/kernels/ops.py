@@ -5,6 +5,19 @@ mode when ``interpret=True`` (CPU validation), and the jnp oracle
 otherwise — so the same call sites run everywhere.  The oracle *is* the
 semantics (``ref.py``); tests sweep shapes/dtypes asserting the kernels
 match it.
+
+The gather ops additionally carry:
+
+* **shape shims** — real MFG tensors have arbitrary feature widths
+  (e.g. 32) while the TPU lane width is 128; the wrappers zero-pad the
+  feature dim up to the lane multiple before the kernel and slice it
+  back after, and clamp indices so -1 padding / out-of-range rows can
+  never steer a DMA out of bounds.  Under jit the pad/slice fuse.
+* **custom VJPs** — ``pl.pallas_call`` has no autodiff rule, but the
+  GNN train step differentiates through aggregation.  The backward of a
+  gather is a scatter-add over the same index table; it runs as a plain
+  XLA scatter (a Pallas backward kernel is a further optimisation, not
+  a semantic need — TPU grads flow through the same masked math).
 """
 from __future__ import annotations
 
@@ -18,9 +31,39 @@ from .flash_attention import flash_attention_kernel
 from .gather_rows import gather_rows_kernel
 from .segment_agg import gather_aggregate_kernel
 
+_LANE = 128  # TPU vector lane width: last-dim tile multiple
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _pad_lanes(table: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    """Zero-pad the feature dim up to the lane multiple; return orig width."""
+    d = table.shape[1]
+    pad = (-d) % _LANE
+    if pad:
+        table = jnp.pad(table, ((0, 0), (0, pad)))
+    return table, d
+
+
+# ------------------------------------------------------- gather_rows
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _gather_rows_impl(table, idx, interpret):
+    return gather_rows_kernel(table, idx, interpret=interpret)
+
+
+def _gather_rows_fwd(table, idx, interpret):
+    return _gather_rows_impl(table, idx, interpret), (idx, table.shape[0])
+
+
+def _gather_rows_bwd(interpret, res, g):
+    idx, m = res
+    d_table = jnp.zeros((m, g.shape[1]), g.dtype).at[idx].add(g)
+    return d_table, None
+
+
+_gather_rows_impl.defvjp(_gather_rows_fwd, _gather_rows_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
@@ -29,9 +72,38 @@ def gather_rows(table: jnp.ndarray, idx: jnp.ndarray, *,
                 interpret: bool = False) -> jnp.ndarray:
     """out[i] = table[idx[i]] (block feature gather)."""
     use = _on_tpu() if use_kernel is None else use_kernel
-    if use or interpret:
-        return gather_rows_kernel(table, idx, interpret=interpret or not _on_tpu())
-    return ref.gather_rows_ref(table, idx)
+    if not (use or interpret):
+        return ref.gather_rows_ref(table, idx)
+    idx = jnp.clip(idx.astype(jnp.int32), 0, table.shape[0] - 1)
+    padded, d = _pad_lanes(table)
+    out = _gather_rows_impl(padded, idx, interpret or not _on_tpu())
+    return out[:, :d] if padded.shape[1] != d else out
+
+
+# -------------------------------------------------- gather_aggregate
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _gather_agg_impl(table, nbr_idx, mean, interpret):
+    return gather_aggregate_kernel(table, nbr_idx, mean=mean,
+                                   interpret=interpret)
+
+
+def _gather_agg_fwd(table, nbr_idx, mean, interpret):
+    return (_gather_agg_impl(table, nbr_idx, mean, interpret),
+            (nbr_idx, table.shape[0]))
+
+
+def _gather_agg_bwd(mean, interpret, res, g):
+    nbr_idx, m = res
+    w = (nbr_idx >= 0).astype(g.dtype)            # (n_dst, fanout)
+    if mean:
+        w = w / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1.0)
+    contrib = g[:, None, :] * w[..., None]        # masked rows contribute 0
+    d_table = jnp.zeros((m, g.shape[-1]), g.dtype).at[
+        jnp.clip(nbr_idx, 0)].add(contrib)
+    return d_table, None
+
+
+_gather_agg_impl.defvjp(_gather_agg_fwd, _gather_agg_bwd)
 
 
 @functools.partial(jax.jit,
@@ -41,10 +113,14 @@ def gather_aggregate(table: jnp.ndarray, nbr_idx: jnp.ndarray, *,
                      interpret: bool = False) -> jnp.ndarray:
     """Fused GNN neighbor gather + masked sum/mean."""
     use = _on_tpu() if use_kernel is None else use_kernel
-    if use or interpret:
-        return gather_aggregate_kernel(
-            table, nbr_idx, mean=mean, interpret=interpret or not _on_tpu())
-    return ref.gather_aggregate_ref(table, nbr_idx, mean=mean)
+    if not (use or interpret):
+        return ref.gather_aggregate_ref(table, nbr_idx, mean=mean)
+    # clamp the upper bound but preserve -1 (the padding/mask sentinel)
+    nbr_idx = jnp.clip(nbr_idx.astype(jnp.int32), -1, table.shape[0] - 1)
+    padded, d = _pad_lanes(table)
+    out = _gather_agg_impl(padded, nbr_idx, mean,
+                           interpret or not _on_tpu())
+    return out[:, :d] if padded.shape[1] != d else out
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from ..configs import SHAPES, get_config, list_configs
 from ..distributed.sharding import (batch_sharding, cache_shardings,
                                     opt_state_shardings, param_shardings)
+from ..compat import set_mesh
 from ..models import build_model
 from ..train.loop import make_serve_step, make_train_step
 from ..train.optimizer import adamw_init
@@ -174,7 +175,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *,
            "mesh": "x".join(str(s) for s in mesh.devices.shape),
            "n_layers": cfg.n_layers}
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind == "train":
             nm = next(iter(specs.values())).shape[0]
             # 100B+ models: bf16 moments (memory budget at 16 GB/chip;

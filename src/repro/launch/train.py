@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import set_mesh
 from ..configs import get_config, smoke_reduce
 from ..data.tokens import TokenBlockStore, TokenPipeline
 from ..distributed.checkpoint import CheckpointManager
@@ -52,7 +53,7 @@ def main(argv=None):
     mesh = make_debug_mesh() if args.smoke else make_production_mesh()
 
     key = jax.random.PRNGKey(0)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         pshard = param_shardings(model.param_specs(), mesh)
         params = jax.jit(model.init, out_shardings=pshard)(key)
         oshard = opt_state_shardings(jax.eval_shape(adamw_init, params), mesh)

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import get_abstract_mesh
+
 
 def constrain_batch(x: jnp.ndarray, seq_shard: bool = False,
                     dp_model: bool = False) -> jnp.ndarray:
@@ -19,9 +21,9 @@ def constrain_batch(x: jnp.ndarray, seq_shard: bool = False,
     conv / associative scan / MoE dispatch) can silently drop the batch
     sharding — this constraint at every layer boundary keeps activations
     data-parallel.  No-op outside a mesh context (requires
-    ``jax.sharding.set_mesh``) or when dims aren't divisible.
+    ``repro.compat.set_mesh``) or when dims aren't divisible.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -153,6 +153,7 @@ def test_sharded_train_step_debug_mesh():
     from repro.distributed.sharding import (batch_sharding,
                                             opt_state_shardings,
                                             param_shardings)
+    from repro.compat import set_mesh
     from repro.launch.mesh import make_debug_mesh
     from repro.models import build_model
     from repro.train.loop import make_train_step
@@ -161,7 +162,7 @@ def test_sharded_train_step_debug_mesh():
     cfg = smoke_reduce(get_config("smollm-360m"))
     model = build_model(cfg)
     mesh = make_debug_mesh()
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         pshard = param_shardings(model.param_specs(), mesh)
         params = jax.jit(model.init, out_shardings=pshard)(
             jax.random.PRNGKey(0))

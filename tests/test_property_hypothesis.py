@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) on the system's core invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import GraphBlockStore, build_bucket, sample_indices
