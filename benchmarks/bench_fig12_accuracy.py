@@ -6,13 +6,15 @@ from __future__ import annotations
 import numpy as np
 
 from .common import (ALL_BASELINES, emit, get_dataset, make_agnes,
-                     make_baseline, targets_for)
+                     make_baseline, quick_val, targets_for)
 from repro.gnn import GNNTrainer
 
 
-def run(arch: str = "sage", epochs: int = 3):
+def run(arch: str = "sage", epochs: int | None = None):
+    if epochs is None:
+        epochs = quick_val(3, 1)
     ds = get_dataset("ig-mini")
-    train_nodes = np.arange(4096)
+    train_nodes = np.arange(min(4096, int(ds.n_nodes * 0.6)))
     eval_targets = targets_for(ds, n_mb=2, mb_size=512, seed=99)
 
     results = {}

@@ -21,8 +21,11 @@ from .common import emit, get_dataset, make_agnes
 from repro.gnn import GNNTrainer, PipelinedExecutor
 
 
-def run(arch: str = "gcn", backend: str = "jnp", epochs: int = 2,
+def run(arch: str = "gcn", backend: str = "jnp", epochs: int | None = None,
         depth: int = 2):
+    from .common import quick_val
+    if epochs is None:
+        epochs = quick_val(2, 1)
     import jax
     if backend == "pallas" and jax.default_backend() != "tpu":
         print("# warning: backend=pallas runs the kernels in interpret "

@@ -21,6 +21,19 @@ from repro.data import build_dataset
 WORKDIR = os.environ.get("REPRO_BENCH_DIR", "/tmp/repro_bench")
 ROWS: list[tuple[str, float, str]] = []
 
+# --quick smoke tier (benchmarks/run.py --quick): every benchmark runs on
+# tiny synthetic graphs so the whole suite finishes in CI time and the
+# perf trajectory (BENCH_io.json) is tracked per PR.
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+QUICK_MAX_NODES = 6_000
+QUICK_MAX_DIM = 32
+QUICK_MAX_BLOCK = 65_536
+
+
+def quick_val(normal, quick):
+    """Pick a parameter by tier (reads the QUICK flag at call time)."""
+    return quick if QUICK else normal
+
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
@@ -36,21 +49,38 @@ def flush_rows() -> list:
 def get_dataset(name: str = "ig-mini", dim: int = 128,
                 block_size: int = 1 << 20, **kw):
     os.makedirs(WORKDIR, exist_ok=True)
+    if QUICK:
+        from repro.data.datasets import DATASETS
+        n_reg = DATASETS.get(name, (10_000,))[0]
+        kw["n_nodes"] = min(kw.get("n_nodes") or n_reg, QUICK_MAX_NODES)
+        dim = min(dim, QUICK_MAX_DIM)
+        block_size = min(block_size, QUICK_MAX_BLOCK)
     return build_dataset(name, WORKDIR, dim=dim, block_size=block_size, **kw)
 
 
 def make_agnes(ds, *, setting_bytes: int = 64 << 20, block_size: int = 1 << 20,
                hyperbatch: bool = True, n_ssd: int = 1,
                fanouts=(10, 10, 10), minibatch=512, hyperbatch_size=8,
-               cache_rows: int = 0, async_io: bool = False) -> AgnesEngine:
+               cache_rows: int = 0, async_io: bool = False,
+               max_coalesce_bytes: int | None = None,
+               io_queue_depth: int | None = None,
+               io_workers: int | None = None) -> AgnesEngine:
     dev = NVMeModel(n_ssd=n_ssd)
     g, f = ds.reopen_stores(device=dev)
+    extra = {}
+    if max_coalesce_bytes is not None:
+        extra["max_coalesce_bytes"] = max_coalesce_bytes
+    if io_queue_depth is not None:
+        extra["io_queue_depth"] = io_queue_depth
+    if io_workers is not None:
+        extra["io_workers"] = io_workers
     cfg = AgnesConfig(block_size=block_size, minibatch_size=minibatch,
                       hyperbatch_size=hyperbatch_size, fanouts=fanouts,
                       graph_buffer_bytes=setting_bytes // 2,
                       feature_buffer_bytes=setting_bytes // 2,
                       feature_cache_rows=cache_rows,
-                      hyperbatch_enabled=hyperbatch, async_io=async_io)
+                      hyperbatch_enabled=hyperbatch, async_io=async_io,
+                      **extra)
     return AgnesEngine(g, f, cfg)
 
 

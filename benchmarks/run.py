@@ -1,16 +1,27 @@
 """Benchmark harness: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [fig2 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 pipeline]
+  PYTHONPATH=src python -m benchmarks.run [--quick] \
+      [fig2 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 pipeline io]
 
 Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
+
+``--quick`` is the smoke tier: every selected benchmark runs on a tiny
+synthetic graph (common.QUICK clamps dataset sizes) and the results —
+including the I/O scheduler before/after numbers from the ``io``
+benchmark (modeled prepare time, achieved bandwidth, sequential
+fraction) — are written to ``BENCH_io.json`` at the repo root so the
+perf trajectory is tracked PR over PR.  Wired into ``scripts/test.sh``
+behind ``RUN_BENCH=1``.
 """
+import json
+import os
 import sys
 import time
 
 from . import (bench_fig2_breakdown, bench_fig4_io_unit, bench_fig6_eq1,
                bench_fig7_distdgl, bench_fig8_hyperbatch, bench_fig9_sweep,
                bench_fig10_sensitivity, bench_fig11_bw, bench_fig12_accuracy,
-               bench_pipeline_overlap)
+               bench_io_sched, bench_pipeline_overlap, common)
 
 ALL = {
     "fig2": bench_fig2_breakdown.run,
@@ -23,16 +34,45 @@ ALL = {
     "fig11": bench_fig11_bw.run,
     "fig12": bench_fig12_accuracy.run,
     "pipeline": bench_pipeline_overlap.run,
+    "io": bench_io_sched.run,
 }
+
+OUT_PATH = os.environ.get(
+    "REPRO_BENCH_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_io.json"))
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(ALL)
+    argv = sys.argv[1:]
+    quick = "--quick" in argv
+    if quick:
+        argv = [a for a in argv if a != "--quick"]
+        common.QUICK = True
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+    which = argv or list(ALL)
     print("name,us_per_call,derived")
+    results: dict = {}
     for name in which:
         t0 = time.time()
-        ALL[name]()
-        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        ret = ALL[name]()
+        dt = time.time() - t0
+        entry: dict = {
+            "seconds": round(dt, 2),
+            "rows": [{"name": n, "value": v, "derived": d}
+                     for n, v, d in common.flush_rows()],
+        }
+        if isinstance(ret, dict):
+            entry["metrics"] = ret
+        results[name] = entry
+        print(f"# {name} done in {dt:.1f}s", flush=True)
+    if quick:
+        payload = {"quick": True,
+                   "io": results.get("io", {}).get("metrics"),
+                   "benchmarks": results}
+        out = os.path.abspath(OUT_PATH)
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {out}", flush=True)
 
 
 if __name__ == '__main__':

@@ -31,6 +31,13 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="overlap data preparation with training "
                          "(engines with a plan_epoch hook)")
+    ap.add_argument("--coalesce-bytes", type=int, default=8 << 20,
+                    help="max bytes per merged sequential I/O request "
+                         "(0 = legacy per-block path)")
+    ap.add_argument("--io-queue-depth", type=int, default=8,
+                    help="in-flight coalesced requests")
+    ap.add_argument("--io-workers", type=int, default=2,
+                    help="reader pool size for the I/O scheduler")
     args = ap.parse_args()
 
     if args.backend == "pallas":
@@ -85,7 +92,9 @@ def main():
 
     agnes = AgnesEngine(*ds.reopen_stores(NVMeModel()), AgnesConfig(
         minibatch_size=1000, hyperbatch_size=8,
-        graph_buffer_bytes=32 << 20, feature_buffer_bytes=32 << 20))
+        graph_buffer_bytes=32 << 20, feature_buffer_bytes=32 << 20,
+        max_coalesce_bytes=args.coalesce_bytes,
+        io_queue_depth=args.io_queue_depth, io_workers=args.io_workers))
     acc_a, io_a = run("agnes", agnes)
     agnes.close()
 

@@ -1,5 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verify — runs the suite exactly as ROADMAP.md specifies.
+# RUN_BENCH=1 additionally runs the --quick benchmark smoke tier, which
+# writes BENCH_io.json (I/O scheduler before/after numbers) at repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+if [[ "${RUN_BENCH:-0}" == "1" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick
+fi

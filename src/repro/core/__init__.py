@@ -18,6 +18,7 @@ from .device_model import IOStats, NVMeModel
 from .feature_cache import FeatureCache
 from .gather import FeatureGatherer
 from .hyperbatch import HyperbatchSampler
+from .io_sched import CoalescedReader, Run, coalesce, plan_cost
 from .layout import apply_relabel, bfs_locality_order, degree_order
 from .sampling import MFG, MFGLayer, assemble_layer, sample_indices
 
@@ -27,6 +28,7 @@ __all__ = [
     "GNNDriveLike", "MariusLike", "OutreLike", "DEFAULT_BLOCK_SIZE",
     "FeatureBlockStore", "GraphBlock", "GraphBlockStore", "Bucket",
     "build_bucket", "BlockBuffer", "IOStats", "NVMeModel", "FeatureCache",
+    "CoalescedReader", "Run", "coalesce", "plan_cost",
     "FeatureGatherer", "HyperbatchSampler", "apply_relabel",
     "bfs_locality_order", "degree_order", "MFG", "MFGLayer",
     "assemble_layer", "sample_indices",

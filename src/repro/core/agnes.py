@@ -20,6 +20,7 @@ import numpy as np
 
 from .async_io import BlockPrefetcher
 from .block_store import DEFAULT_BLOCK_SIZE, FeatureBlockStore, GraphBlockStore
+from .io_sched import CoalescedReader
 from .buffer import BlockBuffer
 from .device_model import IOStats, NVMeModel
 from .feature_cache import FeatureCache
@@ -43,6 +44,13 @@ class AgnesConfig:
     hyperbatch_enabled: bool = True      # False = AGNES-No ablation
     async_io: bool = True
     prefetch_depth: int = 8
+    # --- coalesced I/O scheduler (io_sched.py) ---
+    # max bytes per merged sequential request; 0 disables the scheduler
+    # entirely (legacy per-block path); block_size = batched submission
+    # without merging
+    max_coalesce_bytes: int = 8 << 20
+    io_queue_depth: int = 8              # in-flight coalesced requests
+    io_workers: int = 2                  # reader pool size (async_io only)
     seed: int = 0
 
     def buffer_blocks(self, nbytes: int) -> int:
@@ -98,7 +106,19 @@ class AgnesEngine:
             dtype=feature_store.dtype)
         self._g_prefetch = None
         self._f_prefetch = None
-        if cfg.async_io:
+        if cfg.max_coalesce_bytes > 0:
+            # coalesced plan-driven scheduler (default).  With async_io off
+            # the plan executes lazily on the consumer thread — still
+            # coalesced and batch-charged, but fully deterministic.
+            workers = cfg.io_workers if cfg.async_io else 0
+            self._g_prefetch = CoalescedReader(
+                graph_store, max_coalesce_bytes=cfg.max_coalesce_bytes,
+                queue_depth=cfg.io_queue_depth, workers=workers)
+            self._f_prefetch = CoalescedReader(
+                feature_store, max_coalesce_bytes=cfg.max_coalesce_bytes,
+                queue_depth=cfg.io_queue_depth, workers=workers)
+        elif cfg.async_io:
+            # legacy per-block read-ahead thread
             self._g_prefetch = BlockPrefetcher(
                 graph_store.read_block, depth=cfg.prefetch_depth,
                 should_skip=lambda b: b in self.graph_buffer)
@@ -118,6 +138,9 @@ class AgnesEngine:
                 epoch: int = 0) -> list[PreparedMinibatch]:
         """Data preparation for one hyperbatch (Algorithm 1)."""
         cfg = self.config
+        for p in (self._g_prefetch, self._f_prefetch):
+            if p is not None:
+                p.reset()  # defensive: drop any stale plan from an aborted run
         io_before = self._io_snapshot()
         t0 = time.perf_counter()
         if cfg.hyperbatch_enabled:
@@ -185,14 +208,18 @@ class AgnesEngine:
     def _io_snapshot(self):
         g, f = self.graph_store.stats, self.feature_store.stats
         return (g.n_reads, g.bytes_read, g.modeled_read_time,
-                f.n_reads, f.bytes_read, f.modeled_read_time)
+                g.n_requests, g.n_sequential_reads,
+                f.n_reads, f.bytes_read, f.modeled_read_time,
+                f.n_requests, f.n_sequential_reads)
 
     def _report(self, t0, t1, t2, before, after) -> PrepareReport:
         d = [a - b for a, b in zip(after, before)]
-        sample_io = {"n_reads": d[0], "bytes": d[1], "modeled_s": d[2]}
-        gather_io = {"n_reads": d[3], "bytes": d[4], "modeled_s": d[5]}
+        sample_io = {"n_reads": d[0], "bytes": d[1], "modeled_s": d[2],
+                     "n_requests": d[3], "n_sequential": d[4]}
+        gather_io = {"n_reads": d[5], "bytes": d[6], "modeled_s": d[7],
+                     "n_requests": d[8], "n_sequential": d[9]}
         cpu = (t1 - t0) + (t2 - t1)
-        io = d[2] + d[5]
+        io = d[2] + d[7]
         modeled = max(cpu, io) if self.config.async_io else cpu + io
         return PrepareReport(t1 - t0, t2 - t1, sample_io, gather_io,
                              io, modeled)

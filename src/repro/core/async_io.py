@@ -7,6 +7,11 @@ thread that reads ahead of the consumer up to ``depth`` blocks, so the
 processing thread "does not wait for the completion of the I/O in an idle
 state".
 
+This is the legacy one-block-at-a-time path; the engine's default is the
+coalesced, plan-driven :class:`repro.core.io_sched.CoalescedReader`,
+which shares the same consumer protocol (``plan``/``fetch``/``reset``/
+``close``).
+
 Device-time accounting under overlap: the engine reports both
 ``sync_time = cpu + io`` and ``async_time = max(cpu, io) + ramp`` — on
 this 1-core container the wall-clock benefit is limited, but the I/O
@@ -14,74 +19,101 @@ schedule and counts are identical to a multi-core host.
 """
 from __future__ import annotations
 
-import queue
 import threading
+from collections import deque
 from typing import Any, Callable
 
 
 class BlockPrefetcher:
-    """Read-ahead worker over a planned block visit order."""
+    """Read-ahead worker over a planned block visit order.
+
+    The worker blocks on a condition variable (no polling): it wakes when
+    a plan arrives, when the consumer drains a backlog slot, on
+    :meth:`reset`, or on :meth:`close` — every wait predicate includes
+    ``_stop``, so ``close()`` cannot race the backlog throttle.
+    """
 
     def __init__(self, reader: Callable[[int], Any], depth: int = 4,
                  should_skip: Callable[[int], bool] | None = None):
         self.reader = reader
         self.depth = depth
         self.should_skip = should_skip
-        self._plan: queue.Queue = queue.Queue()
+        self._plan: deque[int] = deque()
         self._done: dict[int, Any] = {}
         self._lock = threading.Lock()
-        self._ready = threading.Condition(self._lock)
+        self._cv = threading.Condition(self._lock)
+        self._gen = 0
         self._stop = False
-        self._inflight = 0
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     def plan(self, block_ids) -> None:
         """Queue the hop's ascending block visit order."""
-        for b in list(block_ids):
-            self._plan.put(int(b))
+        with self._cv:
+            self._plan.extend(int(b) for b in block_ids)
+            self._cv.notify_all()
 
     def take(self, block_id: int) -> Any | None:
         """Non-blocking: return the prefetched block if ready, else None."""
-        with self._lock:
-            return self._done.pop(block_id, None)
+        with self._cv:
+            blk = self._done.pop(block_id, None)
+            if blk is not None:
+                self._cv.notify_all()  # freed a backlog slot
+            return blk
+
+    # the engine-facing protocol shared with CoalescedReader; the legacy
+    # prefetcher stays non-blocking (a skipped block would never arrive)
+    fetch = take
 
     def wait(self, block_id: int, timeout: float = 30.0) -> Any | None:
         """Blocking variant used when the consumer catches up to the plan."""
-        with self._ready:
-            if block_id in self._done:
-                return self._done.pop(block_id)
-            self._ready.wait_for(lambda: block_id in self._done or self._stop,
-                                 timeout=timeout)
-            return self._done.pop(block_id, None)
+        with self._cv:
+            self._cv.wait_for(lambda: block_id in self._done or self._stop,
+                              timeout=timeout)
+            blk = self._done.pop(block_id, None)
+            if blk is not None:
+                self._cv.notify_all()
+            return blk
+
+    def reset(self) -> None:
+        """Drop the remaining plan and any undelivered blocks.
+
+        Called at hop boundaries: blocks read ahead but never taken (the
+        consumer found them already buffer-resident) would otherwise sit
+        in ``_done`` forever, permanently consuming ``depth`` slots and
+        throttling every later hop.
+        """
+        with self._cv:
+            self._gen += 1
+            self._plan.clear()
+            self._done.clear()
+            self._cv.notify_all()
 
     def _run(self) -> None:
-        while not self._stop:
-            try:
-                b = self._plan.get(timeout=0.1)
-            except queue.Empty:
-                continue
-            with self._lock:
-                backlog = len(self._done)
-            if backlog >= self.depth:
-                # consumer is behind; throttle via condition rather than spin
-                with self._ready:
-                    self._ready.wait_for(
-                        lambda: len(self._done) < self.depth or self._stop,
-                        timeout=1.0)
-            if self._stop:
-                break
+        while True:
+            with self._cv:
+                # one predicate covers plan arrival, backlog drain, reset
+                # and close — no timed polling
+                self._cv.wait_for(
+                    lambda: self._stop or (self._plan
+                                           and len(self._done) < self.depth))
+                if self._stop:
+                    return
+                gen = self._gen
+                b = self._plan.popleft()
             if self.should_skip is not None and self.should_skip(b):
                 continue  # already resident in the consumer's buffer
             blk = self.reader(b)
-            with self._ready:
+            with self._cv:
+                if gen != self._gen or self._stop:
+                    continue  # reset() raced the read: drop the stale block
                 self._done[b] = blk
-                self._ready.notify_all()
+                self._cv.notify_all()
 
     def close(self) -> None:
-        self._stop = True
-        with self._ready:
-            self._ready.notify_all()
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
         self._thread.join(timeout=2.0)
 
     def __enter__(self):

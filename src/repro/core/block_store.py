@@ -33,6 +33,7 @@ import threading
 import numpy as np
 
 from .device_model import IOStats, NVMeModel
+from .io_sched import Run, coalesce, plan_cost
 
 DEFAULT_BLOCK_SIZE = 1 << 20  # 1 MiB (paper default)
 _HDR = 3  # directory words per entry: node_id, count, total_degree
@@ -59,7 +60,46 @@ class GraphBlock:
         return pos_c, mask
 
 
-class GraphBlockStore:
+class _BlockReadBatcher:
+    """Store-side half of the coalesced I/O protocol (io_sched.py).
+
+    Mixed into both stores: hosts must provide ``block_size``, ``device``,
+    ``stats``, ``_io_lock``, ``_last_block_read`` and
+    ``read_run(start, count)`` (one memmap slice, vectorized decode, no
+    accounting).
+    """
+
+    def read_blocks(self, block_ids, max_coalesce_bytes: int = 0,
+                    queue_depth: int | None = None) -> list:
+        """Vectorized batch read: coalesced requests, batch-time charging.
+
+        Returns decoded blocks in ascending-id order.  With
+        ``max_coalesce_bytes=0`` every block is its own request (batched
+        submission without merging); bytes read are identical to a
+        ``read_block`` loop either way.
+        """
+        runs = coalesce(block_ids, self.block_size, max_coalesce_bytes)
+        qd = queue_depth if queue_depth is not None else self.device.queue_depth
+        self.account_runs(runs, qd)
+        out: list = []
+        for r in runs:
+            out.extend(self.read_run(r.start, r.count))
+        return out
+
+    def account_runs(self, runs: list[Run], queue_depth: int) -> None:
+        """Charge a submitted plan of coalesced runs at queue-depth overlap."""
+        if not runs:
+            return
+        total, n_blocks, n_seq, t = plan_cost(runs, self.block_size,
+                                              self.device, queue_depth)
+        with self._io_lock:
+            self.stats.record_run_batch(
+                total, n_blocks, n_seq,
+                [r.count * self.block_size for r in runs], t)
+            self._last_block_read = runs[-1].stop - 1
+
+
+class GraphBlockStore(_BlockReadBatcher):
     """Block-organized adjacency storage with pinned object index table."""
 
     def __init__(self, path: str, block_size: int, t_obj: np.ndarray,
@@ -186,7 +226,11 @@ class GraphBlockStore:
         hi = np.clip(hi, 0, self.n_blocks - 1)
         if ((hi - lo) == 0).all():
             return np.unique(lo)
-        out = np.concatenate([np.arange(l, h + 1) for l, h in zip(lo, hi)])
+        # vectorized run expansion for split objects: block id = run start
+        # + offset within the run, no per-node np.arange
+        lens = hi - lo + 1
+        cum = np.cumsum(lens)
+        out = np.repeat(lo, lens) + np.arange(cum[-1]) - np.repeat(cum - lens, lens)
         return np.unique(out)
 
     # ---------------------------------------------------------- I/O
@@ -203,6 +247,64 @@ class GraphBlockStore:
             self.stats.record_read(self.block_size, t, sequential=sequential)
         return self._decode(block_id, raw)
 
+    def read_run(self, start: int, count: int) -> list[GraphBlock]:
+        """One memmap slice over ``count`` adjacent blocks, decoded together.
+
+        No device accounting — the caller (scheduler / ``read_blocks``)
+        charges whole submissions via :meth:`account_runs`.
+        """
+        if not (0 <= start and start + count <= self.n_blocks):
+            raise IndexError((start, count))
+        w = self.words_per_block
+        raw = np.asarray(self._mm[start * w:(start + count) * w])
+        return self.decode_many(start, raw.reshape(count, w))
+
+    def decode_many(self, start: int, raw: np.ndarray) -> list[GraphBlock]:
+        """Decode ``raw`` (count, words_per_block) into GraphBlocks.
+
+        All directories and payloads are extracted with flat fancy
+        indexing — no per-block Python work beyond the final ``np.split``.
+        """
+        k = raw.shape[0]
+        ne = raw[:, 0].astype(np.int64)
+        tot_e = int(ne.sum())
+        if tot_e == 0 or (ne == 0).any():
+            # build() never emits empty blocks; if one appears (truncated
+            # file), the flat-offset math below is invalid — decode singly
+            return [self._decode(start + i, raw[i]) for i in range(k)]
+        rows_idx = np.repeat(np.arange(k), ne)          # block of each entry
+        cum_ne = np.cumsum(ne)
+        ent = np.arange(tot_e) - np.repeat(cum_ne - ne, ne)  # entry-local idx
+        node_ids = raw[rows_idx, 1 + ent].astype(np.int64)
+        counts = raw[rows_idx, 1 + ne[rows_idx] + ent].astype(np.int64)
+        total_deg = raw[rows_idx, 1 + 2 * ne[rows_idx] + ent].astype(np.int64)
+        # entry-local payload offsets within each block
+        cum_cnt = np.cumsum(counts)
+        blk_pay_start = np.concatenate([[0], cum_cnt[cum_ne - 1][:-1]])
+        local_off = cum_cnt - counts - blk_pay_start[rows_idx]
+        tot_p = int(cum_cnt[-1]) if tot_e else 0
+        if tot_p:
+            pay_rows = np.repeat(rows_idx, counts)
+            pay_base = np.repeat(1 + 3 * ne[rows_idx] + local_off, counts)
+            within = np.arange(tot_p) - np.repeat(cum_cnt - counts, counts)
+            payload = raw[pay_rows, pay_base + within].astype(np.int64)
+        else:
+            payload = np.zeros(0, np.int64)
+        # split flat arrays back into per-block GraphBlocks
+        ent_bounds = cum_ne[:-1]
+        pay_bounds = cum_cnt[cum_ne - 1][:-1] if k > 1 else np.zeros(0, np.int64)
+        ids_per = np.split(node_ids, ent_bounds)
+        cnt_per = np.split(counts, ent_bounds)
+        tot_per = np.split(total_deg, ent_bounds)
+        pay_per = np.split(payload, pay_bounds)
+        out = []
+        for i in range(k):
+            indptr = np.zeros(len(cnt_per[i]) + 1, dtype=np.int64)
+            np.cumsum(cnt_per[i], out=indptr[1:])
+            out.append(GraphBlock(start + i, ids_per[i], indptr,
+                                  pay_per[i], tot_per[i]))
+        return out
+
     @staticmethod
     def _decode(block_id: int, raw: np.ndarray) -> GraphBlock:
         ne = int(raw[0])
@@ -215,7 +317,7 @@ class GraphBlockStore:
         return GraphBlock(block_id, node_ids, indptr, payload, total_deg)
 
 
-class FeatureBlockStore:
+class FeatureBlockStore(_BlockReadBatcher):
     """Block-organized node-feature storage.
 
     Row ``v`` lives in feature block ``v // rows_per_block`` at local offset
@@ -249,9 +351,16 @@ class FeatureBlockStore:
         row_bytes = dim * dtype.itemsize
         rows_per_block = max(block_size // row_bytes, 1)
         n_blocks = -(-n // rows_per_block)
-        padded = np.zeros((n_blocks * rows_per_block, dim), dtype=dtype)
-        padded[:n] = features
-        padded.tofile(path)
+        # stream to disk chunk-by-chunk: rows are contiguous across blocks,
+        # so only the final block needs zero padding — no fully padded
+        # (n_blocks * rows_per_block, dim) copy (2x peak RAM) is ever built
+        chunk_rows = max((64 << 20) // max(row_bytes, 1), 1)
+        with open(path, "wb") as fh:
+            for s in range(0, n, chunk_rows):
+                np.ascontiguousarray(features[s:s + chunk_rows]).tofile(fh)
+            pad = n_blocks * rows_per_block - n
+            if pad:
+                np.zeros((pad, dim), dtype=dtype).tofile(fh)
         meta = {"n_nodes": int(n), "dim": int(dim), "dtype": dtype.name,
                 "block_size": int(block_size)}
         with open(path + ".meta.json", "w") as f:
@@ -281,6 +390,14 @@ class FeatureBlockStore:
             self.stats.record_read(self.block_size, t, sequential=sequential)
         return rows
 
+    def read_run(self, start: int, count: int) -> list[np.ndarray]:
+        """One memmap slice over ``count`` adjacent blocks; no accounting."""
+        if not (0 <= start and start + count <= self.n_blocks):
+            raise IndexError((start, count))
+        r = self.rows_per_block
+        rows = np.asarray(self._mm[start * r:(start + count) * r])
+        return [rows[i * r:(i + 1) * r] for i in range(count)]
+
     def read_rows_node_granular(self, nodes: np.ndarray, io_unit: int = 4096) -> np.ndarray:
         """Baseline path (Ginex-like): one small I/O per requested row.
 
@@ -293,6 +410,7 @@ class FeatureBlockStore:
         per_io = -(-self.row_bytes // io_unit) * io_unit
         t = self.device.batch_time(per_io * len(nodes), n_random=len(nodes))
         self.stats.n_reads += len(nodes)
+        self.stats.n_requests += len(nodes)
         self.stats.bytes_read += per_io * len(nodes)
         self.stats.modeled_read_time += t
         self.stats.size_histogram[max(per_io // 1024, 1)] += len(nodes)

@@ -34,6 +34,15 @@ class BlockBuffer:
     def __len__(self) -> int:
         return len(self._table)
 
+    def absent(self, block_ids) -> list[int]:
+        """Filter a planned visit order down to non-resident blocks.
+
+        Prefetch/scheduler plans are filtered through this at submit time
+        so every planned block is consumed exactly once (no read-ahead
+        slot leak, and bytes stay identical to the unplanned path).
+        """
+        return [int(b) for b in block_ids if int(b) not in self._table]
+
     def get(self, block_id: int, loader: Callable[[int], Any],
             pin: bool = False) -> Any:
         """Return the block, loading through ``loader`` on a miss."""

@@ -41,11 +41,18 @@ class NVMeModel:
             t += self.latency
         return t
 
-    def batch_time(self, total_bytes: int, n_random: int, n_sequential: int = 0) -> float:
-        """Time for a batch of requests issued with queue-depth overlap."""
+    def batch_time(self, total_bytes: int, n_random: int, n_sequential: int = 0,
+                   queue_depth: int | None = None) -> float:
+        """Time for a batch of requests issued with queue-depth overlap.
+
+        ``queue_depth`` caps the submitter's in-flight requests; the device
+        cannot overlap more than its own ``self.queue_depth``.
+        """
+        qd = self.queue_depth if queue_depth is None else queue_depth
+        qd = max(min(qd, self.queue_depth), 1)
         total_bytes = max(int(total_bytes), self.min_io * max(n_random + n_sequential, 1))
         bw_bound = total_bytes / self.array_bandwidth
-        iops_bound = n_random * self.latency / self.queue_depth
+        iops_bound = n_random * self.latency / qd
         return max(bw_bound, iops_bound)
 
 
@@ -53,7 +60,8 @@ class NVMeModel:
 class IOStats:
     """Exact I/O accounting + modeled device time."""
 
-    n_reads: int = 0
+    n_reads: int = 0              # block-granular read count (I/O units)
+    n_requests: int = 0           # device requests (drops under coalescing)
     n_writes: int = 0
     n_sequential_reads: int = 0
     bytes_read: int = 0
@@ -70,14 +78,33 @@ class IOStats:
 
     def record_read(self, nbytes: int, t: float, sequential: bool = False) -> None:
         self.n_reads += 1
+        self.n_requests += 1
         if sequential:
             self.n_sequential_reads += 1
         self.bytes_read += int(nbytes)
         self.modeled_read_time += t
         self.size_histogram[_bucket(nbytes)] += 1
 
+    def record_run_batch(self, nbytes: int, n_block_reads: int,
+                         n_sequential: int, request_sizes, t: float) -> None:
+        """Account one batch of coalesced multi-block requests.
+
+        ``n_reads`` stays block-granular (parity with the per-block path);
+        ``n_requests`` counts the merged device requests; the histogram
+        records the *request* sizes, so coalescing visibly shifts it toward
+        larger I/Os.
+        """
+        self.n_reads += int(n_block_reads)
+        self.n_requests += len(request_sizes)
+        self.n_sequential_reads += int(n_sequential)
+        self.bytes_read += int(nbytes)
+        self.modeled_read_time += t
+        for s in request_sizes:
+            self.size_histogram[_bucket(s)] += 1
+
     def record_write(self, nbytes: int, t: float) -> None:
         self.n_writes += 1
+        self.n_requests += 1
         self.bytes_written += int(nbytes)
         self.modeled_write_time += t
 
@@ -110,7 +137,8 @@ class IOStats:
         return self.bytes_read / self.modeled_read_time
 
     def merge(self, other: "IOStats") -> "IOStats":
-        for f in ("n_reads", "n_writes", "n_sequential_reads", "bytes_read",
+        for f in ("n_reads", "n_requests", "n_writes", "n_sequential_reads",
+                  "bytes_read",
                   "bytes_written", "buffer_hits", "buffer_misses",
                   "cache_hits", "cache_misses"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
@@ -122,8 +150,11 @@ class IOStats:
     def summary(self) -> dict:
         return {
             "n_reads": self.n_reads,
+            "n_requests": self.n_requests,
             "n_writes": self.n_writes,
             "n_sequential_reads": self.n_sequential_reads,
+            "sequential_fraction": round(
+                self.n_sequential_reads / self.n_reads, 4) if self.n_reads else 0.0,
             "bytes_read": self.bytes_read,
             "bytes_written": self.bytes_written,
             "modeled_io_time_s": round(self.modeled_io_time, 6),

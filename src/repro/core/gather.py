@@ -82,38 +82,61 @@ class FeatureGatherer:
         return outs, miss_lists
 
     def _block_fill(self, miss_lists, outs) -> None:
-        """Bucket misses by feature block; one block-wise read per block."""
+        """Bucket misses by feature block; one block-wise read per block.
+
+        The per-group scatter is vectorized: block reads only *collect*
+        (node, value) pairs per minibatch; at the end one concatenate +
+        one ``searchsorted`` + one fancy-index scatter per minibatch moves
+        everything into the contiguous outputs (G-2), and the cache sees
+        a single batched admit.
+        """
         miss_nodes = [m for m, _ in miss_lists]
         blocks = [self.store.block_of(m) for m in miss_nodes]
         bck = build_bucket(miss_nodes, blocks)
-        if self.prefetcher is not None:
-            self.prefetcher.plan(bck.row_blocks)
         rpb = self.store.rows_per_block
-        for r in range(bck.n_rows):
-            b = int(bck.row_blocks[r])
-            rows = None
-            if b not in self.buffer and self.prefetcher is not None:
-                rows = self.prefetcher.take(b)
-                if rows is not None:
-                    self.buffer.stats.buffer_misses += 1
-                    self.buffer.put(b, rows)
-            if rows is None:
-                rows = self.buffer.get(b, self.store.read_block)
-            admitted_nodes = []
-            admitted_rows = []
-            for g in range(bck.row_ptr[r], bck.row_ptr[r + 1]):
-                j = int(bck.mb_ids[g])
-                g_nodes = bck.nodes[bck.group_ptr[g]:bck.group_ptr[g + 1]]
-                local = g_nodes - b * rpb
-                vals = rows[local]
-                # scatter into this minibatch's contiguous output (G-2)
-                mnodes, mpos = miss_lists[j]
-                where = np.searchsorted(mnodes, g_nodes)
-                # mnodes sorted unique (inputs are unique per mb)
-                outs[j][mpos[where]] = vals
-                admitted_nodes.append(g_nodes)
-                admitted_rows.append(vals)
-            if self.cache is not None and admitted_nodes:
-                an = np.concatenate(admitted_nodes)
-                ar = np.concatenate(admitted_rows)
-                self.cache.admit(an, ar)
+        per_mb_nodes: list[list[np.ndarray]] = [[] for _ in miss_lists]
+        per_mb_vals: list[list[np.ndarray]] = [[] for _ in miss_lists]
+        all_nodes: list[np.ndarray] = []
+        all_vals: list[np.ndarray] = []
+        try:
+            if self.prefetcher is not None:
+                self.prefetcher.plan(self.buffer.absent(bck.row_blocks))
+            for r in range(bck.n_rows):
+                b = int(bck.row_blocks[r])
+                rows = self._load_block(b)
+                g0, g1 = int(bck.row_ptr[r]), int(bck.row_ptr[r + 1])
+                p0, p1 = int(bck.group_ptr[g0]), int(bck.group_ptr[g1])
+                blk_nodes = bck.nodes[p0:p1]      # all mbs' nodes in block b
+                vals = rows[blk_nodes - b * rpb]  # one gather per block
+                bounds = (bck.group_ptr[g0 + 1:g1] - p0)
+                for off, (gn, gv) in enumerate(zip(np.split(blk_nodes, bounds),
+                                                   np.split(vals, bounds))):
+                    j = int(bck.mb_ids[g0 + off])
+                    per_mb_nodes[j].append(gn)
+                    per_mb_vals[j].append(gv)
+                if self.cache is not None:
+                    all_nodes.append(blk_nodes)
+                    all_vals.append(vals)
+        finally:
+            if self.prefetcher is not None:
+                self.prefetcher.reset()
+        for j, (mnodes, mpos) in enumerate(miss_lists):
+            if not per_mb_nodes[j]:
+                continue
+            g_nodes = np.concatenate(per_mb_nodes[j])
+            g_vals = np.concatenate(per_mb_vals[j])
+            # mnodes sorted unique (inputs are unique per mb)
+            where = np.searchsorted(mnodes, g_nodes)
+            outs[j][mpos[where]] = g_vals
+        if self.cache is not None and all_nodes:
+            self.cache.admit(np.concatenate(all_nodes),
+                             np.concatenate(all_vals))
+
+    def _load_block(self, b: int) -> np.ndarray:
+        if b not in self.buffer and self.prefetcher is not None:
+            rows = self.prefetcher.fetch(b)
+            if rows is not None:
+                self.buffer.stats.buffer_misses += 1
+                self.buffer.put(b, rows)
+                return rows
+        return self.buffer.get(b, self.store.read_block)

@@ -49,11 +49,18 @@ class HyperbatchSampler:
             bck = build_bucket(frontiers, primary)
             sampled = [np.full((len(f), fanout), -1, dtype=np.int64)
                        for f in frontiers]
-            if self.prefetcher is not None:
-                self.prefetcher.plan(bck.row_blocks)
-            for r in range(bck.n_rows):  # ascending blocks (line 7)
-                self._process_row(bck, r, frontiers, sampled,
-                                  fanout, epoch, hop)
+            try:
+                if self.prefetcher is not None:
+                    # the hop's full visit order is known now; plan only
+                    # blocks not already buffer-resident so every planned
+                    # block is consumed exactly once (no slot leak)
+                    self.prefetcher.plan(self.buffer.absent(bck.row_blocks))
+                for r in range(bck.n_rows):  # ascending blocks (line 7)
+                    self._process_row(bck, r, frontiers, sampled,
+                                      fanout, epoch, hop)
+            finally:
+                if self.prefetcher is not None:
+                    self.prefetcher.reset()  # hop boundary: drop stale plan
             frontiers = self._advance(mfgs, frontiers, sampled)
         return mfgs
 
@@ -94,7 +101,7 @@ class HyperbatchSampler:
 
     def _load(self, block_id: int, pin: bool) -> GraphBlock:
         if block_id not in self.buffer and self.prefetcher is not None:
-            blk = self.prefetcher.take(block_id)
+            blk = self.prefetcher.fetch(block_id)
             if blk is not None:
                 # the I/O already happened on the prefetch thread: count a miss
                 self.buffer.stats.buffer_misses += 1

@@ -1,0 +1,252 @@
+"""Coalesced multi-block I/O scheduler (paper §1's thesis, taken seriously).
+
+Once the bucket matrix is built, the ascending block visit order of a
+whole hop is known in advance (``async_io`` docstring).  The per-block
+path wastes that knowledge: it issues one ``block_size`` request per
+block, serialized behind the store lock, charged at per-request latency.
+This module turns the plan into *coalesced* requests:
+
+* :func:`coalesce` merges runs of adjacent block ids into single large
+  sequential reads, bounded by ``max_coalesce_bytes`` per request;
+* :class:`CoalescedReader` submits the independent runs through a small
+  reader pool at a configurable queue depth and charges device time once
+  per submitted plan via :meth:`NVMeModel.batch_time` (queue-depth
+  overlap) instead of summed per-request ``request_time``.
+
+Accounting semantics (see :meth:`IOStats.record_run_batch`): ``n_reads``
+stays block-granular so it is directly comparable with the per-block
+path; ``n_requests`` counts merged device requests; within a request
+every block after the head streams sequentially, while request *heads*
+are charged random — concurrent queue-depth submission gives no ordering
+guarantee between requests at the device.  Bytes are identical to the
+per-block path by construction (a run of ``k`` blocks reads exactly
+``k * block_size`` bytes).
+
+``CoalescedReader`` implements the same consumer protocol as
+:class:`repro.core.async_io.BlockPrefetcher` (``plan`` / ``fetch`` /
+``reset`` / ``close``) so the sampler and gatherer are agnostic to which
+one the engine wired in.  With ``workers == 0`` the plan is executed
+lazily on the consumer thread (deterministic synchronous mode, still
+coalesced); with ``workers >= 1`` a pool reads ahead, bounded to
+``queue_depth`` undelivered runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    """One coalesced device request: ``count`` adjacent blocks from ``start``.
+
+    Within a request every block after the head streams sequentially;
+    request *heads* are always charged random — concurrent queue-depth
+    submission gives no ordering guarantee between requests at the device
+    (this holds for chunks split off a longer run by ``max_coalesce_bytes``
+    too: they land on different pool workers).
+    """
+
+    start: int
+    count: int
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.count
+
+
+def coalesce(block_ids, block_size: int,
+             max_coalesce_bytes: int) -> list[Run]:
+    """Merge an ascending unique block list into coalesced runs.
+
+    ``max_coalesce_bytes <= block_size`` (or 0) yields one single-block
+    run per id — batched submission without merging.
+    """
+    ids = np.asarray(block_ids, dtype=np.int64)
+    if ids.size == 0:
+        return []
+    if np.any(np.diff(ids) <= 0):
+        ids = np.unique(ids)
+    cap = max(int(max_coalesce_bytes // block_size), 1) if max_coalesce_bytes > 0 else 1
+    gaps = np.nonzero(np.diff(ids) != 1)[0] + 1
+    starts = np.concatenate([[0], gaps])
+    ends = np.concatenate([gaps, [ids.size]])
+    runs: list[Run] = []
+    for s, e in zip(starts.tolist(), ends.tolist()):
+        off = s
+        while off < e:
+            c = min(e - off, cap)
+            runs.append(Run(int(ids[off]), c))
+            off += c
+    return runs
+
+
+def plan_cost(runs: list[Run], block_size: int, device,
+              queue_depth: int) -> tuple[int, int, int, float]:
+    """(total_bytes, n_blocks, n_sequential_blocks, modeled_time) of a plan."""
+    n_blocks = sum(r.count for r in runs)
+    n_random = len(runs)
+    n_seq = n_blocks - n_random
+    total = n_blocks * block_size
+    t = device.batch_time(total, n_random=n_random, n_sequential=n_seq,
+                          queue_depth=queue_depth)
+    return total, n_blocks, n_seq, t
+
+
+class CoalescedReader:
+    """Plan-driven coalesced reader over one block store.
+
+    The store must provide ``block_size``, ``stats``, ``device``,
+    ``read_run(start, count)`` (one memmap slice + vectorized decode, no
+    accounting) and ``account_runs(runs, queue_depth)``.
+    """
+
+    def __init__(self, store, max_coalesce_bytes: int,
+                 queue_depth: int = 8, workers: int = 2):
+        self.store = store
+        self.max_coalesce_bytes = int(max_coalesce_bytes)
+        self.queue_depth = max(int(queue_depth), 1)
+        self.workers = max(int(workers), 0)
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: deque[Run] = deque()
+        self._ready: dict[int, object] = {}       # block_id -> decoded block
+        self._run_of: dict[int, int] = {}         # block_id -> run start
+        self._remaining: dict[int, int] = {}      # run start -> unfetched blocks
+        self._ready_runs = 0                      # reserved/undelivered runs
+        self._gen = 0
+        self._stop = False
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"io-sched-{i}")
+            for i in range(self.workers)]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------ plan
+    def plan(self, block_ids) -> None:
+        """Submit a hop's block visit plan (ascending, not buffer-resident).
+
+        Coalesces, charges the whole batch once at queue-depth overlap,
+        and queues the runs for the reader pool (or lazy execution).
+        """
+        ids = np.asarray(list(block_ids) if not isinstance(block_ids, np.ndarray)
+                         else block_ids, dtype=np.int64)
+        if ids.size == 0:
+            return
+        runs = coalesce(ids, self.store.block_size, self.max_coalesce_bytes)
+        self.store.account_runs(runs, self.queue_depth)
+        with self._cv:
+            for r in runs:
+                self._pending.append(r)
+                self._remaining[r.start] = r.count
+                for b in range(r.start, r.stop):
+                    self._run_of[b] = r.start
+            self._cv.notify_all()
+
+    # ------------------------------------------------------------ consume
+    def fetch(self, block_id: int, timeout: float = 30.0):
+        """Return the decoded block if it is part of the current plan.
+
+        Blocks until its run is read (planned blocks are never re-read
+        elsewhere, so waiting — not falling back — keeps bytes identical
+        to the per-block path).  Returns ``None`` for unplanned ids; the
+        caller falls back to a direct ``read_block``.
+        """
+        b = int(block_id)
+        with self._cv:
+            run = self._run_of.get(b)
+            if run is None:
+                return None
+            if self.workers == 0:
+                while b not in self._ready and self._pending:
+                    self._execute_locked(self._pending.popleft())
+            else:
+                # a failed worker read unplans the run, so also wake on
+                # b leaving the plan — fail fast instead of full timeout
+                self._cv.wait_for(
+                    lambda: b in self._ready or self._stop
+                    or b not in self._run_of, timeout=timeout)
+            blk = self._ready.pop(b, None)
+            self._run_of.pop(b, None)
+            # release b's share of the run's queue-depth slot whether or
+            # not the block was delivered (timeout/close must not leak
+            # slots and wedge the reader pool until the next reset)
+            if run in self._remaining:
+                left = self._remaining[run] - 1
+                if left <= 0:
+                    self._remaining.pop(run, None)
+                    self._ready_runs = max(self._ready_runs - 1, 0)
+                else:
+                    self._remaining[run] = left
+            self._cv.notify_all()
+            return blk  # None -> caller falls back to a direct read
+
+    # alias kept for symmetry with BlockPrefetcher's non-blocking API
+    take = fetch
+
+    def reset(self) -> None:
+        """Drop any undelivered plan state (called at hop boundaries)."""
+        with self._cv:
+            self._gen += 1
+            self._pending.clear()
+            self._ready.clear()
+            self._run_of.clear()
+            self._remaining.clear()
+            self._ready_runs = 0
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=2.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------ internals
+    def _execute_locked(self, run: Run) -> None:
+        """Lazy path (workers == 0): read a run on the consumer thread."""
+        blocks = self.store.read_run(run.start, run.count)
+        for i, blk in enumerate(blocks):
+            self._ready[run.start + i] = blk
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                self._cv.wait_for(
+                    lambda: self._stop or (self._pending
+                                           and self._ready_runs < self.queue_depth))
+                if self._stop:
+                    return
+                gen = self._gen
+                run = self._pending.popleft()
+                self._ready_runs += 1  # reserve the slot before reading
+            try:
+                blocks = self.store.read_run(run.start, run.count)
+            except Exception:
+                blocks = None  # surfaced below; the worker must survive
+            with self._cv:
+                if gen != self._gen or self._stop:
+                    continue  # stale: reset() already zeroed the counters
+                if blocks is None:
+                    # failed read: release the slot and unplan the run so
+                    # waiting consumers fail fast and fall back to a
+                    # direct read_block (which raises the real error)
+                    self._ready_runs = max(self._ready_runs - 1, 0)
+                    self._remaining.pop(run.start, None)
+                    for b in range(run.start, run.stop):
+                        self._run_of.pop(b, None)
+                        self._ready.pop(b, None)
+                else:
+                    for i, blk in enumerate(blocks):
+                        self._ready[run.start + i] = blk
+                self._cv.notify_all()

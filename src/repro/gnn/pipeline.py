@@ -64,6 +64,32 @@ class OverlapReport:
     def serial_estimate_s(self) -> float:
         return self.prepare_wall_s + self.train_wall_s
 
+    def io_summary(self) -> dict:
+        """Aggregate I/O schedule quality across the epoch's hyperbatches.
+
+        Surfaces the coalescing scheduler's effect (``repro.core.io_sched``):
+        block-granular reads vs merged device requests, sequential fraction,
+        and modeled device time.
+        """
+        reads = requests = seq = bytes_ = 0
+        modeled = 0.0
+        for r in self.prepare_reports:
+            for io in (r.sample_io, r.gather_io):
+                reads += io.get("n_reads", 0)
+                requests += io.get("n_requests", 0)
+                seq += io.get("n_sequential", 0)
+                bytes_ += io.get("bytes", 0)
+                modeled += io.get("modeled_s", 0.0)
+        return {
+            "n_reads": reads,
+            "n_requests": requests,
+            "n_sequential_reads": seq,
+            "sequential_fraction": round(seq / reads, 4) if reads else 0.0,
+            "coalesce_factor": round(reads / requests, 3) if requests else 0.0,
+            "bytes_read": bytes_,
+            "modeled_io_s": modeled,
+        }
+
     def summary(self) -> dict:
         return {
             "epoch_wall_s": self.epoch_wall_s,
@@ -73,6 +99,7 @@ class OverlapReport:
             "hidden_fraction": self.hidden_fraction,
             "n_hyperbatches": self.n_hyperbatches,
             "n_minibatches": self.n_minibatches,
+            "io": self.io_summary(),
         }
 
 

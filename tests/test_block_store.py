@@ -81,6 +81,68 @@ def test_feature_node_granular_accounting(tmp_path):
     assert store.stats.bytes_read == 3 * 4096  # 4K min unit per row
 
 
+def test_graph_decode_many_matches_decode(tmp_path):
+    """Vectorized multi-block decode == per-block decode, incl. splits."""
+    n = 64
+    deg = np.full(n, 4)
+    deg[0] = 3000  # split object spanning several 4K blocks
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    rng = np.random.default_rng(0)
+    indices = rng.integers(0, n, indptr[-1])
+    store = GraphBlockStore.build(str(tmp_path / "g.blk"), indptr, indices,
+                                  block_size=4096)
+    batch = store.read_run(0, store.n_blocks)
+    assert len(batch) == store.n_blocks
+    for b in range(store.n_blocks):
+        ref = store.read_block(b)
+        got = batch[b]
+        assert got.block_id == b
+        assert np.array_equal(ref.node_ids, got.node_ids)
+        assert np.array_equal(ref.indptr, got.indptr)
+        assert np.array_equal(ref.indices, got.indices)
+        assert np.array_equal(ref.total_degree, got.total_degree)
+
+
+def test_read_blocks_accounting(tmp_path):
+    indptr, indices = rmat_graph(500, 4000, seed=1)
+    store = GraphBlockStore.build(str(tmp_path / "g.blk"), indptr, indices,
+                                  block_size=4096)
+    ids = np.arange(store.n_blocks)
+    out = store.read_blocks(ids, max_coalesce_bytes=4 * 4096)
+    assert [b.block_id for b in out] == ids.tolist()
+    # block-granular read count + coalesced request count
+    assert store.stats.n_reads == store.n_blocks
+    assert store.stats.n_requests == -(-store.n_blocks // 4)
+    assert store.stats.bytes_read == store.n_blocks * 4096
+    assert store.stats.n_sequential_reads == \
+        store.n_blocks - store.stats.n_requests
+
+
+def test_feature_read_blocks_matches_read_block(tmp_path):
+    feats = np.random.default_rng(0).normal(size=(100, 16)).astype(np.float32)
+    store = FeatureBlockStore.build(str(tmp_path / "f.blk"), feats,
+                                    block_size=1024)
+    batch = store.read_blocks(np.arange(store.n_blocks),
+                              max_coalesce_bytes=8 * 1024)
+    for b in range(store.n_blocks):
+        assert np.array_equal(batch[b], store.read_block(b))
+
+
+def test_feature_build_streams_with_tail_padding(tmp_path):
+    """Streaming build: identical bytes to the old fully padded copy,
+    including for non-contiguous feature input."""
+    feats = np.random.default_rng(1).normal(size=(103, 12)).astype(np.float32)
+    strided = np.asfortranarray(feats)  # non-C-contiguous input
+    store = FeatureBlockStore.build(str(tmp_path / "f.blk"), strided,
+                                    block_size=256)
+    raw = np.fromfile(str(tmp_path / "f.blk"), dtype=np.float32)
+    padded = np.zeros((store.n_blocks * store.rows_per_block, 12), np.float32)
+    padded[:103] = feats
+    assert np.array_equal(raw, padded.ravel())
+    assert np.allclose(np.asarray(store._mm[:103]), feats)
+
+
 def test_device_model_regimes():
     dev = NVMeModel()
     # many small random reads are IOPS-bound
