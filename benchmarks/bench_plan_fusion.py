@@ -1,0 +1,130 @@
+"""Cross-hop plan fusion: barriered vs fused staged prepare.
+
+The staged ``PrepareSession`` (``repro.core.session``) submits hop k+1's
+I/O plan while hop k's tail blocks are still being consumed and the
+gather plan as soon as the final frontier exists — no per-hop ``reset()``
+barrier — so back-to-back submissions share one device queue
+(``PlanStream``): the prepare pays ``max(sum bw, sum iops)`` instead of
+the barriered ``sum of per-hop max(bw, iops)``.
+
+The workload constructs the regime mix where that fusion pays: graph
+blocks are small (scattered sampling touch → every hop latency-bound)
+while feature blocks are large (the paper's Fig-4 I/O-unit tuning →
+gather bandwidth-bound), both stores on one NVMe array.  With a barrier
+the device alternates between starving its bandwidth (sampling hops) and
+starving its queue (gather); fused, the two rooflines overlap.
+
+MFG/feature/bytes parity between the two schedules is asserted (the
+speedup must be free), and the fused prepare must stay >= 1.3x — the
+acceptance gate tracked in ``BENCH_fusion.json`` by ``run.py --quick``.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .common import WORKDIR, emit, quick_val
+
+from repro.core import AgnesConfig, AgnesEngine, FeatureBlockStore, NVMeModel
+from repro.data import build_dataset
+from repro.data.synth import make_features
+
+MIN_SPEEDUP = 1.3
+
+
+def _build(n_nodes, avg_degree, g_block, f_block, dim):
+    """Graph store at small blocks + feature store at large blocks."""
+    ds = build_dataset(f"fusion{n_nodes}", WORKDIR, dim=16,
+                       block_size=g_block, n_nodes=n_nodes,
+                       avg_degree=avg_degree)
+    fpath = os.path.join(WORKDIR, f"fusion{n_nodes}_{dim}_{f_block}.feat")
+    if not os.path.exists(fpath + ".meta.json"):
+        feats, _ = make_features(n_nodes, dim, seed=0)
+        FeatureBlockStore.build(fpath, feats, block_size=f_block)
+    return ds, fpath
+
+
+def _engine(ds, fpath, *, g_block, fusion, fanouts, mb, n_mb):
+    dev = NVMeModel()  # one array: graph + feature plans share the stream
+    g, _ = ds.reopen_stores(device=dev)
+    f = FeatureBlockStore.open(fpath, device=dev)
+    cfg = AgnesConfig(block_size=g_block, minibatch_size=mb,
+                      hyperbatch_size=n_mb, fanouts=fanouts,
+                      graph_buffer_bytes=16 << 20,
+                      feature_buffer_bytes=16 << 20,
+                      feature_cache_rows=0, async_io=False,
+                      plan_fusion=fusion)
+    return AgnesEngine(g, f, cfg)
+
+
+def _measure(eng, targets):
+    prepared = eng.prepare(targets, epoch=0)
+    g, f = eng.graph_store.stats, eng.feature_store.stats
+    return prepared, {
+        "modeled_prepare_io_s": g.modeled_read_time + f.modeled_read_time,
+        "sample_io_s": g.modeled_read_time,
+        "gather_io_s": f.modeled_read_time,
+        "bytes_read": int(g.bytes_read + f.bytes_read),
+        "n_requests": int(g.n_requests + f.n_requests),
+    }
+
+
+def run() -> dict:
+    n_nodes = quick_val(80_000, 20_000)
+    g_block = 4096
+    f_block = quick_val(256 << 10, 128 << 10)
+    dim = quick_val(96, 64)
+    mb = quick_val(48, 24)
+    fanouts = (4, 4)
+    ds, fpath = _build(n_nodes, 6, g_block, f_block, dim)
+    rng = np.random.default_rng(0)
+    targets = [rng.choice(n_nodes, mb, replace=False) for _ in range(2)]
+
+    barrier = _engine(ds, fpath, g_block=g_block, fusion=False,
+                      fanouts=fanouts, mb=mb, n_mb=2)
+    p0, before = _measure(barrier, targets)
+    fused = _engine(ds, fpath, g_block=g_block, fusion=True,
+                    fanouts=fanouts, mb=mb, n_mb=2)
+    p1, after = _measure(fused, targets)
+
+    # the fusion must be free: byte-identical MFGs, features, bytes_read
+    for a, b in zip(p1, p0):
+        for x, y in zip(a.mfg.nodes, b.mfg.nodes):
+            assert np.array_equal(x, y), "fusion changed the MFGs"
+        for lx, ly in zip(a.mfg.layers, b.mfg.layers):
+            assert np.array_equal(lx.nbr_idx, ly.nbr_idx)
+            assert np.array_equal(lx.self_idx, ly.self_idx)
+        assert np.allclose(a.features, b.features), \
+            "fusion changed gathered features"
+    assert after["bytes_read"] == before["bytes_read"], \
+        (after["bytes_read"], before["bytes_read"])
+
+    speedup = before["modeled_prepare_io_s"] / max(
+        after["modeled_prepare_io_s"], 1e-12)
+    # acceptance gate (deterministic: modeled device time of fixed plans)
+    assert speedup >= MIN_SPEEDUP, \
+        f"plan fusion regression: {speedup:.2f}x < {MIN_SPEEDUP}x"
+
+    n_stages = len(fused.last_session.plans)
+    emit("fusion/barriered_ms", before["modeled_prepare_io_s"] * 1e3,
+         f"sample={before['sample_io_s']*1e3:.2f}ms "
+         f"gather={before['gather_io_s']*1e3:.2f}ms")
+    emit("fusion/fused_ms", after["modeled_prepare_io_s"] * 1e3,
+         f"{n_stages} staged plans")
+    emit("fusion/speedup", speedup,
+         f"n_requests={before['n_requests']}->{after['n_requests']}")
+    barrier.close()
+    fused.close()
+    return {
+        "workload": {"n_nodes": n_nodes, "graph_block": g_block,
+                     "feature_block": f_block, "dim": dim,
+                     "fanouts": list(fanouts)},
+        "barriered": before, "fused": after,
+        "n_staged_plans": n_stages,
+        "speedup": round(speedup, 3),
+    }
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,7 +1,7 @@
 """Benchmark harness: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] \
-      [fig2 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 pipeline io]
+      [fig2 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 pipeline io fusion]
 
 Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
 
@@ -21,7 +21,8 @@ import time
 from . import (bench_fig2_breakdown, bench_fig4_io_unit, bench_fig6_eq1,
                bench_fig7_distdgl, bench_fig8_hyperbatch, bench_fig9_sweep,
                bench_fig10_sensitivity, bench_fig11_bw, bench_fig12_accuracy,
-               bench_io_sched, bench_pipeline_overlap, common)
+               bench_io_sched, bench_pipeline_overlap, bench_plan_fusion,
+               common)
 
 ALL = {
     "fig2": bench_fig2_breakdown.run,
@@ -35,11 +36,15 @@ ALL = {
     "fig12": bench_fig12_accuracy.run,
     "pipeline": bench_pipeline_overlap.run,
     "io": bench_io_sched.run,
+    "fusion": bench_plan_fusion.run,
 }
 
 OUT_PATH = os.environ.get(
     "REPRO_BENCH_OUT",
     os.path.join(os.path.dirname(__file__), "..", "BENCH_io.json"))
+FUSION_OUT_PATH = os.environ.get(
+    "REPRO_BENCH_FUSION_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_fusion.json"))
 
 
 def main() -> None:
@@ -66,13 +71,24 @@ def main() -> None:
         results[name] = entry
         print(f"# {name} done in {dt:.1f}s", flush=True)
     if quick:
-        payload = {"quick": True,
-                   "io": results.get("io", {}).get("metrics"),
-                   "benchmarks": results}
-        out = os.path.abspath(OUT_PATH)
-        with open(out, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"# wrote {out}", flush=True)
+        if "io" in results:
+            # only overwrite the tracked trajectory when the io benchmark
+            # actually ran — a subset run must not clobber it with null
+            payload = {"quick": True,
+                       "io": results.get("io", {}).get("metrics"),
+                       "benchmarks": results}
+            out = os.path.abspath(OUT_PATH)
+            with open(out, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"# wrote {out}", flush=True)
+        if "fusion" in results:
+            # fused vs barriered prepare trajectory, tracked PR over PR
+            fout = os.path.abspath(FUSION_OUT_PATH)
+            with open(fout, "w") as f:
+                json.dump({"quick": True,
+                           "fusion": results["fusion"].get("metrics")},
+                          f, indent=2)
+            print(f"# wrote {fout}", flush=True)
 
 
 if __name__ == '__main__':

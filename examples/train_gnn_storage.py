@@ -38,6 +38,17 @@ def main():
                     help="in-flight coalesced requests")
     ap.add_argument("--io-workers", type=int, default=2,
                     help="reader pool size for the I/O scheduler")
+    ap.add_argument("--no-fusion", action="store_true",
+                    help="disable cross-hop plan fusion (pre-session "
+                         "schedule: one plan per hop, barrier per hop)")
+    ap.add_argument("--adaptive-io", action="store_true",
+                    help="resize io_queue_depth per hyperbatch from the "
+                         "measured exposed-prepare fraction (needs "
+                         "--pipeline)")
+    ap.add_argument("--place-features", default=None,
+                    choices=["jnp", "pallas"],
+                    help="land prepared features device-resident via "
+                         "PreparedMinibatch.to_device before training")
     args = ap.parse_args()
 
     if args.backend == "pallas":
@@ -54,11 +65,14 @@ def main():
     def run(name, engine):
         tr = GNNTrainer(arch=args.arch, in_dim=128, hidden=128,
                         n_classes=16, n_layers=3, seed=3,
-                        backend=args.backend)
+                        backend=args.backend,
+                        feature_placement=args.place_features)
         tr.labels = ds.labels
         io_time = 0.0
         pipelined = args.pipeline and hasattr(engine, "plan_epoch")
-        executor = PipelinedExecutor(engine, tr) if pipelined else None
+        executor = (PipelinedExecutor(engine, tr,
+                                      adaptive_io=args.adaptive_io)
+                    if pipelined else None)
         for epoch in range(args.epochs):
             overlap = ""
             if pipelined:
@@ -94,7 +108,8 @@ def main():
         minibatch_size=1000, hyperbatch_size=8,
         graph_buffer_bytes=32 << 20, feature_buffer_bytes=32 << 20,
         max_coalesce_bytes=args.coalesce_bytes,
-        io_queue_depth=args.io_queue_depth, io_workers=args.io_workers))
+        io_queue_depth=args.io_queue_depth, io_workers=args.io_workers,
+        plan_fusion=not args.no_fusion))
     acc_a, io_a = run("agnes", agnes)
     agnes.close()
 

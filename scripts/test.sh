@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verify — runs the suite exactly as ROADMAP.md specifies.
 # RUN_BENCH=1 additionally runs the --quick benchmark smoke tier, which
-# writes BENCH_io.json (I/O scheduler before/after numbers) at repo root.
+# writes BENCH_io.json (I/O scheduler before/after numbers) and
+# BENCH_fusion.json (fused vs barriered staged prepare, >= 1.3x asserted)
+# at repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -16,11 +16,13 @@ from .bucket import Bucket, build_bucket
 from .buffer import BlockBuffer
 from .device_model import IOStats, NVMeModel
 from .feature_cache import FeatureCache
-from .gather import FeatureGatherer
-from .hyperbatch import HyperbatchSampler
-from .io_sched import CoalescedReader, Run, coalesce, plan_cost
+from .gather import FeatureGatherer, GatherPlan
+from .hyperbatch import HopPlan, HyperbatchSampler
+from .io_sched import CoalescedReader, PlanStream, Run, coalesce, plan_cost
 from .layout import apply_relabel, bfs_locality_order, degree_order
-from .sampling import MFG, MFGLayer, assemble_layer, sample_indices
+from .sampling import (MFG, MFGLayer, assemble_layer, layer_from_frontier,
+                       next_frontier, sample_indices)
+from .session import IOPlan, PrepareSession
 
 __all__ = [
     "AgnesConfig", "AgnesEngine", "PreparedMinibatch", "PrepareReport",
@@ -28,8 +30,10 @@ __all__ = [
     "GNNDriveLike", "MariusLike", "OutreLike", "DEFAULT_BLOCK_SIZE",
     "FeatureBlockStore", "GraphBlock", "GraphBlockStore", "Bucket",
     "build_bucket", "BlockBuffer", "IOStats", "NVMeModel", "FeatureCache",
-    "CoalescedReader", "Run", "coalesce", "plan_cost",
-    "FeatureGatherer", "HyperbatchSampler", "apply_relabel",
+    "CoalescedReader", "PlanStream", "Run", "coalesce", "plan_cost",
+    "FeatureGatherer", "GatherPlan", "HopPlan", "HyperbatchSampler",
+    "IOPlan", "PrepareSession", "apply_relabel",
     "bfs_locality_order", "degree_order", "MFG", "MFGLayer",
-    "assemble_layer", "sample_indices",
+    "assemble_layer", "layer_from_frontier", "next_frontier",
+    "sample_indices",
 ]

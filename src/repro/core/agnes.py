@@ -20,13 +20,14 @@ import numpy as np
 
 from .async_io import BlockPrefetcher
 from .block_store import DEFAULT_BLOCK_SIZE, FeatureBlockStore, GraphBlockStore
-from .io_sched import CoalescedReader
+from .io_sched import CoalescedReader, PlanStream
 from .buffer import BlockBuffer
 from .device_model import IOStats, NVMeModel
 from .feature_cache import FeatureCache
 from .gather import FeatureGatherer
 from .hyperbatch import HyperbatchSampler
 from .sampling import MFG
+from .session import PrepareSession
 
 
 @dataclasses.dataclass
@@ -51,6 +52,11 @@ class AgnesConfig:
     max_coalesce_bytes: int = 8 << 20
     io_queue_depth: int = 8              # in-flight coalesced requests
     io_workers: int = 2                  # reader pool size (async_io only)
+    # cross-hop plan fusion (core/session.py): submit hop k+1's plan while
+    # hop k's tail is still being consumed, no per-hop reset barrier, one
+    # fused PlanStream per device.  False = pre-session schedule (one plan
+    # per hop, barrier at every hop boundary) — bytes/MFGs identical.
+    plan_fusion: bool = True
     seed: int = 0
 
     def buffer_blocks(self, nbytes: int) -> int:
@@ -65,6 +71,33 @@ class PreparedMinibatch:
     @property
     def targets(self) -> np.ndarray:
         return self.mfg.nodes[0]
+
+    def to_device(self, device=None, backend: str = "jnp",
+                  pad_multiple: int = 128) -> "PreparedMinibatch":
+        """Placement hook: land the gathered features as a jax device array.
+
+        ``backend="pallas"`` builds the jit-stable *padded* feature block
+        on device through the Pallas ``gather_rows`` kernel path (HBM→VMEM
+        block DMA on TPU, interpret mode elsewhere) — the GIDS-style
+        device-resident landing, with ``pad_mfg`` recognizing the already-
+        padded block and skipping its host round-trip; ``"jnp"`` is a
+        plain host→device transfer.  The MFG index arrays stay numpy
+        (``pad_mfg`` converts them at jit boundaries).
+        """
+        import jax
+        import jax.numpy as jnp
+
+        feats = jnp.asarray(self.features)
+        n = feats.shape[0]
+        if backend == "pallas" and n:
+            from ..kernels.ops import gather_rows
+            padded_n = -(-n // pad_multiple) * pad_multiple
+            idx = jnp.arange(padded_n, dtype=jnp.int32)
+            rows = gather_rows(feats, jnp.minimum(idx, n - 1))
+            feats = jnp.where((idx < n)[:, None], rows, 0)
+        if device is not None:
+            feats = jax.device_put(feats, device)
+        return PreparedMinibatch(self.mfg, feats)
 
 
 @dataclasses.dataclass
@@ -110,13 +143,21 @@ class AgnesEngine:
             # coalesced plan-driven scheduler (default).  With async_io off
             # the plan executes lazily on the consumer thread — still
             # coalesced and batch-charged, but fully deterministic.
+            # Readers over stores sharing one NVMe array share a PlanStream
+            # so back-to-back graph and feature plans fuse in the device
+            # queue (a single submission costs exactly the per-plan batch).
             workers = cfg.io_workers if cfg.async_io else 0
+            g_stream = PlanStream(graph_store.device)
+            f_stream = (g_stream if feature_store.device is graph_store.device
+                        else PlanStream(feature_store.device))
             self._g_prefetch = CoalescedReader(
                 graph_store, max_coalesce_bytes=cfg.max_coalesce_bytes,
-                queue_depth=cfg.io_queue_depth, workers=workers)
+                queue_depth=cfg.io_queue_depth, workers=workers,
+                stream=g_stream)
             self._f_prefetch = CoalescedReader(
                 feature_store, max_coalesce_bytes=cfg.max_coalesce_bytes,
-                queue_depth=cfg.io_queue_depth, workers=workers)
+                queue_depth=cfg.io_queue_depth, workers=workers,
+                stream=f_stream)
         elif cfg.async_io:
             # legacy per-block read-ahead thread
             self._g_prefetch = BlockPrefetcher(
@@ -132,11 +173,20 @@ class AgnesEngine:
             feature_store, self.feature_buffer, self.feature_cache,
             prefetcher=self._f_prefetch)
         self.last_report: PrepareReport | None = None
+        self.last_session: PrepareSession | None = None
 
     # ------------------------------------------------------------ API
     def prepare(self, targets_per_mb: list[np.ndarray],
                 epoch: int = 0) -> list[PreparedMinibatch]:
-        """Data preparation for one hyperbatch (Algorithm 1)."""
+        """Data preparation for one hyperbatch (Algorithm 1).
+
+        Thin compatibility wrapper: drives a staged
+        :class:`~repro.core.session.PrepareSession` to completion (the
+        hyperbatch path); the session object is kept on
+        :attr:`last_session` for stage-level inspection.  The AGNES-No
+        ablation (``hyperbatch_enabled=False``) keeps the target-major
+        imperative path — there is no hyperbatch-wide plan to stage.
+        """
         cfg = self.config
         for p in (self._g_prefetch, self._f_prefetch):
             if p is not None:
@@ -144,19 +194,21 @@ class AgnesEngine:
         io_before = self._io_snapshot()
         t0 = time.perf_counter()
         if cfg.hyperbatch_enabled:
-            mfgs = self.sampler.sample_hyperbatch(targets_per_mb, epoch)
+            session = PrepareSession(self, targets_per_mb, epoch)
+            out = session.run()
+            self.last_session = session
+            t2 = time.perf_counter()
+            t1 = min(t0 + session.sample_wall_s, t2)
         else:
             mfgs = self.sampler.sample_per_minibatch(targets_per_mb, epoch)
-        t1 = time.perf_counter()
-        inputs = [m.input_nodes for m in mfgs]
-        if cfg.hyperbatch_enabled:
-            feats = self.gatherer.gather_hyperbatch(inputs)
-        else:
-            feats = self.gatherer.gather_per_minibatch(inputs)
-        t2 = time.perf_counter()
+            t1 = time.perf_counter()
+            feats = self.gatherer.gather_per_minibatch(
+                [m.input_nodes for m in mfgs])
+            out = [PreparedMinibatch(m, f) for m, f in zip(mfgs, feats)]
+            t2 = time.perf_counter()
         io_after = self._io_snapshot()
         self.last_report = self._report(t0, t1, t2, io_before, io_after)
-        return [PreparedMinibatch(m, f) for m, f in zip(mfgs, feats)]
+        return out
 
     def plan_epoch(self, all_targets: np.ndarray, epoch: int = 0,
                    shuffle: bool = True) -> list[list[np.ndarray]]:
@@ -186,6 +238,17 @@ class AgnesEngine:
         """Yield prepared hyperbatches covering ``all_targets`` once."""
         for mbs in self.plan_epoch(all_targets, epoch=epoch, shuffle=shuffle):
             yield self.prepare(mbs, epoch)
+
+    def set_io_queue_depth(self, queue_depth: int) -> int:
+        """Adaptive scheduler hook: resize the coalesced readers' in-flight
+        run budget between hyperbatches (``PipelinedExecutor`` drives this
+        from the measured exposed-prepare fraction)."""
+        qd = max(int(queue_depth), 1)
+        self.config.io_queue_depth = qd
+        for p in (self._g_prefetch, self._f_prefetch):
+            if p is not None and hasattr(p, "set_queue_depth"):
+                p.set_queue_depth(qd)
+        return qd
 
     def io_stats(self) -> dict:
         g = self.graph_store.stats

@@ -33,6 +33,10 @@ class BlockPrefetcher:
     ``_stop``, so ``close()`` cannot race the backlog throttle.
     """
 
+    # one plan per hop, reset barrier between hops — a PrepareSession
+    # falls back to the barriered schedule when this reader is wired in
+    supports_fusion = False
+
     def __init__(self, reader: Callable[[int], Any], depth: int = 4,
                  should_skip: Callable[[int], bool] | None = None):
         self.reader = reader
@@ -52,6 +56,9 @@ class BlockPrefetcher:
         with self._cv:
             self._plan.extend(int(b) for b in block_ids)
             self._cv.notify_all()
+
+    # staged-session alias (CoalescedReader's primary spelling)
+    submit = plan
 
     def take(self, block_id: int) -> Any | None:
         """Non-blocking: return the prefetched block if ready, else None."""

@@ -86,12 +86,23 @@ class _BlockReadBatcher:
             out.extend(self.read_run(r.start, r.count))
         return out
 
-    def account_runs(self, runs: list[Run], queue_depth: int) -> None:
-        """Charge a submitted plan of coalesced runs at queue-depth overlap."""
+    def account_runs(self, runs: list[Run], queue_depth: int,
+                     stream=None) -> None:
+        """Charge a submitted plan of coalesced runs.
+
+        With ``stream=None`` the plan is an isolated batch at queue-depth
+        overlap (:func:`plan_cost`).  With a :class:`PlanStream` the
+        submission fuses into the stream's open batch and is charged only
+        its incremental cost (cross-hop plan fusion).
+        """
         if not runs:
             return
-        total, n_blocks, n_seq, t = plan_cost(runs, self.block_size,
-                                              self.device, queue_depth)
+        if stream is not None:
+            total, n_blocks, n_seq, t = stream.charge(
+                runs, self.block_size, queue_depth)
+        else:
+            total, n_blocks, n_seq, t = plan_cost(runs, self.block_size,
+                                                  self.device, queue_depth)
         with self._io_lock:
             self.stats.record_run_batch(
                 total, n_blocks, n_seq,

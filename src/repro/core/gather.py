@@ -7,18 +7,46 @@ misses of *all* minibatches are bucketed by feature block and every
 needed block is read exactly once per hyperbatch.  The feature cache
 (access-count admission) absorbs hot rows across hyperbatches.
 
+Gathering is exposed as explicit stages for the staged prepare path
+(:class:`repro.core.session.PrepareSession`):
+
+* :meth:`FeatureGatherer.plan_gather`    — cache pass + bucket of misses;
+  the feature block visit order is known here, so the gather I/O plan
+  can be submitted as soon as the final sampling frontier exists;
+* :meth:`FeatureGatherer.consume_gather` — the block-major fill.
+
 Also implements the node-granular path used by the baseline engines
 (one small I/O per missed row — the pattern the paper identifies as the
 bottleneck).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from .block_store import FeatureBlockStore
-from .bucket import build_bucket
+from .bucket import Bucket, build_bucket
 from .buffer import BlockBuffer
 from .feature_cache import FeatureCache
+
+
+@dataclasses.dataclass
+class GatherPlan:
+    """Planned gather state: cache-filled outputs + bucketed misses."""
+
+    outs: list[np.ndarray]            # per-mb contiguous outputs (G-3)
+    miss_lists: list                  # per-mb (miss_nodes, miss_positions)
+    bck: Bucket                       # misses bucketed by feature block
+
+    @property
+    def row_blocks(self) -> np.ndarray:
+        """Ascending feature-block visit order for the misses."""
+        return self.bck.row_blocks
+
+    @property
+    def n_miss(self) -> int:
+        return sum(len(m) for m, _ in self.miss_lists)
 
 
 class FeatureGatherer:
@@ -31,24 +59,82 @@ class FeatureGatherer:
         self.cache = cache
         self.prefetcher = prefetcher
 
+    # ------------------------------------------------------------ stages
+    def plan_gather(self, nodes_per_mb: list[np.ndarray]) -> GatherPlan:
+        """Cache pass + block bucket of the misses (the *plan* stage)."""
+        outs, miss_lists = self._cache_pass(nodes_per_mb)
+        miss_nodes = [m for m, _ in miss_lists]
+        blocks = [self.store.block_of(m) for m in miss_nodes]
+        return GatherPlan(outs, miss_lists, build_bucket(miss_nodes, blocks))
+
+    def consume_gather(self, gp: GatherPlan) -> list[np.ndarray]:
+        """Block-major fill of the planned misses; one read per block.
+
+        The per-group scatter is vectorized: block reads only *collect*
+        (node, value) pairs per minibatch; at the end one concatenate +
+        one ``searchsorted`` + one fancy-index scatter per minibatch moves
+        everything into the contiguous outputs (G-2), and the cache sees
+        a single batched admit.
+        """
+        bck = gp.bck
+        rpb = self.store.rows_per_block
+        n_mb = len(gp.miss_lists)
+        per_mb_nodes: list[list[np.ndarray]] = [[] for _ in range(n_mb)]
+        per_mb_vals: list[list[np.ndarray]] = [[] for _ in range(n_mb)]
+        all_nodes: list[np.ndarray] = []
+        all_vals: list[np.ndarray] = []
+        for r in range(bck.n_rows):
+            b = int(bck.row_blocks[r])
+            rows = self._load_block(b)
+            g0, g1 = int(bck.row_ptr[r]), int(bck.row_ptr[r + 1])
+            p0, p1 = int(bck.group_ptr[g0]), int(bck.group_ptr[g1])
+            blk_nodes = bck.nodes[p0:p1]      # all mbs' nodes in block b
+            vals = rows[blk_nodes - b * rpb]  # one gather per block
+            bounds = (bck.group_ptr[g0 + 1:g1] - p0)
+            for off, (gn, gv) in enumerate(zip(np.split(blk_nodes, bounds),
+                                               np.split(vals, bounds))):
+                j = int(bck.mb_ids[g0 + off])
+                per_mb_nodes[j].append(gn)
+                per_mb_vals[j].append(gv)
+            if self.cache is not None:
+                all_nodes.append(blk_nodes)
+                all_vals.append(vals)
+        for j, (mnodes, mpos) in enumerate(gp.miss_lists):
+            if not per_mb_nodes[j]:
+                continue
+            g_nodes = np.concatenate(per_mb_nodes[j])
+            g_vals = np.concatenate(per_mb_vals[j])
+            # mnodes sorted unique (inputs are unique per mb)
+            where = np.searchsorted(mnodes, g_nodes)
+            gp.outs[j][mpos[where]] = g_vals
+        if self.cache is not None and all_nodes:
+            self.cache.admit(np.concatenate(all_nodes),
+                             np.concatenate(all_vals))
+        return gp.outs
+
     # ------------------------------------------------------------ block-major
     def gather_hyperbatch(self, nodes_per_mb: list[np.ndarray]) -> list[np.ndarray]:
-        """Block-major gathering for a hyperbatch; one read per needed block."""
-        outs, miss_lists = self._cache_pass(nodes_per_mb)
-        if sum(len(m) for m, _ in miss_lists):
-            self._block_fill(miss_lists, outs)
-        return outs
+        """Block-major gathering for a hyperbatch; one read per needed block.
+
+        Compatibility wrapper over the staged API with the pre-session
+        schedule (plan, prefetch, consume, reset barrier).
+        """
+        gp = self.plan_gather(nodes_per_mb)
+        if gp.n_miss == 0:
+            return gp.outs
+        try:
+            if self.prefetcher is not None:
+                self.prefetcher.plan(self.buffer.absent(gp.row_blocks))
+            self.consume_gather(gp)
+        finally:
+            if self.prefetcher is not None:
+                self.prefetcher.reset()
+        return gp.outs
 
     # ------------------------------------------------------------ target-major
     def gather_per_minibatch(self, nodes_per_mb: list[np.ndarray]) -> list[np.ndarray]:
         """Target-major gathering: each minibatch fetched independently."""
-        outs = []
-        for nodes in nodes_per_mb:
-            o, m = self._cache_pass([nodes])
-            if len(m[0][0]):
-                self._block_fill(m, o)
-            outs.append(o[0])
-        return outs
+        return [self.gather_hyperbatch([nodes])[0] for nodes in nodes_per_mb]
 
     def gather_node_granular(self, nodes_per_mb: list[np.ndarray],
                              io_unit: int = 4096) -> list[np.ndarray]:
@@ -80,57 +166,6 @@ class FeatureGatherer:
                 miss_lists.append((nodes, np.arange(len(nodes))))
             outs.append(out)
         return outs, miss_lists
-
-    def _block_fill(self, miss_lists, outs) -> None:
-        """Bucket misses by feature block; one block-wise read per block.
-
-        The per-group scatter is vectorized: block reads only *collect*
-        (node, value) pairs per minibatch; at the end one concatenate +
-        one ``searchsorted`` + one fancy-index scatter per minibatch moves
-        everything into the contiguous outputs (G-2), and the cache sees
-        a single batched admit.
-        """
-        miss_nodes = [m for m, _ in miss_lists]
-        blocks = [self.store.block_of(m) for m in miss_nodes]
-        bck = build_bucket(miss_nodes, blocks)
-        rpb = self.store.rows_per_block
-        per_mb_nodes: list[list[np.ndarray]] = [[] for _ in miss_lists]
-        per_mb_vals: list[list[np.ndarray]] = [[] for _ in miss_lists]
-        all_nodes: list[np.ndarray] = []
-        all_vals: list[np.ndarray] = []
-        try:
-            if self.prefetcher is not None:
-                self.prefetcher.plan(self.buffer.absent(bck.row_blocks))
-            for r in range(bck.n_rows):
-                b = int(bck.row_blocks[r])
-                rows = self._load_block(b)
-                g0, g1 = int(bck.row_ptr[r]), int(bck.row_ptr[r + 1])
-                p0, p1 = int(bck.group_ptr[g0]), int(bck.group_ptr[g1])
-                blk_nodes = bck.nodes[p0:p1]      # all mbs' nodes in block b
-                vals = rows[blk_nodes - b * rpb]  # one gather per block
-                bounds = (bck.group_ptr[g0 + 1:g1] - p0)
-                for off, (gn, gv) in enumerate(zip(np.split(blk_nodes, bounds),
-                                                   np.split(vals, bounds))):
-                    j = int(bck.mb_ids[g0 + off])
-                    per_mb_nodes[j].append(gn)
-                    per_mb_vals[j].append(gv)
-                if self.cache is not None:
-                    all_nodes.append(blk_nodes)
-                    all_vals.append(vals)
-        finally:
-            if self.prefetcher is not None:
-                self.prefetcher.reset()
-        for j, (mnodes, mpos) in enumerate(miss_lists):
-            if not per_mb_nodes[j]:
-                continue
-            g_nodes = np.concatenate(per_mb_nodes[j])
-            g_vals = np.concatenate(per_mb_vals[j])
-            # mnodes sorted unique (inputs are unique per mb)
-            where = np.searchsorted(mnodes, g_nodes)
-            outs[j][mpos[where]] = g_vals
-        if self.cache is not None and all_nodes:
-            self.cache.admit(np.concatenate(all_nodes),
-                             np.concatenate(all_vals))
 
     def _load_block(self, b: int) -> np.ndarray:
         if b not in self.buffer and self.prefetcher is not None:

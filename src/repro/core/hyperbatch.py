@@ -8,6 +8,22 @@ the hyperbatch that needs anything in it (Fig 5(b)).  One block-wise I/O
 per needed block per hop, and the ascending visit order makes those I/Os
 largely sequential.
 
+Each hop is exposed as explicit stages so a :class:`repro.core.session.
+PrepareSession` can schedule the I/O between them:
+
+* :meth:`HyperbatchSampler.plan_hop`      — bucket matrix + flat scatter
+  tables for one hop (the block visit order is known here);
+* :meth:`HyperbatchSampler.consume_hop`   — the ascending row scan, with
+  a ``tail_cb`` fusion hook fired before the tail rows so the next hop's
+  partial plan can be submitted while this hop is still consuming;
+* :meth:`HyperbatchSampler.advance_frontiers` / :meth:`assemble_hop` —
+  next frontier first (cheap, unblocks the next plan), index maps after.
+
+The per-group Python fanout loop is gone: every bucket node's destination
+row in the hop's flat ``sampled`` table is precomputed with one segmented
+``searchsorted`` (:meth:`_bucket_positions`), so a row scatter is a single
+fancy-index assignment covering all minibatches in the row.
+
 Both processing modes share all mechanics and the deterministic sampler,
 so they produce *identical* MFGs:
 
@@ -16,12 +32,42 @@ so they produce *identical* MFGs:
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from .block_store import GraphBlock, GraphBlockStore
-from .bucket import build_bucket
+from .bucket import Bucket, build_bucket
 from .buffer import BlockBuffer
-from .sampling import MFG, assemble_layer, sample_indices
+from .sampling import (MFG, layer_from_frontier, next_frontier,
+                       sample_indices)
+
+
+@dataclasses.dataclass
+class HopPlan:
+    """One hop's planned sampling state (output of the *plan* stage).
+
+    ``sampled`` is the hyperbatch-flat neighbor table: minibatch ``j``'s
+    rows live at ``[offsets[j], offsets[j+1])``; ``dst_pos[i]`` is the
+    flat row of bucket node ``bck.nodes[i]`` — both fixed at plan time,
+    so consuming a bucket row is one vectorized scatter.
+    """
+
+    hop: int
+    fanout: int
+    bck: Bucket
+    frontiers: list[np.ndarray]
+    offsets: np.ndarray     # (n_mb + 1,) frontier row offsets into sampled
+    dst_pos: np.ndarray     # (len(bck.nodes),) flat rows into sampled
+    sampled: np.ndarray     # (offsets[-1], fanout) int64, -1 padded
+
+    @property
+    def row_blocks(self) -> np.ndarray:
+        """The hop's ascending block visit order (Algorithm 1 line 7)."""
+        return self.bck.row_blocks
+
+    def sampled_for(self, j: int) -> np.ndarray:
+        return self.sampled[self.offsets[j]:self.offsets[j + 1]]
 
 
 class HyperbatchSampler:
@@ -36,32 +82,83 @@ class HyperbatchSampler:
         self.seed = seed
         self.prefetcher = prefetcher
 
+    # ------------------------------------------------------------ stages
+    def plan_hop(self, frontiers: list[np.ndarray], hop: int) -> HopPlan:
+        """Bucket matrix + flat scatter tables for one hop.
+
+        ``Bck_{i,j} <- N_in^j in B_g(i)`` (Algorithm 1 line 6); after this
+        the hop's full block visit order (:attr:`HopPlan.row_blocks`) is
+        known and can be submitted to the I/O scheduler.
+        """
+        fanout = self.fanouts[hop]
+        primary = [self._primary_block(f) for f in frontiers]
+        bck = build_bucket(frontiers, primary)
+        offsets = np.zeros(len(frontiers) + 1, dtype=np.int64)
+        np.cumsum([len(f) for f in frontiers], out=offsets[1:])
+        sampled = np.full((int(offsets[-1]), fanout), -1, dtype=np.int64)
+        dst_pos = self._bucket_positions(bck, frontiers)
+        return HopPlan(hop, fanout, bck, list(frontiers), offsets,
+                       dst_pos, sampled)
+
+    def consume_hop(self, hp: HopPlan, epoch: int,
+                    tail_cb=None, tail_at: float = 0.75) -> None:
+        """Ascending row scan of the hop's bucket (Algorithm 1 line 7).
+
+        ``tail_cb`` is the cross-hop fusion hook: fired once, just before
+        the tail rows, with the candidate next-frontier known so far
+        (frontier self-edges + neighbors sampled in the head rows), so
+        the caller can submit hop k+1's partial I/O plan while this hop's
+        tail blocks are still being consumed.
+        """
+        n_rows = hp.bck.n_rows
+        trigger = int(n_rows * tail_at) if (tail_cb is not None
+                                            and n_rows >= 8) else -1
+        for r in range(n_rows):
+            if r == trigger:
+                tail_cb(self._partial_candidates(hp))
+            self._process_row(hp, r, epoch)
+
+    def advance_frontiers(self, hp: HopPlan) -> list[np.ndarray]:
+        """Next hop's frontiers — available before the layer index maps
+        are built, so the next plan can be submitted first."""
+        return [next_frontier(hp.frontiers[j], hp.sampled_for(j))
+                for j in range(len(hp.frontiers))]
+
+    def assemble_hop(self, hp: HopPlan, nxt: list[np.ndarray],
+                     mfgs: list[MFG]) -> None:
+        """Build the hop's MFG layers (the CPU-heavy index maps)."""
+        for j, mfg in enumerate(mfgs):
+            mfg.nodes.append(nxt[j])
+            mfg.layers.append(layer_from_frontier(
+                hp.frontiers[j], hp.sampled_for(j), nxt[j]))
+
     # ------------------------------------------------------------ public
     def sample_hyperbatch(self, targets_per_mb: list[np.ndarray],
                           epoch: int = 0) -> list[MFG]:
-        """Block-major sampling for a full hyperbatch (Algorithm 1)."""
-        n_mb = len(targets_per_mb)
-        frontiers = [np.unique(np.asarray(t, dtype=np.int64)) for t in targets_per_mb]
+        """Block-major sampling for a full hyperbatch (Algorithm 1).
+
+        Compatibility wrapper over the staged API with the pre-session
+        schedule: one plan per hop, reset barrier at every hop boundary.
+        :class:`repro.core.session.PrepareSession` drives the same stages
+        without the barriers.
+        """
+        frontiers = [np.unique(np.asarray(t, dtype=np.int64))
+                     for t in targets_per_mb]
         mfgs = [MFG(nodes=[f], layers=[]) for f in frontiers]
-        for hop, fanout in enumerate(self.fanouts):
-            # Bck_{i,j} <- N_in^j in B_g(i)    (Algorithm 1 line 6)
-            primary = [self._primary_block(f) for f in frontiers]
-            bck = build_bucket(frontiers, primary)
-            sampled = [np.full((len(f), fanout), -1, dtype=np.int64)
-                       for f in frontiers]
+        for hop in range(len(self.fanouts)):
+            hp = self.plan_hop(frontiers, hop)
             try:
                 if self.prefetcher is not None:
-                    # the hop's full visit order is known now; plan only
-                    # blocks not already buffer-resident so every planned
-                    # block is consumed exactly once (no slot leak)
-                    self.prefetcher.plan(self.buffer.absent(bck.row_blocks))
-                for r in range(bck.n_rows):  # ascending blocks (line 7)
-                    self._process_row(bck, r, frontiers, sampled,
-                                      fanout, epoch, hop)
+                    # plan only blocks not already buffer-resident so every
+                    # planned block is consumed exactly once (no slot leak)
+                    self.prefetcher.plan(self.buffer.absent(hp.row_blocks))
+                self.consume_hop(hp, epoch)
             finally:
                 if self.prefetcher is not None:
                     self.prefetcher.reset()  # hop boundary: drop stale plan
-            frontiers = self._advance(mfgs, frontiers, sampled)
+            nxt = self.advance_frontiers(hp)
+            self.assemble_hop(hp, nxt, mfgs)
+            frontiers = nxt
         return mfgs
 
     def sample_per_minibatch(self, targets_per_mb: list[np.ndarray],
@@ -79,18 +176,42 @@ class HyperbatchSampler:
 
     def _sample_one(self, frontiers: list[np.ndarray], epoch: int) -> list[MFG]:
         mfgs = [MFG(nodes=[f], layers=[]) for f in frontiers]
-        for hop, fanout in enumerate(self.fanouts):
-            primary = [self._primary_block(f) for f in frontiers]
-            bck = build_bucket(frontiers, primary)
-            sampled = [np.full((len(f), fanout), -1, dtype=np.int64)
-                       for f in frontiers]
-            for r in range(bck.n_rows):
-                self._process_row(bck, r, frontiers, sampled,
-                                  fanout, epoch, hop)
-            frontiers = self._advance(mfgs, frontiers, sampled)
+        for hop in range(len(self.fanouts)):
+            hp = self.plan_hop(frontiers, hop)
+            self.consume_hop(hp, epoch)
+            nxt = self.advance_frontiers(hp)
+            self.assemble_hop(hp, nxt, mfgs)
+            frontiers = nxt
         return mfgs
 
     # ------------------------------------------------------------ internals
+    @staticmethod
+    def _bucket_positions(bck: Bucket, frontiers: list[np.ndarray]) -> np.ndarray:
+        """Flat ``sampled`` row of every bucket node — one segmented
+        ``searchsorted`` for the whole hop (replaces the per-group loop).
+
+        Keyed trick: with stride ``K > max node id``, the concatenation of
+        ``j * K + frontiers[j]`` is globally ascending, so a single binary
+        search of ``mb * K + node`` yields ``offsets[mb] + position-in-
+        frontier`` directly.
+        """
+        if len(bck.nodes) == 0:
+            return np.zeros(0, dtype=np.int64)
+        group_mb = np.repeat(bck.mb_ids, np.diff(bck.group_ptr))
+        stride = max(int(f[-1]) for f in frontiers if len(f)) + 1
+        keyed = np.concatenate([f + j * stride
+                                for j, f in enumerate(frontiers)])
+        return np.searchsorted(keyed, bck.nodes + group_mb * stride)
+
+    @staticmethod
+    def _partial_candidates(hp: HopPlan) -> np.ndarray:
+        """Candidate next-frontier nodes known mid-scan: the frontier
+        itself (self edges always survive) + neighbors sampled so far."""
+        got = hp.sampled[hp.sampled >= 0]
+        front = (np.concatenate(hp.frontiers) if hp.frontiers
+                 else np.zeros(0, np.int64))
+        return np.unique(np.concatenate([front, got]))
+
     def _primary_block(self, nodes: np.ndarray) -> np.ndarray:
         """First block containing each node (vectorized T_obj search)."""
         if len(nodes) == 0:
@@ -111,28 +232,34 @@ class HyperbatchSampler:
                 return blk
         return self.buffer.get(block_id, self.store.read_block, pin=pin)
 
-    def _process_row(self, bck, r: int, frontiers, sampled,
-                     fanout: int, epoch: int, hop: int) -> None:
-        """Process row ``Bck[i, :]`` — one block serves all minibatches."""
+    def _process_row(self, hp: HopPlan, r: int, epoch: int) -> None:
+        """Process row ``Bck[i, :]`` — one block serves all minibatches.
+
+        The fanout to every minibatch in the row is one fancy scatter into
+        the hop's flat ``sampled`` table (rows precomputed by
+        :meth:`_bucket_positions`): no per-group Python work.
+        """
+        bck = hp.bck
         b = int(bck.row_blocks[r])
         blk = self._load(b, pin=True)
         pinned = [b]
         try:
-            row_nodes = np.unique(bck.row_nodes(r))
+            g0, g1 = int(bck.row_ptr[r]), int(bck.row_ptr[r + 1])
+            p0, p1 = int(bck.group_ptr[g0]), int(bck.group_ptr[g1])
+            all_nodes = bck.nodes[p0:p1]      # every mb's nodes in block b
+            row_nodes = np.unique(all_nodes)
             nbrs, ok = self._sample_nodes_in_block(
-                blk, row_nodes, fanout, epoch, hop, pinned)
+                blk, row_nodes, hp.fanout, epoch, hp.hop, pinned)
             row_nodes = row_nodes[ok]
             nbrs = nbrs[ok]
-            # fan the shared sample out to every minibatch in the row
-            for g in range(bck.row_ptr[r], bck.row_ptr[r + 1]):
-                j = int(bck.mb_ids[g])
-                g_nodes = bck.nodes[bck.group_ptr[g]:bck.group_ptr[g + 1]]
-                sel = np.searchsorted(row_nodes, g_nodes)
-                sel_ok = (sel < len(row_nodes))
-                sel_c = np.clip(sel, 0, max(len(row_nodes) - 1, 0))
-                sel_ok &= row_nodes[sel_c] == g_nodes if len(row_nodes) else False
-                dst_pos = np.searchsorted(frontiers[j], g_nodes)
-                sampled[j][dst_pos[sel_ok]] = nbrs[sel_c[sel_ok]]
+            sel = np.searchsorted(row_nodes, all_nodes)
+            sel_ok = sel < len(row_nodes)
+            sel_c = np.clip(sel, 0, max(len(row_nodes) - 1, 0))
+            if len(row_nodes):
+                sel_ok &= row_nodes[sel_c] == all_nodes
+            else:
+                sel_ok &= False
+            hp.sampled[hp.dst_pos[p0:p1][sel_ok]] = nbrs[sel_c[sel_ok]]
         finally:
             for p in pinned:
                 self.buffer.unpin(p)
@@ -189,14 +316,3 @@ class HyperbatchSampler:
             parts.append(part)
             got += len(part)
         return np.concatenate(parts)
-
-    @staticmethod
-    def _advance(mfgs: list[MFG], frontiers: list[np.ndarray],
-                 sampled: list[np.ndarray]) -> list[np.ndarray]:
-        nxt_frontiers = []
-        for j, mfg in enumerate(mfgs):
-            nxt, layer = assemble_layer(frontiers[j], sampled[j])
-            mfg.nodes.append(nxt)
-            mfg.layers.append(layer)
-            nxt_frontiers.append(nxt)
-        return nxt_frontiers

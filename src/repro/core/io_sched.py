@@ -23,17 +23,26 @@ per-block path by construction (a run of ``k`` blocks reads exactly
 ``k * block_size`` bytes).
 
 ``CoalescedReader`` implements the same consumer protocol as
-:class:`repro.core.async_io.BlockPrefetcher` (``plan`` / ``fetch`` /
-``reset`` / ``close``) so the sampler and gatherer are agnostic to which
-one the engine wired in.  With ``workers == 0`` the plan is executed
-lazily on the consumer thread (deterministic synchronous mode, still
-coalesced); with ``workers >= 1`` a pool reads ahead, bounded to
-``queue_depth`` undelivered runs.
+:class:`repro.core.async_io.BlockPrefetcher` (``submit``/``plan`` /
+``fetch`` / ``reset`` / ``close``) so the sampler and gatherer are
+agnostic to which one the engine wired in.  With ``workers == 0`` the
+plan is executed lazily on the consumer thread (deterministic
+synchronous mode, still coalesced); with ``workers >= 1`` a pool reads
+ahead, bounded to ``queue_depth`` undelivered runs.
+
+Multiple submissions may be in flight at once (cross-hop plan fusion —
+``repro.core.session``): :meth:`CoalescedReader.submit` drops ids
+already planned, :meth:`CoalescedReader.fetch` steals still-queued runs
+rather than deadlocking behind a queue_depth of undrained tail runs, and
+back-to-back submissions are charged through a shared
+:class:`PlanStream` (max-of-summed-rooflines instead of per-plan
+batches).
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import deque
 
 import numpy as np
@@ -96,6 +105,61 @@ def plan_cost(runs: list[Run], block_size: int, device,
     return total, n_blocks, n_seq, t
 
 
+class PlanStream:
+    """Fused-stream device accounting for back-to-back plan submissions.
+
+    :meth:`NVMeModel.batch_time` is the roofline of a *single* submission
+    batch: ``max(bytes / bw, n_random * latency / qd)``.  With a barrier
+    between plans (the per-hop ``reset()`` of the pre-session prepare
+    path) the device queue drains at every hop boundary, so each plan is
+    charged independently and a k-hop prepare pays
+    ``sum_h max(bw_h, iops_h)``.  When plans are submitted back to back
+    into an *open* stream — cross-hop fusion — the queue never drains:
+    the whole stream is one batch and pays ``max(sum_h bw_h, sum_h
+    iops_h)``, letting the latency-bound sampling hops overlap the
+    bandwidth-bound feature gather inside the device queue.
+
+    :meth:`charge` returns each submission's incremental cost against the
+    open stream (a single submission into a drained stream costs exactly
+    :func:`plan_cost` — the barriered numbers are the degenerate case);
+    :meth:`drain` closes the stream (an explicit barrier, or session
+    end).  One stream per *device*: readers over stores sharing an NVMe
+    array share the stream, so graph and feature plans fuse too.
+    """
+
+    def __init__(self, device):
+        self.device = device
+        self._lock = threading.Lock()
+        self._bytes = 0
+        self._random = 0
+        self._seq = 0
+        self._charged = 0.0
+
+    def charge(self, runs: list[Run], block_size: int,
+               queue_depth: int) -> tuple[int, int, int, float]:
+        """(bytes, n_blocks, n_seq, incremental_time) of one submission."""
+        n_blocks = sum(r.count for r in runs)
+        n_random = len(runs)
+        n_seq = n_blocks - n_random
+        total = n_blocks * block_size
+        with self._lock:
+            self._bytes += total
+            self._random += n_random
+            self._seq += n_seq
+            t = self.device.batch_time(self._bytes, n_random=self._random,
+                                       n_sequential=self._seq,
+                                       queue_depth=queue_depth)
+            delta = max(t - self._charged, 0.0)
+            self._charged += delta
+        return total, n_blocks, n_seq, delta
+
+    def drain(self) -> None:
+        """Barrier: the queue empties; later plans start a fresh stream."""
+        with self._lock:
+            self._bytes = self._random = self._seq = 0
+            self._charged = 0.0
+
+
 class CoalescedReader:
     """Plan-driven coalesced reader over one block store.
 
@@ -104,18 +168,27 @@ class CoalescedReader:
     accounting) and ``account_runs(runs, queue_depth)``.
     """
 
+    supports_fusion = True  # submit() accepts cross-hop plans, no barrier
+
     def __init__(self, store, max_coalesce_bytes: int,
-                 queue_depth: int = 8, workers: int = 2):
+                 queue_depth: int = 8, workers: int = 2,
+                 stream: PlanStream | None = None):
         self.store = store
         self.max_coalesce_bytes = int(max_coalesce_bytes)
         self.queue_depth = max(int(queue_depth), 1)
         self.workers = max(int(workers), 0)
+        self.stream = stream
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        self._pending: deque[Run] = deque()
+        # runs are keyed by a unique token, not their start block: a fused
+        # resubmission may legitimately reuse the start of a still-open
+        # earlier run (e.g. a delivered-then-evicted head block), and the
+        # two must not share slot accounting
+        self._pending: deque[tuple[int, Run]] = deque()
         self._ready: dict[int, object] = {}       # block_id -> decoded block
-        self._run_of: dict[int, int] = {}         # block_id -> run start
-        self._remaining: dict[int, int] = {}      # run start -> unfetched blocks
+        self._run_of: dict[int, int] = {}         # block_id -> run token
+        self._remaining: dict[int, int] = {}      # run token -> unfetched blocks
+        self._run_seq = 0
         self._ready_runs = 0                      # reserved/undelivered runs
         self._gen = 0
         self._stop = False
@@ -127,25 +200,44 @@ class CoalescedReader:
             t.start()
 
     # ------------------------------------------------------------ plan
-    def plan(self, block_ids) -> None:
-        """Submit a hop's block visit plan (ascending, not buffer-resident).
+    def submit(self, block_ids) -> None:
+        """Submit one IOPlan stage's block list (ascending, buffer-absent).
 
-        Coalesces, charges the whole batch once at queue-depth overlap,
-        and queues the runs for the reader pool (or lazy execution).
+        Ids already in the open plan — an earlier fused submission not yet
+        consumed — are dropped here, so overlapping cross-hop submissions
+        stay read-exactly-once.  Coalesces, charges the submission (via
+        the fused :class:`PlanStream` when one is attached, as its own
+        batch at queue-depth overlap otherwise), and queues the runs for
+        the reader pool (or lazy execution).
         """
         ids = np.asarray(list(block_ids) if not isinstance(block_ids, np.ndarray)
                          else block_ids, dtype=np.int64)
         if ids.size == 0:
             return
+        with self._cv:
+            if self._run_of:
+                keep = np.fromiter((int(b) not in self._run_of for b in ids),
+                                   dtype=bool, count=ids.size)
+                ids = ids[keep]
+        if ids.size == 0:
+            return
         runs = coalesce(ids, self.store.block_size, self.max_coalesce_bytes)
-        self.store.account_runs(runs, self.queue_depth)
+        if self.stream is not None:
+            self.store.account_runs(runs, self.queue_depth, stream=self.stream)
+        else:
+            self.store.account_runs(runs, self.queue_depth)
         with self._cv:
             for r in runs:
-                self._pending.append(r)
-                self._remaining[r.start] = r.count
+                tok = self._run_seq
+                self._run_seq += 1
+                self._pending.append((tok, r))
+                self._remaining[tok] = r.count
                 for b in range(r.start, r.stop):
-                    self._run_of[b] = r.start
+                    self._run_of[b] = tok
             self._cv.notify_all()
+
+    # protocol alias shared with BlockPrefetcher (one submission per hop)
+    plan = submit
 
     # ------------------------------------------------------------ consume
     def fetch(self, block_id: int, timeout: float = 30.0):
@@ -157,31 +249,62 @@ class CoalescedReader:
         caller falls back to a direct ``read_block``.
         """
         b = int(block_id)
+        deadline = time.monotonic() + timeout
         with self._cv:
-            run = self._run_of.get(b)
-            if run is None:
+            tok = self._run_of.get(b)
+            if tok is None:
                 return None
             if self.workers == 0:
                 while b not in self._ready and self._pending:
-                    self._execute_locked(self._pending.popleft())
+                    self._execute_locked(self._pending.popleft()[1])
             else:
-                # a failed worker read unplans the run, so also wake on
-                # b leaving the plan — fail fast instead of full timeout
-                self._cv.wait_for(
-                    lambda: b in self._ready or self._stop
-                    or b not in self._run_of, timeout=timeout)
+                while (b not in self._ready and not self._stop
+                       and b in self._run_of):
+                    if self._ready_runs >= self.queue_depth:
+                        # With fused cross-hop plans the pool can hold a
+                        # full queue_depth of this hop's undrained tail
+                        # runs while b's run is still queued behind them;
+                        # waiting would deadlock the consumer against its
+                        # own slots.  Steal the queued run and execute it
+                        # inline — every worker is blocked on slot
+                        # backpressure anyway, so holding the lock is free.
+                        entry = next((e for e in self._pending
+                                      if e[0] == tok), None)
+                        if entry is not None:
+                            self._pending.remove(entry)
+                            self._ready_runs += 1  # balanced below
+                            try:
+                                self._execute_locked(entry[1])
+                            except Exception:
+                                # same fail-fast contract as a worker
+                                # read: unplan the run so this (and
+                                # later) fetches fall back to a direct
+                                # read_block, which raises the real error
+                                self._unplan_locked(tok, entry[1])
+                            continue
+                    # a failed worker read unplans the run, so also wake
+                    # on b leaving the plan (fail fast) and on the pool
+                    # saturating while b's run is still queued (steal)
+                    if not self._cv.wait_for(
+                            lambda: b in self._ready or self._stop
+                            or b not in self._run_of
+                            or (self._ready_runs >= self.queue_depth
+                                and any(e[0] == tok
+                                        for e in self._pending)),
+                            timeout=max(deadline - time.monotonic(), 0.0)):
+                        break  # timed out
             blk = self._ready.pop(b, None)
             self._run_of.pop(b, None)
             # release b's share of the run's queue-depth slot whether or
             # not the block was delivered (timeout/close must not leak
             # slots and wedge the reader pool until the next reset)
-            if run in self._remaining:
-                left = self._remaining[run] - 1
+            if tok in self._remaining:
+                left = self._remaining[tok] - 1
                 if left <= 0:
-                    self._remaining.pop(run, None)
+                    self._remaining.pop(tok, None)
                     self._ready_runs = max(self._ready_runs - 1, 0)
                 else:
-                    self._remaining[run] = left
+                    self._remaining[tok] = left
             self._cv.notify_all()
             return blk  # None -> caller falls back to a direct read
 
@@ -189,7 +312,11 @@ class CoalescedReader:
     take = fetch
 
     def reset(self) -> None:
-        """Drop any undelivered plan state (called at hop boundaries)."""
+        """Drop any undelivered plan state and close the fused stream.
+
+        This is the explicit barrier: hop boundaries on the unfused
+        compat path, session end on the fused path.
+        """
         with self._cv:
             self._gen += 1
             self._pending.clear()
@@ -197,6 +324,14 @@ class CoalescedReader:
             self._run_of.clear()
             self._remaining.clear()
             self._ready_runs = 0
+            self._cv.notify_all()
+        if self.stream is not None:
+            self.stream.drain()
+
+    def set_queue_depth(self, queue_depth: int) -> None:
+        """Adaptive scheduler hook: resize the in-flight run budget."""
+        with self._cv:
+            self.queue_depth = max(int(queue_depth), 1)
             self._cv.notify_all()
 
     def close(self) -> None:
@@ -214,10 +349,19 @@ class CoalescedReader:
 
     # ------------------------------------------------------------ internals
     def _execute_locked(self, run: Run) -> None:
-        """Lazy path (workers == 0): read a run on the consumer thread."""
+        """Lazy/steal path: read a run on the consumer thread."""
         blocks = self.store.read_run(run.start, run.count)
         for i, blk in enumerate(blocks):
             self._ready[run.start + i] = blk
+
+    def _unplan_locked(self, tok: int, run: Run) -> None:
+        """Release a failed run's slot and drop the blocks it still owns."""
+        self._ready_runs = max(self._ready_runs - 1, 0)
+        self._remaining.pop(tok, None)
+        for b in range(run.start, run.stop):
+            if self._run_of.get(b) == tok:  # a resubmission may own b now
+                self._run_of.pop(b, None)
+                self._ready.pop(b, None)
 
     def _worker(self) -> None:
         while True:
@@ -228,7 +372,7 @@ class CoalescedReader:
                 if self._stop:
                     return
                 gen = self._gen
-                run = self._pending.popleft()
+                tok, run = self._pending.popleft()
                 self._ready_runs += 1  # reserve the slot before reading
             try:
                 blocks = self.store.read_run(run.start, run.count)
@@ -241,11 +385,7 @@ class CoalescedReader:
                     # failed read: release the slot and unplan the run so
                     # waiting consumers fail fast and fall back to a
                     # direct read_block (which raises the real error)
-                    self._ready_runs = max(self._ready_runs - 1, 0)
-                    self._remaining.pop(run.start, None)
-                    for b in range(run.start, run.stop):
-                        self._run_of.pop(b, None)
-                        self._ready.pop(b, None)
+                    self._unplan_locked(tok, run)
                 else:
                     for i, blk in enumerate(blocks):
                         self._ready[run.start + i] = blk

@@ -92,6 +92,31 @@ class MFG:
         return np.unique(np.concatenate(self.nodes))
 
 
+def next_frontier(dst_nodes: np.ndarray, sampled_nbrs: np.ndarray) -> np.ndarray:
+    """Next layer's node array: dst nodes (self edges) + sampled neighbors.
+
+    Split out of :func:`assemble_layer` so a staged prepare can submit
+    the next hop's I/O plan as soon as the frontier exists — before the
+    layer's index maps are built (cross-hop plan fusion).
+    """
+    valid = sampled_nbrs >= 0
+    return np.unique(np.concatenate([dst_nodes, sampled_nbrs[valid]]))
+
+
+def layer_from_frontier(dst_nodes: np.ndarray, sampled_nbrs: np.ndarray,
+                        nxt: np.ndarray) -> MFGLayer:
+    """Index maps of one MFG layer given its (sorted-unique) next frontier.
+
+    Equivalent to the ``return_inverse`` of :func:`assemble_layer`: for
+    ``nxt = unique(cat)``, ``searchsorted(nxt, x)`` is x's inverse index.
+    """
+    valid = sampled_nbrs >= 0
+    self_idx = np.searchsorted(nxt, dst_nodes).astype(np.int32)
+    nbr_idx = np.full(sampled_nbrs.shape, -1, dtype=np.int32)
+    nbr_idx[valid] = np.searchsorted(nxt, sampled_nbrs[valid]).astype(np.int32)
+    return MFGLayer(nbr_idx, self_idx, int(len(nxt)))
+
+
 def assemble_layer(dst_nodes: np.ndarray, sampled_nbrs: np.ndarray) -> tuple[np.ndarray, MFGLayer]:
     """Build one MFG layer from dst nodes + their sampled neighbors.
 
@@ -99,10 +124,5 @@ def assemble_layer(dst_nodes: np.ndarray, sampled_nbrs: np.ndarray) -> tuple[np.
     Returns (next_layer_nodes, MFGLayer); next layer includes dst nodes
     (self edges) so receptive fields nest.
     """
-    valid = sampled_nbrs >= 0
-    cat = np.concatenate([dst_nodes, sampled_nbrs[valid]])
-    nxt, inv = np.unique(cat, return_inverse=True)
-    self_idx = inv[:len(dst_nodes)].astype(np.int32)
-    nbr_idx = np.full(sampled_nbrs.shape, -1, dtype=np.int32)
-    nbr_idx[valid] = inv[len(dst_nodes):].astype(np.int32)
-    return nxt, MFGLayer(nbr_idx, self_idx, int(len(nxt)))
+    nxt = next_frontier(dst_nodes, sampled_nbrs)
+    return nxt, layer_from_frontier(dst_nodes, sampled_nbrs, nxt)

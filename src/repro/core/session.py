@@ -1,0 +1,193 @@
+"""Staged PrepareSession: Algorithm 1 as a schedulable dataflow.
+
+``AgnesEngine.prepare()`` used to be a monolithic sample-then-gather call
+with a full prefetcher ``reset()`` barrier between hops — the coalesced
+scheduler went idle exactly when the next hop's plan was already
+computable.  :class:`PrepareSession` re-expresses one hyperbatch's data
+preparation as explicit stages that flow through the I/O scheduler::
+
+    plan    — bucket matrix / cache pass: the block visit order is known
+    submit  — the IOPlan enters the CoalescedReader (device time charged)
+    consume — the ascending row scan fetches and processes the blocks
+    assemble— frontiers, MFG layers, contiguous feature outputs
+
+The seam between *plan* and *consume* is what enables **cross-hop plan
+fusion**: hop k+1's plan is submitted while hop k's tail blocks are
+still being consumed — a partial plan from the mid-scan ``tail_cb`` hook
+plus the remainder as soon as the frontier exists, with no ``reset()``
+barrier in between — and the gather plan is submitted as soon as the
+final frontier exists, before the MFG layer index maps are built.  All
+back-to-back submissions are charged through one
+:class:`repro.core.io_sched.PlanStream` per device, so the latency-bound
+sampling hops and the bandwidth-bound feature gather share the device
+queue (``max`` of the summed rooflines instead of the summed per-hop
+``max`` — see ``PlanStream``).
+
+Bytes, MFGs and features are *identical* to the barriered path: plans
+are filtered against buffer residency and the reader's open plan at
+submit time, so every block is still read exactly once
+(``tests/test_session.py`` asserts parity).  ``plan_fusion=False``
+reproduces the pre-session schedule — one plan per hop, barrier at every
+hop boundary — which is what ``benchmarks/bench_plan_fusion.py`` compares
+against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .sampling import MFG
+
+
+@dataclasses.dataclass
+class IOPlan:
+    """One staged I/O submission: the blocks a stage needs from one store.
+
+    ``state`` walks ``planned -> submitted -> consumed``; sessions keep
+    every emitted plan in :attr:`PrepareSession.plans` for inspection.
+    """
+
+    stage: str               # "sample:hop0[:early]" | "gather"
+    store: str               # "graph" | "feature"
+    block_ids: np.ndarray    # ascending, buffer-absent at plan time
+    block_size: int
+    state: str = "planned"
+
+    @property
+    def n_blocks(self) -> int:
+        return int(len(self.block_ids))
+
+    @property
+    def nbytes(self) -> int:
+        return self.n_blocks * self.block_size
+
+
+class PrepareSession:
+    """Drives one hyperbatch's data preparation through explicit stages.
+
+    Create via ``AgnesEngine.prepare()`` (which is now a thin wrapper) or
+    directly for stage-level control; :meth:`run` drives every stage to
+    completion and returns the prepared minibatches.
+    """
+
+    def __init__(self, engine, targets_per_mb: list[np.ndarray],
+                 epoch: int = 0):
+        self.engine = engine
+        self.epoch = epoch
+        self.frontiers = [np.unique(np.asarray(t, dtype=np.int64))
+                          for t in targets_per_mb]
+        self.mfgs = [MFG(nodes=[f], layers=[]) for f in self.frontiers]
+        self.plans: list[IOPlan] = []
+        cfg = engine.config
+        self.fused = bool(
+            cfg.plan_fusion
+            and getattr(engine._g_prefetch, "supports_fusion", False)
+            and getattr(engine._f_prefetch, "supports_fusion", False))
+        self.sample_wall_s = 0.0
+        self.gather_wall_s = 0.0
+        self._done = False
+
+    # ------------------------------------------------------------ stages
+    def _emit(self, stage: str, store: str, block_ids,
+              block_size: int) -> IOPlan:
+        plan = IOPlan(stage, store, np.asarray(block_ids, dtype=np.int64),
+                      block_size)
+        self.plans.append(plan)
+        return plan
+
+    @staticmethod
+    def _submit(plan: IOPlan, reader) -> None:
+        if plan.state != "planned":
+            return
+        if reader is not None and plan.n_blocks:
+            # CoalescedReader.submit drops ids already in its open plan
+            # (fused overlap) and charges the submission's device time
+            reader.submit(plan.block_ids)
+        plan.state = "submitted"
+
+    # ------------------------------------------------------------ drive
+    def run(self):
+        """Drive plan→submit→consume→assemble to completion."""
+        from .agnes import PreparedMinibatch  # cycle: agnes drives sessions
+
+        if self._done:
+            raise RuntimeError("a PrepareSession is single-use")
+        eng = self.engine
+        sampler, gatherer = eng.sampler, eng.gatherer
+        g_reader, f_reader = eng._g_prefetch, eng._f_prefetch
+        g_bs = eng.graph_store.block_size
+        f_bs = eng.feature_store.block_size
+        n_hops = len(sampler.fanouts)
+        t0 = time.perf_counter()
+        try:
+            frontiers = self.frontiers
+            gp = fplan = None
+            hp = sampler.plan_hop(frontiers, 0) if n_hops else None
+            if hp is not None:
+                plan = self._emit("sample:hop0", "graph",
+                                  eng.graph_buffer.absent(hp.row_blocks), g_bs)
+                self._submit(plan, g_reader)
+            for hop in range(n_hops):
+                tail_cb = None
+                if self.fused and hop + 1 < n_hops:
+                    def tail_cb(cand, _h=hop):
+                        # cross-hop fusion: partial plan for hop k+1 while
+                        # hop k's tail blocks are still being consumed
+                        blocks = np.unique(sampler._primary_block(cand))
+                        early = self._emit(
+                            f"sample:hop{_h + 1}:early", "graph",
+                            eng.graph_buffer.absent(blocks), g_bs)
+                        self._submit(early, g_reader)
+                sampler.consume_hop(hp, self.epoch, tail_cb=tail_cb)
+                for p in self.plans:  # the hop's main + early plans
+                    if p.store == "graph" and p.state == "submitted" \
+                            and p.stage.split(":")[1] == f"hop{hop}":
+                        p.state = "consumed"
+                if not self.fused and g_reader is not None:
+                    g_reader.reset()  # pre-session hop barrier
+                nxt = sampler.advance_frontiers(hp)
+                nxt_hp = None
+                if hop + 1 < n_hops:
+                    nxt_hp = sampler.plan_hop(nxt, hop + 1)
+                    plan = self._emit(
+                        f"sample:hop{hop + 1}", "graph",
+                        eng.graph_buffer.absent(nxt_hp.row_blocks), g_bs)
+                    self._submit(plan, g_reader)
+                else:
+                    # gather plan as soon as the final frontier exists —
+                    # before the MFG layer index maps are built
+                    self.sample_wall_s = time.perf_counter() - t0
+                    gp = gatherer.plan_gather(nxt)
+                    fplan = self._emit(
+                        "gather", "feature",
+                        eng.feature_buffer.absent(gp.row_blocks)
+                        if gp.n_miss else [], f_bs)
+                    self._submit(fplan, f_reader)
+                # layer index assembly overlaps the submitted I/O
+                sampler.assemble_hop(hp, nxt, self.mfgs)
+                frontiers, hp = nxt, nxt_hp
+            if gp is None:  # 0-hop degenerate case: gather the targets
+                gp = gatherer.plan_gather(frontiers)
+                fplan = self._emit(
+                    "gather", "feature",
+                    eng.feature_buffer.absent(gp.row_blocks)
+                    if gp.n_miss else [], f_bs)
+                self._submit(fplan, f_reader)
+            t1 = time.perf_counter()
+            feats = gatherer.consume_gather(gp) if gp.n_miss else gp.outs
+            fplan.state = "consumed"
+            if not self.fused and f_reader is not None:
+                f_reader.reset()
+            self.gather_wall_s = time.perf_counter() - t1
+            self._done = True
+            return [PreparedMinibatch(m, f)
+                    for m, f in zip(self.mfgs, feats)]
+        finally:
+            # session end: the stream's barrier + drop any stale state
+            # (early-planned blocks that turned out buffer-resident);
+            # no-op on the barriered path, cleanup after an exception
+            for rd in (g_reader, f_reader):
+                if rd is not None:
+                    rd.reset()

@@ -77,11 +77,21 @@ def pad_mfg(mfg: MFG, features: np.ndarray, labels: np.ndarray,
         nbr_idx.append(jnp.asarray(ni))
         self_idx.append(jnp.asarray(si))
         node_mask.append(jnp.asarray(m))
-    f = np.zeros((sizes[k], features.shape[1]), dtype=features.dtype)
-    f[:len(mfg.nodes[k])] = features
+    n_in = len(mfg.nodes[k])
+    if isinstance(features, jnp.ndarray):
+        # placement hook (PreparedMinibatch.to_device): features are
+        # already device-resident — pad on device, no host round-trip;
+        # the pallas route delivers the padded block ready-made
+        if features.shape[0] == sizes[k]:
+            f = features
+        else:
+            f = jnp.zeros((sizes[k], features.shape[1]), features.dtype)
+            f = f.at[:n_in].set(features)
+    else:
+        f = jnp.asarray(np.pad(features, ((0, sizes[k] - n_in), (0, 0))))
     lab = np.zeros(sizes[0], dtype=np.int32)
     lab[:len(mfg.nodes[0])] = labels[mfg.nodes[0]]
-    return PaddedMFG(nbr_idx, self_idx, node_mask, jnp.asarray(f),
+    return PaddedMFG(nbr_idx, self_idx, node_mask, f,
                      jnp.asarray(lab), jnp.asarray(len(mfg.nodes[0])))
 
 

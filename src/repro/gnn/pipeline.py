@@ -43,6 +43,9 @@ class OverlapReport:
     n_minibatches: int
     losses: list[float]
     prepare_reports: list[PrepareReport]
+    # io_queue_depth after each hyperbatch when the adaptive scheduler
+    # hook is on (empty otherwise)
+    queue_depths: list[int] = dataclasses.field(default_factory=list)
 
     @property
     def exposed_prepare_s(self) -> float:
@@ -88,6 +91,14 @@ class OverlapReport:
             "coalesce_factor": round(reads / requests, 3) if requests else 0.0,
             "bytes_read": bytes_,
             "modeled_io_s": modeled,
+            # the adaptive scheduler's control signal: how much prepare
+            # time the consumer actually waited on (0 = fully hidden;
+            # clamped — epoch wall includes consumer overhead beyond
+            # train + prepare)
+            "exposed_prepare_fraction": round(min(
+                self.exposed_prepare_s / self.prepare_wall_s, 1.0), 4)
+            if self.prepare_wall_s > 0 else 0.0,
+            "io_queue_depths": list(self.queue_depths),
         }
 
     def summary(self) -> dict:
@@ -111,20 +122,36 @@ class PipelinedExecutor:
     memory (a hyperbatch of features is the largest transient object in
     the system).
 
+    ``adaptive_io=True`` turns on the hyperbatch-level scheduler hook:
+    after each trained hyperbatch the executor reads that hyperbatch's
+    exposed-prepare fraction (the same signal
+    :meth:`OverlapReport.io_summary` reports, computed over the
+    hyperbatch window rather than the whole epoch) and resizes the
+    engine's ``io_queue_depth`` — exposed prepare means the epoch is
+    I/O-bound, so the queue deepens (more modeled request overlap,
+    bounded by ``io_queue_depth_bounds``); fully hidden prepare lets it
+    shrink back.  Only the modeled device time changes — plans, bytes
+    and losses are identical.
+
     Use as a context manager or call :meth:`close`; a mid-epoch
     exception on either side stops and joins the background thread
     before propagating.
     """
 
-    def __init__(self, engine, trainer, depth: int = 2):
+    def __init__(self, engine, trainer, depth: int = 2,
+                 adaptive_io: bool = False,
+                 io_queue_depth_bounds: tuple[int, int] = (2, 32)):
         if depth < 1:
             raise ValueError("depth must be >= 1")
         self.engine = engine
         self.trainer = trainer
         self.depth = depth
+        self.adaptive_io = adaptive_io
+        self.io_queue_depth_bounds = io_queue_depth_bounds
         self._stop = threading.Event()
         self._producer: threading.Thread | None = None
         self._queue: queue.Queue | None = None
+        self._producer_error: BaseException | None = None
 
     # ---------------------------------------------------------- epoch
     def run_epoch(self, all_targets: np.ndarray, epoch: int = 0,
@@ -147,6 +174,8 @@ class PipelinedExecutor:
         self._stop = stop
         prepare_s = [0.0]
 
+        self._producer_error = None
+
         def produce():
             try:
                 for mbs in plan:
@@ -160,14 +189,20 @@ class PipelinedExecutor:
                         return
                 self._offer(q, stop, ("done", None, None))
             except BaseException as exc:  # propagate into the consumer
+                # also stash it: a stopped consumer never drains the queue,
+                # and the sentinel may not even get in (_offer gives up on
+                # stop) — _shutdown surfaces it either way
+                self._producer_error = exc
                 self._offer(q, stop, ("error", exc, None))
 
         self._producer = threading.Thread(target=produce, daemon=True,
                                           name="agnes-prepare-pipeline")
         losses: list[float] = []
         reports: list[PrepareReport] = []
+        queue_depths: list[int] = []
         train_s = 0.0
         n_hb = n_mb = 0
+        prev_wall = prev_prep = prev_train = 0.0  # adaptive-signal window
         t_epoch = time.perf_counter()
         self._producer.start()
         try:
@@ -188,6 +223,7 @@ class PipelinedExecutor:
                 if kind == "done":
                     break
                 if kind == "error":
+                    self._producer_error = None  # being handled right here
                     raise payload
                 n_hb += 1
                 if report is not None:
@@ -197,22 +233,51 @@ class PipelinedExecutor:
                     losses.append(self.trainer.train_minibatch(p))
                     n_mb += 1
                 train_s += time.perf_counter() - t0
-        finally:
-            self._shutdown()
+                if self.adaptive_io and hasattr(self.engine,
+                                                "set_io_queue_depth"):
+                    # windowed signal: this hyperbatch's deltas only — the
+                    # cumulative epoch fraction never decays below the
+                    # grow threshold after the pipeline-fill warmup, so a
+                    # compute-bound epoch could never shrink the queue
+                    wall, prep = time.perf_counter() - t_epoch, prepare_s[0]
+                    window = OverlapReport(
+                        wall - prev_wall, prep - prev_prep,
+                        train_s - prev_train, 1, 0, [], [])
+                    prev_wall, prev_prep, prev_train = wall, prep, train_s
+                    queue_depths.append(self._resize_queue_depth(
+                        window.io_summary()["exposed_prepare_fraction"]))
+        except BaseException as exc:
+            leaked = self._shutdown()
+            if leaked is not None and leaked is not exc:
+                raise exc from leaked  # keep the prepare-side error visible
+            raise
+        else:
+            leaked = self._shutdown()
+            if leaked is not None:
+                raise leaked  # a swallowed producer error is a real failure
         wall = time.perf_counter() - t_epoch
         return OverlapReport(wall, prepare_s[0], train_s, n_hb, n_mb,
-                             losses, reports)
+                             losses, reports, queue_depths)
 
     # ------------------------------------------------------- lifecycle
     def close(self) -> None:
-        """Stop and join any in-flight prepare thread (idempotent)."""
-        self._shutdown()
+        """Stop and join any in-flight prepare thread (idempotent).
+
+        Re-raises a prepare-side error the consumer never observed —
+        silently dropping it would report a failed epoch as clean.
+        """
+        leaked = self._shutdown()
+        if leaked is not None:
+            raise leaked
 
     def __enter__(self):
         return self
 
-    def __exit__(self, *exc):
-        self.close()
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None:
+            self._shutdown()  # don't mask the in-flight exception
+        else:
+            self.close()
 
     # ------------------------------------------------------- internals
     @staticmethod
@@ -226,12 +291,36 @@ class PipelinedExecutor:
                 continue
         return False
 
-    def _shutdown(self) -> None:
+    def _resize_queue_depth(self, exposed_frac: float) -> int:
+        """Hyperbatch-level scheduler integration: exposed prepare means
+        the epoch is I/O-bound — deepen the queue so the coalesced plans
+        overlap more requests; fully hidden prepare shrinks it back."""
+        lo, hi = self.io_queue_depth_bounds
+        qd = self.engine.config.io_queue_depth
+        if exposed_frac > 0.2:
+            qd = min(max(qd * 2, lo), hi)
+        elif exposed_frac < 0.02:
+            qd = min(max(qd // 2, lo), hi)
+        return self.engine.set_io_queue_depth(qd)
+
+    def _shutdown(self) -> BaseException | None:
+        """Stop, drain and join; returns a producer exception that would
+        otherwise be swallowed.
+
+        Draining with ``get_nowait`` can discard the producer's terminal
+        ``("error", exc, None)`` sentinel — and a producer that errored
+        after the stop event never gets to enqueue it at all (``_offer``
+        gives up) — so error sentinels are captured from the drain and,
+        after the join, from the producer's stash.
+        """
         self._stop.set()
+        leaked: BaseException | None = None
         if self._queue is not None:
             try:  # unblock a producer stuck on a full queue
                 while True:
-                    self._queue.get_nowait()
+                    kind, payload, _ = self._queue.get_nowait()
+                    if kind == "error" and leaked is None:
+                        leaked = payload
             except queue.Empty:
                 pass
         if self._producer is not None:
@@ -239,6 +328,10 @@ class PipelinedExecutor:
             if self._producer.is_alive():
                 # keep the handle: the next run_epoch must refuse to start
                 # while a wedged prepare call is still mutating the engine
-                return
+                return leaked
             self._producer = None
         self._queue = None
+        if leaked is None:
+            leaked = self._producer_error
+        self._producer_error = None
+        return leaked

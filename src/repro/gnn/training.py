@@ -40,6 +40,10 @@ class GNNTrainer:
     lr: float = 1e-3
     seed: int = 0
     backend: str = "jnp"   # aggregation primitives: "jnp" | "pallas"
+    # None = features stay host numpy until pad_mfg; "jnp" | "pallas" =
+    # run PreparedMinibatch.to_device first (the GIDS-style placement
+    # hook; "pallas" routes rows through the gather_rows kernel path)
+    feature_placement: str | None = None
     labels: np.ndarray | None = None
 
     def __post_init__(self):
@@ -74,6 +78,9 @@ class GNNTrainer:
     # ------------------------------------------------------------ api
     def train_minibatch(self, prepared: PreparedMinibatch) -> float:
         assert self.labels is not None, "set trainer.labels first"
+        if self.feature_placement is not None and isinstance(
+                prepared.features, np.ndarray):
+            prepared = prepared.to_device(backend=self.feature_placement)
         mfg = pad_mfg(prepared.mfg, prepared.features, self.labels)
         t0 = time.perf_counter()
         self.params, self.opt_state, loss, _ = self._step_fn(

@@ -170,6 +170,22 @@ def test_coalesced_reader_lazy_mode_reads_on_demand(tiny_ds):
         assert store.stats.bytes_read == before  # no double charging
 
 
+def test_coalesced_reader_run_tokens_survive_start_reuse(tiny_ds):
+    """A fused resubmission may reuse the start block of a still-open run
+    (delivered-then-evicted head); slot accounting must not collide."""
+    store, _ = tiny_ds.reopen_stores()
+    n = min(3, store.n_blocks)
+    with CoalescedReader(store, max_coalesce_bytes=8 << 20,
+                         queue_depth=2, workers=0) as rd:
+        rd.plan(np.arange(n))                 # one run
+        assert rd.fetch(0).block_id == 0      # head consumed
+        rd.plan([0])                          # start reuse, run still open
+        assert rd.fetch(0, timeout=5.0).block_id == 0
+        for b in range(1, n):
+            assert rd.fetch(b, timeout=5.0).block_id == b
+        assert not rd._remaining and rd._ready_runs == 0
+
+
 def test_coalesced_reader_survives_failing_read(tiny_ds):
     """A raising read_run must not kill the worker or wedge the pool."""
     store, _ = tiny_ds.reopen_stores()

@@ -1,0 +1,343 @@
+"""Staged PrepareSession: parity, fusion accounting, stage objects,
+placement hook, adaptive queue depth, vectorized-sampler oracle."""
+import numpy as np
+import pytest
+
+from repro.core import (AgnesConfig, AgnesEngine, PlanStream, NVMeModel,
+                        coalesce, plan_cost, sample_indices)
+
+
+def make_engine(ds, *, fusion=True, mcb=8 << 20, async_io=False, hb=True,
+                buffer_bytes=1 << 20, block_size=16384, fanouts=(5, 5),
+                cache_rows=0, shared_device=True):
+    dev = NVMeModel() if shared_device else None
+    g, f = ds.reopen_stores(device=dev)
+    cfg = AgnesConfig(block_size=block_size, minibatch_size=64,
+                      hyperbatch_size=8, fanouts=fanouts,
+                      graph_buffer_bytes=buffer_bytes,
+                      feature_buffer_bytes=buffer_bytes,
+                      feature_cache_rows=cache_rows,
+                      hyperbatch_enabled=hb, async_io=async_io,
+                      max_coalesce_bytes=mcb, plan_fusion=fusion)
+    return AgnesEngine(g, f, cfg)
+
+
+def _totals(eng):
+    g, f = eng.graph_store.stats, eng.feature_store.stats
+    return {
+        "bytes": g.bytes_read + f.bytes_read,
+        "reads": g.n_reads + f.n_reads,
+        "time": g.modeled_read_time + f.modeled_read_time,
+    }
+
+
+def _assert_prepared_equal(p1, p0):
+    for a, b in zip(p1, p0):
+        assert len(a.mfg.nodes) == len(b.mfg.nodes)
+        for x, y in zip(a.mfg.nodes, b.mfg.nodes):
+            assert np.array_equal(x, y)
+        for lx, ly in zip(a.mfg.layers, b.mfg.layers):
+            assert np.array_equal(lx.nbr_idx, ly.nbr_idx)
+            assert np.array_equal(lx.self_idx, ly.self_idx)
+        assert np.allclose(a.features, b.features)
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("async_io", [False, True])
+def test_session_fused_parity_with_barriered_path(tiny_ds, rng, async_io):
+    """Fused session vs pre-redesign schedule: byte-identical MFGs,
+    features and bytes_read at a fixed seed (the acceptance criterion)."""
+    targets = [rng.choice(tiny_ds.n_nodes, 150, replace=False)
+               for _ in range(6)]
+    barrier = make_engine(tiny_ds, fusion=False, async_io=async_io)
+    fused = make_engine(tiny_ds, fusion=True, async_io=async_io)
+    for epoch in range(2):
+        p0 = barrier.prepare(targets, epoch=epoch)
+        p1 = fused.prepare(targets, epoch=epoch)
+        _assert_prepared_equal(p1, p0)
+    t0, t1 = _totals(barrier), _totals(fused)
+    assert t1["bytes"] == t0["bytes"]
+    assert t1["reads"] == t0["reads"]
+    # fusion can only help the modeled stream (equal when one regime
+    # dominates every stage)
+    assert t1["time"] <= t0["time"] + 1e-12
+    barrier.close()
+    fused.close()
+
+
+def test_session_parity_with_legacy_scheduler_off(tiny_ds, rng):
+    """The session must also reproduce the mcb=0 legacy path exactly."""
+    targets = [rng.choice(tiny_ds.n_nodes, 150, replace=False)
+               for _ in range(4)]
+    legacy = make_engine(tiny_ds, mcb=0)             # no readers at all
+    fused = make_engine(tiny_ds, fusion=True)
+    p0 = legacy.prepare(targets, epoch=1)
+    p1 = fused.prepare(targets, epoch=1)
+    _assert_prepared_equal(p1, p0)
+    assert _totals(fused)["bytes"] == _totals(legacy)["bytes"]
+    legacy.close()
+    fused.close()
+
+
+def test_session_parity_hyperbatch_vs_per_minibatch(tiny_ds, rng):
+    """The Fig-12 equivalence survives the staged redesign."""
+    targets = [rng.choice(tiny_ds.n_nodes, 64, replace=False)
+               for _ in range(6)]
+    hb = make_engine(tiny_ds, hb=True)
+    no = make_engine(tiny_ds, hb=False)
+    _assert_prepared_equal(hb.prepare(targets, epoch=3),
+                           no.prepare(targets, epoch=3))
+    hb.close()
+    no.close()
+
+
+def test_session_parity_with_feature_cache(tiny_ds, rng):
+    targets = [rng.choice(tiny_ds.n_nodes, 150, replace=False)
+               for _ in range(4)]
+    a = make_engine(tiny_ds, fusion=False, cache_rows=500)
+    b = make_engine(tiny_ds, fusion=True, async_io=True, cache_rows=500)
+    for ep in range(3):
+        _assert_prepared_equal(b.prepare(targets, epoch=ep),
+                               a.prepare(targets, epoch=ep))
+    assert _totals(b)["bytes"] == _totals(a)["bytes"]
+    a.close()
+    b.close()
+
+
+# ------------------------------------------------------------------ stages
+def test_session_emits_staged_plans(tiny_ds, rng):
+    targets = [rng.choice(tiny_ds.n_nodes, 150, replace=False)
+               for _ in range(6)]
+    eng = make_engine(tiny_ds, fusion=True, fanouts=(5, 5))
+    eng.prepare(targets, epoch=0)
+    s = eng.last_session
+    assert s is not None and s.fused
+    stages = [p.stage for p in s.plans]
+    assert stages[0] == "sample:hop0"
+    assert stages[-1] == "gather"
+    assert "sample:hop1" in stages
+    for p in s.plans:
+        assert p.state == "consumed"
+        assert p.store in ("graph", "feature")
+        assert p.nbytes == p.n_blocks * p.block_size
+    # a session is single-use
+    with pytest.raises(RuntimeError, match="single-use"):
+        s.run()
+    eng.close()
+
+
+def test_session_unfused_when_fusion_disabled(tiny_ds, rng):
+    targets = [rng.choice(tiny_ds.n_nodes, 64, replace=False)
+               for _ in range(4)]
+    eng = make_engine(tiny_ds, fusion=False)
+    eng.prepare(targets, epoch=0)
+    assert not eng.last_session.fused
+    assert not any(":early" in p.stage for p in eng.last_session.plans)
+    eng.close()
+
+
+def test_plan_stream_fuses_rooflines():
+    """A fused stream pays max-of-sums; a barriered pair pays sum-of-max."""
+    dev = NVMeModel()
+    stream = PlanStream(dev)
+    iops_heavy = coalesce(list(range(0, 400, 2)), 4096, 0)   # 200 heads
+    bw_heavy = coalesce(list(range(1000, 3000)), 4096, 64 << 20)  # 8 MiB
+    *_, t1 = stream.charge(iops_heavy, 4096, 8)
+    *_, t2 = stream.charge(bw_heavy, 4096, 8)
+    fused = t1 + t2
+    *_, b1 = plan_cost(iops_heavy, 4096, dev, 8)
+    *_, b2 = plan_cost(bw_heavy, 4096, dev, 8)
+    assert fused < b1 + b2
+    assert fused == pytest.approx(max(
+        dev.batch_time((200 + 2000) * 4096, n_random=200 + len(bw_heavy),
+                       n_sequential=2000 - len(bw_heavy), queue_depth=8),
+        b1))
+    # a drained stream charges a single plan exactly like plan_cost
+    stream.drain()
+    *_, t3 = stream.charge(iops_heavy, 4096, 8)
+    assert t3 == pytest.approx(b1)
+
+
+# ------------------------------------------------------------------ oracle
+def test_vectorized_sampler_matches_independent_oracle(tiny_ds, rng):
+    """Seed-for-seed check of the batched fanout scatter against a
+    reference built from the in-memory CSR (no block machinery)."""
+    targets = [rng.choice(tiny_ds.n_nodes, 80, replace=False)
+               for _ in range(4)]
+    fanouts, epoch = (5, 4), 7
+    eng = make_engine(tiny_ds, fanouts=fanouts)
+    prepared = eng.prepare(targets, epoch=epoch)
+    indptr, indices = tiny_ds.indptr, tiny_ds.indices
+    for t, p in zip(targets, prepared):
+        frontier = np.unique(np.asarray(t, np.int64))
+        for hop, fanout in enumerate(fanouts):
+            deg = (indptr[frontier + 1] - indptr[frontier]).astype(np.int64)
+            pos = sample_indices(frontier, deg, fanout, eng.config.seed,
+                                 epoch, hop)
+            nbrs = np.full((len(frontier), fanout), -1, dtype=np.int64)
+            for i, v in enumerate(frontier):         # reference: plain loop
+                adj = indices[indptr[v]:indptr[v + 1]]
+                for k in range(fanout):
+                    if pos[i, k] >= 0:
+                        nbrs[i, k] = adj[pos[i, k]]
+            expect = np.unique(np.concatenate([frontier, nbrs[nbrs >= 0]]))
+            assert np.array_equal(p.mfg.nodes[hop + 1], expect)
+            layer = p.mfg.layers[hop]
+            got = np.where(layer.nbr_idx >= 0,
+                           expect[np.clip(layer.nbr_idx, 0, None)], -1)
+            assert np.array_equal(got, nbrs)
+            frontier = expect
+    eng.close()
+
+
+# ------------------------------------------------------------------ placement
+def test_to_device_placement_hook(tiny_ds, rng):
+    import jax
+
+    targets = [rng.choice(tiny_ds.n_nodes, 64, replace=False)]
+    eng = make_engine(tiny_ds)
+    p = eng.prepare(targets, epoch=0)[0]
+    d = p.to_device()
+    assert isinstance(d.features, jax.Array)
+    assert np.allclose(np.asarray(d.features), p.features)
+    # pallas route: the padded jit-stable block built via gather_rows
+    dp = p.to_device(backend="pallas")
+    n = p.features.shape[0]
+    assert dp.features.shape[0] == -(-n // 128) * 128
+    assert np.allclose(np.asarray(dp.features)[:n], p.features)
+    assert not np.asarray(dp.features)[n:].any()
+    assert d.mfg is p.mfg                # index arrays stay host numpy
+    eng.close()
+
+
+def test_trainer_feature_placement_matches_host_path(tiny_ds, rng):
+    from repro.gnn import GNNTrainer
+
+    targets = [rng.choice(tiny_ds.n_nodes, 64, replace=False)]
+    eng = make_engine(tiny_ds)
+    prepared = eng.prepare(targets, epoch=0)
+
+    def losses(placement):
+        tr = GNNTrainer(arch="gcn", in_dim=32, hidden=32, n_classes=16,
+                        n_layers=2, seed=11, feature_placement=placement)
+        tr.labels = tiny_ds.labels
+        return [tr.train_minibatch(p) for p in prepared]
+
+    assert losses(None) == losses("jnp")
+    eng.close()
+
+
+# ------------------------------------------------------------------ adaptive
+def test_adaptive_io_resizes_queue_depth(tiny_ds):
+    from repro.gnn import GNNTrainer, PipelinedExecutor
+
+    eng = make_engine(tiny_ds, fanouts=(4, 4))
+    tr = GNNTrainer(arch="gcn", in_dim=32, hidden=32, n_classes=16,
+                    n_layers=2, seed=7)
+    tr.labels = tiny_ds.labels
+    with PipelinedExecutor(eng, tr, depth=1, adaptive_io=True,
+                           io_queue_depth_bounds=(2, 32)) as ex:
+        rep = ex.run_epoch(np.arange(512), epoch=0)
+    assert len(rep.queue_depths) == rep.n_hyperbatches > 0
+    assert all(2 <= qd <= 32 for qd in rep.queue_depths)
+    assert rep.queue_depths[-1] == eng.config.io_queue_depth
+    io = rep.io_summary()
+    assert io["io_queue_depths"] == rep.queue_depths
+    assert 0.0 <= io["exposed_prepare_fraction"] <= 1.0
+    eng.close()
+
+
+def test_set_io_queue_depth_propagates(tiny_ds):
+    eng = make_engine(tiny_ds)
+    assert eng.set_io_queue_depth(16) == 16
+    assert eng.config.io_queue_depth == 16
+    assert eng._g_prefetch.queue_depth == 16
+    assert eng._f_prefetch.queue_depth == 16
+    eng.close()
+
+
+# ------------------------------------------------- legacy-path accounting
+def test_prepare_report_deltas_with_scheduler_disabled(tiny_ds, rng):
+    """max_coalesce_bytes=0 legacy path stays fully accounted."""
+    targets = [rng.choice(tiny_ds.n_nodes, 150, replace=False)
+               for _ in range(4)]
+    eng = make_engine(tiny_ds, mcb=0)
+    eng.prepare(targets, epoch=0)
+    rep = eng.last_report
+    for io in (rep.sample_io, rep.gather_io):
+        assert io["n_reads"] == io["n_requests"]  # no merging without sched
+        assert io["bytes"] > 0 and io["modeled_s"] > 0
+        assert 0 <= io["n_sequential"] <= io["n_reads"]
+    stats = _totals(eng)
+    assert rep.sample_io["bytes"] + rep.gather_io["bytes"] == stats["bytes"]
+    assert rep.modeled_io_s == pytest.approx(stats["time"])
+    eng.close()
+
+
+def test_io_summary_with_scheduler_disabled(tiny_ds):
+    from repro.gnn import GNNTrainer, PipelinedExecutor
+
+    eng = make_engine(tiny_ds, mcb=0, fanouts=(4, 4))
+    tr = GNNTrainer(arch="gcn", in_dim=32, hidden=32, n_classes=16,
+                    n_layers=2, seed=7)
+    tr.labels = tiny_ds.labels
+    with PipelinedExecutor(eng, tr, depth=1) as ex:
+        rep = ex.run_epoch(np.arange(256), epoch=0)
+    io = rep.io_summary()
+    assert io["coalesce_factor"] == 1.0     # every block its own request
+    assert io["n_reads"] == io["n_requests"] > 0
+    assert io["bytes_read"] > 0 and io["modeled_io_s"] > 0
+    assert io["io_queue_depths"] == []      # adaptive hook off
+    assert rep.summary()["io"] == io
+    eng.close()
+
+
+# ------------------------------------------------- executor shutdown race
+def test_shutdown_preserves_producer_error(tiny_ds):
+    """A prepare-side exception must survive the queue drain even when the
+    consumer is failing at the same time (the old get_nowait drain
+    silently discarded the ("error", exc, None) sentinel)."""
+    from repro.gnn import PipelinedExecutor
+
+    class Boom(RuntimeError):
+        pass
+
+    class FlakyEngine:
+        last_report = None
+
+        def plan_epoch(self, targets, epoch=0, shuffle=True):
+            return [[targets], [targets]]
+
+        def prepare(self, mbs, epoch=0):
+            if not hasattr(self, "_once"):
+                self._once = True
+                from repro.core import MFG
+                return [type("P", (), {"mfg": MFG([np.arange(4)], []),
+                                       "features": np.zeros((4, 8))})()]
+            raise Boom("prepare died mid-epoch")
+
+    class BadTrainer:
+        def train_minibatch(self, prepared):
+            raise ValueError("nan loss")
+
+    ex = PipelinedExecutor(FlakyEngine(), BadTrainer(), depth=1)
+    with pytest.raises(ValueError, match="nan loss") as ei:
+        ex.run_epoch(np.arange(8))
+    # the swallowed prepare error is chained, not dropped
+    assert isinstance(ei.value.__cause__, Boom)
+    ex.close()
+
+
+def test_clean_epoch_and_close_raise_nothing(tiny_ds):
+    from repro.gnn import GNNTrainer, PipelinedExecutor
+
+    eng = make_engine(tiny_ds, fanouts=(4, 4))
+    tr = GNNTrainer(arch="gcn", in_dim=32, hidden=32, n_classes=16,
+                    n_layers=2, seed=7)
+    tr.labels = tiny_ds.labels
+    ex = PipelinedExecutor(eng, tr, depth=1)
+    rep = ex.run_epoch(np.arange(256), epoch=0)
+    assert rep.n_minibatches == 4
+    ex.close()
+    ex.close()
+    eng.close()
