@@ -1,0 +1,235 @@
+"""Striping saturation sweep over the storage topology (fig11-style).
+
+The paper evaluates RAID0 arrays of 1-4 NVMe drives; the storage
+topology subsystem (``repro.core.topology``) makes that explicit —
+placement policies map blocks to independent arrays, coalesced runs
+split at stripe boundaries into per-array requests, and fused plans pay
+the ``max`` over per-array rooflines.  This benchmark sweeps
+``n_arrays x io_queue_depth x max_coalesce_bytes x policy`` on the real
+prepare path and locates the *saturation frontier*: the smallest
+(queue depth, coalesce cap) at which each array count reaches ~all of
+its achievable bandwidth.
+
+Two acceptance gates (tracked in ``BENCH_stripe.json`` by
+``run.py --quick``, guarded by ``benchmarks.check_regression``):
+
+* striping a bandwidth-bound prepare across 4 arrays must model
+  >= ``MIN_SPEEDUP`` (2x) over the single-array path, with byte-identical
+  MFGs, features and bytes_read — placement reshapes requests, never
+  what is read;
+* on a skewed-degree (hub-heavy) workload over a *heterogeneous*
+  topology (one Gen5-class array at 2x bandwidth / half latency beside
+  a standard one), the degree-aware hotness policy must beat
+  round-robin striping by >= ``MIN_POLICY_GAIN`` — it pins the hot
+  feature region on the fastest/least-loaded array (Ginex-style) where
+  striping spreads it uniformly and the slow array sets the roofline.
+  The duel workload draws training targets proportional to degree
+  (hub-heavy train sets, the common case for real labels), gathers
+  wide rows (feature traffic dominates), and runs three epochs so the
+  hot set is re-read — the regime the paper's §2 analysis puts Ginex
+  in.  The duel geometry is fixed at container scale in both tiers:
+  it is a policy A/B, not a scaling measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from .common import (WORKDIR, emit, get_dataset, make_agnes, quick_val,
+                     targets_for)
+
+from repro.core import (AgnesConfig, AgnesEngine, FeatureBlockStore,
+                        HotnessAwarePlacement, NVMeModel, StorageTopology,
+                        StripePlacement, feature_block_hotness,
+                        graph_block_hotness)
+from repro.data.synth import make_features
+
+MIN_SPEEDUP = 2.0       # 1 -> 4 arrays, bandwidth-bound workload
+MIN_POLICY_GAIN = 1.08  # hotness vs round-robin stripe, skewed workload
+SATURATION = 0.9        # fraction of best bandwidth that counts as saturated
+
+
+def _measure(eng, targets):
+    prepared = eng.prepare(targets, epoch=0)
+    g, f = eng.graph_store.stats, eng.feature_store.stats
+    t = g.modeled_read_time + f.modeled_read_time
+    nbytes = g.bytes_read + f.bytes_read
+    return prepared, {
+        "modeled_prepare_io_s": t,
+        "bytes_read": int(nbytes),
+        "n_requests": int(g.n_requests + f.n_requests),
+        "achieved_bw_GBps": round(nbytes / max(t, 1e-12) / 1e9, 3),
+    }
+
+
+def _assert_parity(p1, p0, tag):
+    for a, b in zip(p1, p0):
+        for x, y in zip(a.mfg.nodes, b.mfg.nodes):
+            assert np.array_equal(x, y), f"{tag}: placement changed the MFGs"
+        for lx, ly in zip(a.mfg.layers, b.mfg.layers):
+            assert np.array_equal(lx.nbr_idx, ly.nbr_idx)
+            assert np.array_equal(lx.self_idx, ly.self_idx)
+        assert np.allclose(a.features, b.features), \
+            f"{tag}: placement changed gathered features"
+
+
+def run() -> dict:
+    # bandwidth-bound geometry: dense block touch + large coalesce caps,
+    # so bytes/bw dominates the roofline and striping's parallel arrays
+    # are what is being measured
+    n_nodes = quick_val(120_000, 6_000)
+    block = quick_val(16384, 2048)
+    mb = quick_val(64, 48)
+    n_mb = 4
+    ds = get_dataset("stripesweep", dim=32, block_size=block,
+                     n_nodes=n_nodes, avg_degree=16)
+    targets = targets_for(ds, n_mb=n_mb, mb_size=mb)
+    kw = dict(block_size=block, fanouts=(4, 4), minibatch=mb,
+              hyperbatch_size=n_mb, setting_bytes=32 << 20)
+
+    # ---------------------------------------------------------- sweep
+    sweep: list[dict] = []
+    for n_arrays in (1, 2, 4):
+        for qd in (1, 4, 16):
+            for mcb in (block, 8 << 20):
+                eng = make_agnes(ds, n_arrays=n_arrays, placement="stripe",
+                                 io_queue_depth=qd, max_coalesce_bytes=mcb,
+                                 **kw)
+                _, m = _measure(eng, targets)
+                row = {"n_arrays": n_arrays, "io_queue_depth": qd,
+                       "max_coalesce_bytes": mcb, **m}
+                if eng.topology is not None:
+                    row["balance"] = \
+                        eng.topology.utilization_summary()["balance"]
+                sweep.append(row)
+                eng.close()
+    frontier: dict = {}
+    for n_arrays in (1, 2, 4):
+        rows = [r for r in sweep if r["n_arrays"] == n_arrays]
+        best = max(r["achieved_bw_GBps"] for r in rows)
+        sat = min((r for r in rows
+                   if r["achieved_bw_GBps"] >= SATURATION * best),
+                  key=lambda r: (r["io_queue_depth"],
+                                 r["max_coalesce_bytes"]))
+        frontier[f"arrays{n_arrays}"] = {
+            "best_bw_GBps": best,
+            "io_queue_depth": sat["io_queue_depth"],
+            "max_coalesce_bytes": sat["max_coalesce_bytes"],
+        }
+        emit(f"stripe/arrays{n_arrays}/best_bw_GBps", best,
+             f"saturates at qd={sat['io_queue_depth']} "
+             f"mcb={sat['max_coalesce_bytes'] // 1024}K")
+
+    # -------------------------------------------- acceptance: 1 -> 4 arrays
+    base = make_agnes(ds, n_arrays=1, **kw)
+    p0, before = _measure(base, targets)
+    quad = make_agnes(ds, n_arrays=4, placement="stripe", **kw)
+    p1, after = _measure(quad, targets)
+    _assert_parity(p1, p0, "stripe4")
+    assert after["bytes_read"] == before["bytes_read"], \
+        (after["bytes_read"], before["bytes_read"])
+    speedup = before["modeled_prepare_io_s"] / max(
+        after["modeled_prepare_io_s"], 1e-12)
+    # acceptance gate (deterministic: modeled device time of fixed plans)
+    assert speedup >= MIN_SPEEDUP, \
+        f"striping regression: {speedup:.2f}x < {MIN_SPEEDUP}x (1->4 arrays)"
+    # staged plans expose how placement splits each submission
+    plan_splits = [
+        {"stage": p.stage, "blocks": p.n_blocks,
+         "per_array": p.blocks_per_array.tolist()}
+        for p in quad.last_session.plans
+        if p.blocks_per_array is not None]
+    emit("stripe/speedup_1_to_4", speedup,
+         f"{before['modeled_prepare_io_s']*1e3:.2f}ms -> "
+         f"{after['modeled_prepare_io_s']*1e3:.2f}ms "
+         f"reqs {before['n_requests']}->{after['n_requests']}")
+    base.close()
+    quad.close()
+
+    # ------------------------------------- policy duel: skewed workload,
+    # heterogeneous 2-array topology (Gen5-class: 2x bandwidth, half
+    # latency — beside one standard Gen4 array).  Fixed geometry in both
+    # tiers: a deterministic policy A/B, not a scaling measurement.
+    duel_nodes, duel_g_block, duel_f_block, duel_dim = 6_000, 16384, 2048, 256
+    skew = get_dataset("stripeskew", dim=32, block_size=duel_g_block,
+                       n_nodes=duel_nodes, avg_degree=30)  # rmat: hub-heavy
+    fat_path = os.path.join(WORKDIR, "stripeskew_fat.feat")
+    if not os.path.exists(fat_path + ".meta.json"):
+        feats, _ = make_features(duel_nodes, duel_dim, seed=0)
+        FeatureBlockStore.build(fat_path, feats, block_size=duel_f_block)
+    # hub-heavy train set: target draw proportional to degree
+    duel_mb = 48
+    deg = np.diff(skew.indptr).astype(np.float64) + 1
+    rng = np.random.default_rng(0)
+    skew_targets = [rng.choice(duel_nodes, duel_mb, replace=False,
+                               p=deg / deg.sum()) for _ in range(n_mb)]
+
+    def duel_engine(policy_cls):
+        fast = dataclasses.replace(NVMeModel(), bandwidth=2 * 6.7e9,
+                                   latency=40e-6)
+        topo = StorageTopology([fast, NVMeModel()])
+        g, _ = skew.reopen_stores(NVMeModel())
+        f = FeatureBlockStore.open(fat_path, NVMeModel())
+        g.attach_topology(topo, policy_cls().place(
+            g.n_blocks, topo, hotness=graph_block_hotness(g)))
+        f.attach_topology(topo, policy_cls().place(
+            f.n_blocks, topo,
+            hotness=feature_block_hotness(f, g.approx_degrees())))
+        cfg = AgnesConfig(block_size=duel_g_block, minibatch_size=duel_mb,
+                          hyperbatch_size=n_mb, fanouts=(4, 4),
+                          graph_buffer_bytes=8 << 20,
+                          feature_buffer_bytes=2 << 20,
+                          feature_cache_rows=1, async_io=False)
+        return AgnesEngine(g, f, cfg)
+
+    duel: dict = {}
+    prepared_by_policy = {}
+    for policy, mk in (
+            ("stripe", lambda: StripePlacement(1)),
+            # pin a large hot mass: the duel's train set is hub-heavy,
+            # so most traffic is pinnable
+            ("hotness", lambda: HotnessAwarePlacement(1, hot_mass=0.8))):
+        eng = duel_engine(mk)
+        for epoch in range(3):  # hot set re-read every epoch
+            prepared = eng.prepare(skew_targets, epoch=epoch)
+        g, f = eng.graph_store.stats, eng.feature_store.stats
+        duel[policy] = {
+            "modeled_prepare_io_s": g.modeled_read_time + f.modeled_read_time,
+            "bytes_read": int(g.bytes_read + f.bytes_read),
+            "n_requests": int(g.n_requests + f.n_requests),
+            "balance": eng.topology.utilization_summary()["balance"],
+        }
+        prepared_by_policy[policy] = prepared
+        eng.close()
+    _assert_parity(prepared_by_policy["hotness"],
+                   prepared_by_policy["stripe"], "policy_duel")
+    assert duel["hotness"]["bytes_read"] == duel["stripe"]["bytes_read"]
+    policy_speedup = duel["stripe"]["modeled_prepare_io_s"] / max(
+        duel["hotness"]["modeled_prepare_io_s"], 1e-12)
+    assert policy_speedup >= MIN_POLICY_GAIN, \
+        (f"degree-aware placement regression: {policy_speedup:.2f}x < "
+         f"{MIN_POLICY_GAIN}x vs round-robin on the skewed workload")
+    emit("stripe/policy_duel_speedup", policy_speedup,
+         f"hotness {duel['hotness']['modeled_prepare_io_s']*1e3:.2f}ms vs "
+         f"stripe {duel['stripe']['modeled_prepare_io_s']*1e3:.2f}ms "
+         f"(balance {duel['stripe']['balance']}->"
+         f"{duel['hotness']['balance']})")
+
+    return {
+        "workload": {"n_nodes": ds.n_nodes, "block_size": block,
+                     "graph_blocks": ds.graph_store.n_blocks,
+                     "feature_blocks": ds.feature_store.n_blocks},
+        "sweep": sweep,
+        "frontier": frontier,
+        "single_array": before,
+        "striped4": after,
+        "plan_splits": plan_splits,
+        "speedup_1_to_4": round(speedup, 3),
+        "policy_duel": {**duel, "speedup": round(policy_speedup, 3)},
+    }
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,91 @@
+"""Benchmark regression guard (``RUN_BENCH=1 scripts/test.sh``).
+
+Compares the freshly written ``BENCH_*.json`` trajectory files at the
+repo root against each benchmark's asserted speedup floor — the floors
+are imported from the benchmark modules themselves, so the guard can
+never drift from what the benchmarks enforce inline.  Fails loudly
+(non-zero exit, one line per violation) on any regression; a missing
+trajectory file is skipped with a note (subset runs must not fail the
+guard), but a file that exists with a missing or sub-floor speedup is
+an error.
+
+  PYTHONPATH=src python -m benchmarks.check_regression [repo_root]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from . import bench_io_sched, bench_plan_fusion, bench_striping
+
+# file -> [(dotted path into the json payload, floor, description)]
+GUARDS = {
+    "BENCH_io.json": [
+        ("io.ssd1.speedup", bench_io_sched.MIN_SPEEDUP,
+         "coalesced vs per-block prepare I/O (1 SSD)"),
+        ("io.ssd4.speedup", bench_io_sched.MIN_SPEEDUP,
+         "coalesced vs per-block prepare I/O (RAID0 x4)"),
+    ],
+    "BENCH_fusion.json": [
+        ("fusion.speedup", bench_plan_fusion.MIN_SPEEDUP,
+         "fused vs barriered staged prepare"),
+    ],
+    "BENCH_stripe.json": [
+        ("stripe.speedup_1_to_4", bench_striping.MIN_SPEEDUP,
+         "striped 4-array vs single-array prepare I/O"),
+        ("stripe.policy_duel.speedup", bench_striping.MIN_POLICY_GAIN,
+         "degree-aware placement vs round-robin stripe"),
+    ],
+}
+
+
+def _lookup(payload: dict, dotted: str):
+    node = payload
+    for key in dotted.split("."):
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
+
+
+def check(root: str) -> list[str]:
+    failures: list[str] = []
+    for fname, guards in GUARDS.items():
+        path = os.path.join(root, fname)
+        if not os.path.exists(path):
+            print(f"# {fname}: not present, skipping "
+                  f"(subset run writes only what it measured)")
+            continue
+        with open(path) as f:
+            payload = json.load(f)
+        for dotted, floor, what in guards:
+            value = _lookup(payload, dotted)
+            if not isinstance(value, (int, float)):
+                failures.append(
+                    f"{fname}: {dotted} missing — {what} was not measured "
+                    f"by the run that wrote this file")
+                continue
+            if value < floor:
+                failures.append(
+                    f"{fname}: {dotted} = {value:.3f} < floor {floor} "
+                    f"({what})")
+            else:
+                print(f"# {fname}: {dotted} = {value:.3f} >= {floor} ok")
+    return failures
+
+
+def main() -> None:
+    root = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.join(os.path.dirname(__file__), "..")
+    failures = check(os.path.abspath(root))
+    if failures:
+        print("BENCHMARK REGRESSION:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        sys.exit(1)
+    print("# benchmark floors all green")
+
+
+if __name__ == "__main__":
+    main()

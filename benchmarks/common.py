@@ -64,7 +64,10 @@ def make_agnes(ds, *, setting_bytes: int = 64 << 20, block_size: int = 1 << 20,
                cache_rows: int = 0, async_io: bool = False,
                max_coalesce_bytes: int | None = None,
                io_queue_depth: int | None = None,
-               io_workers: int | None = None) -> AgnesEngine:
+               io_workers: int | None = None,
+               n_arrays: int | None = None,
+               placement: str | None = None,
+               topology=None) -> AgnesEngine:
     dev = NVMeModel(n_ssd=n_ssd)
     g, f = ds.reopen_stores(device=dev)
     extra = {}
@@ -74,6 +77,10 @@ def make_agnes(ds, *, setting_bytes: int = 64 << 20, block_size: int = 1 << 20,
         extra["io_queue_depth"] = io_queue_depth
     if io_workers is not None:
         extra["io_workers"] = io_workers
+    if n_arrays is not None:
+        extra["n_arrays"] = n_arrays
+    if placement is not None:
+        extra["placement"] = placement
     cfg = AgnesConfig(block_size=block_size, minibatch_size=minibatch,
                       hyperbatch_size=hyperbatch_size, fanouts=fanouts,
                       graph_buffer_bytes=setting_bytes // 2,
@@ -81,7 +88,7 @@ def make_agnes(ds, *, setting_bytes: int = 64 << 20, block_size: int = 1 << 20,
                       feature_cache_rows=cache_rows,
                       hyperbatch_enabled=hyperbatch, async_io=async_io,
                       **extra)
-    return AgnesEngine(g, f, cfg)
+    return AgnesEngine(g, f, cfg, topology=topology)
 
 
 def make_baseline(cls, ds, *, setting_bytes: int = 64 << 20, n_ssd: int = 1,

@@ -1,7 +1,8 @@
 """Benchmark harness: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] \
-      [fig2 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 pipeline io fusion]
+      [fig2 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 pipeline io fusion
+       stripe]
 
 Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
 
@@ -22,7 +23,7 @@ from . import (bench_fig2_breakdown, bench_fig4_io_unit, bench_fig6_eq1,
                bench_fig7_distdgl, bench_fig8_hyperbatch, bench_fig9_sweep,
                bench_fig10_sensitivity, bench_fig11_bw, bench_fig12_accuracy,
                bench_io_sched, bench_pipeline_overlap, bench_plan_fusion,
-               common)
+               bench_striping, common)
 
 ALL = {
     "fig2": bench_fig2_breakdown.run,
@@ -37,6 +38,7 @@ ALL = {
     "pipeline": bench_pipeline_overlap.run,
     "io": bench_io_sched.run,
     "fusion": bench_plan_fusion.run,
+    "stripe": bench_striping.run,
 }
 
 OUT_PATH = os.environ.get(
@@ -45,6 +47,9 @@ OUT_PATH = os.environ.get(
 FUSION_OUT_PATH = os.environ.get(
     "REPRO_BENCH_FUSION_OUT",
     os.path.join(os.path.dirname(__file__), "..", "BENCH_fusion.json"))
+STRIPE_OUT_PATH = os.environ.get(
+    "REPRO_BENCH_STRIPE_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_stripe.json"))
 
 
 def main() -> None:
@@ -89,6 +94,14 @@ def main() -> None:
                            "fusion": results["fusion"].get("metrics")},
                           f, indent=2)
             print(f"# wrote {fout}", flush=True)
+        if "stripe" in results:
+            # multi-SSD striping saturation sweep, tracked PR over PR
+            sout = os.path.abspath(STRIPE_OUT_PATH)
+            with open(sout, "w") as f:
+                json.dump({"quick": True,
+                           "stripe": results["stripe"].get("metrics")},
+                          f, indent=2)
+            print(f"# wrote {sout}", flush=True)
 
 
 if __name__ == '__main__':

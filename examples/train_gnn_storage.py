@@ -49,6 +49,15 @@ def main():
                     choices=["jnp", "pallas"],
                     help="land prepared features device-resident via "
                          "PreparedMinibatch.to_device before training")
+    ap.add_argument("--n-arrays", type=int, default=1,
+                    help="independent NVMe arrays in the storage topology "
+                         "(1 = single opaque device)")
+    ap.add_argument("--placement", default="stripe",
+                    choices=["contiguous", "stripe", "hotness"],
+                    help="block placement policy across arrays "
+                         "(hotness = degree-aware, Ginex-style pinning)")
+    ap.add_argument("--stripe-width", type=int, default=1,
+                    help="RAID0 chunk in blocks for striped placements")
     args = ap.parse_args()
 
     if args.backend == "pallas":
@@ -109,8 +118,19 @@ def main():
         graph_buffer_bytes=32 << 20, feature_buffer_bytes=32 << 20,
         max_coalesce_bytes=args.coalesce_bytes,
         io_queue_depth=args.io_queue_depth, io_workers=args.io_workers,
-        plan_fusion=not args.no_fusion))
+        plan_fusion=not args.no_fusion,
+        n_arrays=args.n_arrays, placement=args.placement,
+        stripe_width_blocks=args.stripe_width))
     acc_a, io_a = run("agnes", agnes)
+    if agnes.topology is not None:
+        u = agnes.io_stats()["arrays"]
+        print(f"[agnes] storage topology: {u['n_arrays']} arrays "
+              f"({args.placement}), busy balance {u['balance']:.2f}")
+        for a in u["arrays"]:
+            print(f"[agnes]   array {a['array']}: {a['bandwidth_GBps']} GB/s, "
+                  f"{a['bytes'] / 1e6:.1f} MB in {a['n_requests']} requests "
+                  f"(seq {a['sequential_fraction']:.0%}), "
+                  f"busy {a['busy_s'] * 1e3:.2f} ms, share {a['share']:.0%}")
     agnes.close()
 
     ginex = GinexLike(ds.csr_storage(16 << 20, NVMeModel()),

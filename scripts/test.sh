@@ -1,12 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 verify — runs the suite exactly as ROADMAP.md specifies.
 # RUN_BENCH=1 additionally runs the --quick benchmark smoke tier, which
-# writes BENCH_io.json (I/O scheduler before/after numbers) and
-# BENCH_fusion.json (fused vs barriered staged prepare, >= 1.3x asserted)
-# at repo root.
+# writes BENCH_io.json (I/O scheduler before/after numbers),
+# BENCH_fusion.json (fused vs barriered staged prepare) and
+# BENCH_stripe.json (multi-SSD striping sweep) at repo root, then runs
+# the regression guard: every freshly written BENCH_*.json speedup is
+# compared against its benchmark's asserted floor and any regression
+# fails the build loudly (benchmarks/check_regression.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 if [[ "${RUN_BENCH:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.check_regression
 fi

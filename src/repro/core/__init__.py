@@ -23,6 +23,11 @@ from .layout import apply_relabel, bfs_locality_order, degree_order
 from .sampling import (MFG, MFGLayer, assemble_layer, layer_from_frontier,
                        next_frontier, sample_indices)
 from .session import IOPlan, PrepareSession
+from .topology import (BlockPlacement, ContiguousPlacement,
+                       HotnessAwarePlacement, PlacementPolicy,
+                       StorageTopology, StripePlacement,
+                       feature_block_hotness, graph_block_hotness,
+                       make_policy, topology_plan_cost)
 
 __all__ = [
     "AgnesConfig", "AgnesEngine", "PreparedMinibatch", "PrepareReport",
@@ -35,5 +40,8 @@ __all__ = [
     "IOPlan", "PrepareSession", "apply_relabel",
     "bfs_locality_order", "degree_order", "MFG", "MFGLayer",
     "assemble_layer", "layer_from_frontier", "next_frontier",
-    "sample_indices",
+    "sample_indices", "BlockPlacement", "ContiguousPlacement",
+    "HotnessAwarePlacement", "PlacementPolicy", "StorageTopology",
+    "StripePlacement", "feature_block_hotness", "graph_block_hotness",
+    "make_policy", "topology_plan_cost",
 ]

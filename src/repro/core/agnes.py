@@ -28,6 +28,8 @@ from .gather import FeatureGatherer
 from .hyperbatch import HyperbatchSampler
 from .sampling import MFG
 from .session import PrepareSession
+from .topology import (StorageTopology, feature_block_hotness,
+                       graph_block_hotness, make_policy)
 
 
 @dataclasses.dataclass
@@ -57,6 +59,16 @@ class AgnesConfig:
     # fused PlanStream per device.  False = pre-session schedule (one plan
     # per hop, barrier at every hop boundary) — bytes/MFGs identical.
     plan_fusion: bool = True
+    # --- storage topology (core/topology.py) ---
+    # number of independent NVMe arrays; 1 = single opaque device (the
+    # pre-topology path, byte- and time-identical to earlier releases)
+    n_arrays: int = 1
+    # block placement policy across arrays: "contiguous" | "stripe" |
+    # "hotness" (degree-aware, Ginex-style pinning)
+    placement: str = "stripe"
+    # RAID0 chunk in blocks; the block is already the I/O unit, so
+    # one-block chunks interleave finest and balance short runs best
+    stripe_width_blocks: int = 1
     seed: int = 0
 
     def buffer_blocks(self, nbytes: int) -> int:
@@ -119,11 +131,42 @@ class AgnesEngine:
 
     def __init__(self, graph_store: GraphBlockStore,
                  feature_store: FeatureBlockStore,
-                 config: AgnesConfig | None = None):
+                 config: AgnesConfig | None = None,
+                 topology: StorageTopology | None = None):
         self.config = config or AgnesConfig()
         cfg = self.config
         self.graph_store = graph_store
         self.feature_store = feature_store
+        # storage topology: explicit multi-array placement (topology.py).
+        # An explicit ``topology`` wins (heterogeneous arrays, sweeps);
+        # otherwise cfg.n_arrays > 1 builds a uniform one from the store
+        # device.  Placement only reshapes requests/queues/accounting —
+        # bytes, MFGs and features stay identical to the single-array path.
+        if topology is None and cfg.n_arrays > 1:
+            topology = StorageTopology.uniform(cfg.n_arrays,
+                                               like=graph_store.device)
+        if topology is None:
+            topology = graph_store.topology  # stores pre-attached by caller
+        self.topology = topology
+        if topology is not None:
+            # stores with a placement already attached (custom policies,
+            # reloaded on-disk layouts) are respected, not re-placed.
+            # persist=False: config-derived placements are deterministic,
+            # so engine construction must not rewrite <store>.topo.json
+            # as a side effect — persistence is the store API's job
+            # (attach_topology(persist=True) / load_placement).
+            policy = make_policy(cfg.placement, cfg.stripe_width_blocks)
+            if graph_store.placement is None:
+                graph_store.attach_topology(topology, policy.place(
+                    graph_store.n_blocks, topology,
+                    hotness=graph_block_hotness(graph_store)),
+                    persist=False)
+            if feature_store.placement is None:
+                feature_store.attach_topology(topology, policy.place(
+                    feature_store.n_blocks, topology,
+                    hotness=feature_block_hotness(
+                        feature_store, graph_store.approx_degrees())),
+                    persist=False)
         self.graph_buffer = BlockBuffer(
             cfg.buffer_blocks(cfg.graph_buffer_bytes), name="graph")
         self.feature_buffer = BlockBuffer(
@@ -148,7 +191,9 @@ class AgnesEngine:
             # queue (a single submission costs exactly the per-plan batch).
             workers = cfg.io_workers if cfg.async_io else 0
             g_stream = PlanStream(graph_store.device)
-            f_stream = (g_stream if feature_store.device is graph_store.device
+            f_stream = (g_stream
+                        if (self.topology is not None
+                            or feature_store.device is graph_store.device)
                         else PlanStream(feature_store.device))
             self._g_prefetch = CoalescedReader(
                 graph_store, max_coalesce_bytes=cfg.max_coalesce_bytes,
@@ -239,28 +284,35 @@ class AgnesEngine:
         for mbs in self.plan_epoch(all_targets, epoch=epoch, shuffle=shuffle):
             yield self.prepare(mbs, epoch)
 
-    def set_io_queue_depth(self, queue_depth: int) -> int:
+    def set_io_queue_depth(self, queue_depth: int,
+                           array: int | None = None) -> int:
         """Adaptive scheduler hook: resize the coalesced readers' in-flight
         run budget between hyperbatches (``PipelinedExecutor`` drives this
-        from the measured exposed-prepare fraction)."""
+        from the measured exposed-prepare fraction).  With a storage
+        topology, an explicit ``array`` resizes that array's queue
+        independently; ``None`` sets a uniform depth on every array."""
         qd = max(int(queue_depth), 1)
-        self.config.io_queue_depth = qd
+        if array is None:
+            self.config.io_queue_depth = qd
         for p in (self._g_prefetch, self._f_prefetch):
             if p is not None and hasattr(p, "set_queue_depth"):
-                p.set_queue_depth(qd)
+                p.set_queue_depth(qd, array=array)
         return qd
 
     def io_stats(self) -> dict:
         g = self.graph_store.stats
         f = self.feature_store.stats
         total = IOStats().merge(g).merge(f)
-        return {
+        out = {
             "graph": g.summary(), "feature": f.summary(),
             "total": total.summary(),
             "graph_buffer_hit": self.graph_buffer.stats.buffer_hit_ratio,
             "feature_buffer_hit": self.feature_buffer.stats.buffer_hit_ratio,
             "feature_cache_hit": self.feature_cache.stats.cache_hit_ratio,
         }
+        if self.topology is not None:
+            out["arrays"] = self.topology.utilization_summary()
+        return out
 
     def close(self) -> None:
         for p in (self._g_prefetch, self._f_prefetch):

@@ -34,6 +34,7 @@ import numpy as np
 
 from .device_model import IOStats, NVMeModel
 from .io_sched import Run, coalesce, plan_cost
+from .topology import BlockPlacement, StorageTopology, topology_plan_cost
 
 DEFAULT_BLOCK_SIZE = 1 << 20  # 1 MiB (paper default)
 _HDR = 3  # directory words per entry: node_id, count, total_degree
@@ -67,7 +68,47 @@ class _BlockReadBatcher:
     ``stats``, ``_io_lock``, ``_last_block_read`` and
     ``read_run(start, count)`` (one memmap slice, vectorized decode, no
     accounting).
+
+    Also the store-side half of the storage-topology protocol
+    (``topology.py``): :meth:`attach_topology` binds a
+    :class:`StorageTopology` + :class:`BlockPlacement`, after which
+    coalesced runs are split at stripe boundaries into per-array runs
+    and every read is charged on its *owning array's* device — the
+    ``max``-over-arrays roofline instead of one merged device.
     """
+
+    topology: StorageTopology | None = None
+    placement: BlockPlacement | None = None
+
+    def attach_topology(self, topology: StorageTopology,
+                        placement: BlockPlacement,
+                        persist: bool = True) -> None:
+        """Bind this store's blocks to a multi-array topology.
+
+        ``persist=True`` writes the ``block_id -> (array, local_block)``
+        mapping into the store's on-disk directory
+        (``<path>.topo.json``) so a reopened store can
+        :meth:`load_placement` the same layout.
+        """
+        if placement.n_blocks != self.n_blocks:
+            raise ValueError(
+                f"placement covers {placement.n_blocks} blocks, "
+                f"store has {self.n_blocks}")
+        if placement.n_arrays > topology.n_arrays:
+            raise ValueError("placement references more arrays than the "
+                             "topology has")
+        self.topology = topology
+        self.placement = placement
+        # per-array sequential-access detection in *local* coordinates
+        self._last_local_read = np.full(topology.n_arrays, -2, dtype=np.int64)
+        if persist:
+            placement.save(self.path)
+
+    def load_placement(self, topology: StorageTopology) -> BlockPlacement:
+        """Re-attach the persisted on-disk placement (``<path>.topo.json``)."""
+        placement = BlockPlacement.load(self.path)
+        self.attach_topology(topology, placement, persist=False)
+        return placement
 
     def read_blocks(self, block_ids, max_coalesce_bytes: int = 0,
                     queue_depth: int | None = None) -> list:
@@ -80,38 +121,104 @@ class _BlockReadBatcher:
         """
         runs = coalesce(block_ids, self.block_size, max_coalesce_bytes)
         qd = queue_depth if queue_depth is not None else self.device.queue_depth
-        self.account_runs(runs, qd)
+        self.account_runs(runs, qd, max_coalesce_bytes=max_coalesce_bytes)
         out: list = []
         for r in runs:
             out.extend(self.read_run(r.start, r.count))
         return out
 
-    def account_runs(self, runs: list[Run], queue_depth: int,
-                     stream=None) -> None:
+    def account_runs(self, runs: list[Run], queue_depth, stream=None,
+                     max_coalesce_bytes: int = 0) -> None:
         """Charge a submitted plan of coalesced runs.
 
         With ``stream=None`` the plan is an isolated batch at queue-depth
         overlap (:func:`plan_cost`).  With a :class:`PlanStream` the
         submission fuses into the stream's open batch and is charged only
         its incremental cost (cross-hop plan fusion).
+
+        With a placement attached the runs are first split at stripe
+        boundaries into per-array local runs (re-merged where stripes
+        are physically adjacent on one array, capped at
+        ``max_coalesce_bytes``) and the submission costs the ``max``
+        over per-array rooflines; ``queue_depth`` may be a per-array
+        mapping.  Bytes are identical either way — splitting reshapes
+        requests, never what is read.
         """
         if not runs:
             return
-        if stream is not None:
-            total, n_blocks, n_seq, t = stream.charge(
-                runs, self.block_size, queue_depth)
+        if self.placement is not None:
+            placed = self.placement.split_runs(runs, self.block_size,
+                                               max_coalesce_bytes)
+            entries = [(self.topology.devices[a], rs,
+                        self.topology.queue_depth_of(queue_depth, a))
+                       for a, rs in placed]
+            if stream is not None:
+                total, n_blocks, n_seq, t = stream.charge_split(
+                    entries, self.block_size)
+            else:
+                total, n_blocks, n_seq, t = topology_plan_cost(
+                    placed, self.block_size, self.topology, queue_depth)
+            sizes = [r.count * self.block_size for _, rs in placed for r in rs]
+            # per-array utilization accounting: each array's isolated
+            # roofline for its share of this submission
+            with self.topology.lock:
+                for (a, rs), (dev, _, qd) in zip(placed, entries):
+                    nb = sum(r.count for r in rs)
+                    busy = dev.batch_time(nb * self.block_size,
+                                          n_random=len(rs),
+                                          n_sequential=nb - len(rs),
+                                          queue_depth=qd)
+                    self.topology.array_stats[a].record_run_batch(
+                        nb * self.block_size, nb, nb - len(rs),
+                        [r.count * self.block_size for r in rs], busy)
         else:
-            total, n_blocks, n_seq, t = plan_cost(runs, self.block_size,
-                                                  self.device, queue_depth)
+            qd = queue_depth if not isinstance(queue_depth, dict) \
+                else queue_depth.get(0, self.device.queue_depth)
+            if stream is not None:
+                total, n_blocks, n_seq, t = stream.charge(
+                    runs, self.block_size, qd)
+            else:
+                total, n_blocks, n_seq, t = plan_cost(runs, self.block_size,
+                                                      self.device, qd)
+            sizes = [r.count * self.block_size for r in runs]
         with self._io_lock:
-            self.stats.record_run_batch(
-                total, n_blocks, n_seq,
-                [r.count * self.block_size for r in runs], t)
+            self.stats.record_run_batch(total, n_blocks, n_seq, sizes, t)
             self._last_block_read = runs[-1].stop - 1
+            if self.placement is not None:
+                # seed per-array sequential detection: a following
+                # per-block read locally adjacent to a batch's tail must
+                # stream sequential, like _last_block_read does above
+                for a, rs in placed:
+                    if rs:
+                        self._last_local_read[a] = rs[-1].stop - 1
+
+    def _record_block_read_locked(self, block_id: int) -> None:
+        """Charge one block-granular read on its owning array (or the
+        single device), with sequential detection in that array's local
+        block coordinates.  Caller holds ``_io_lock``."""
+        if self.placement is not None:
+            a = int(self.placement.array_of[block_id])
+            loc = int(self.placement.local_of[block_id])
+            sequential = loc == self._last_local_read[a] + 1
+            self._last_local_read[a] = loc
+            dev = self.topology.devices[a]
+        else:
+            sequential = block_id == self._last_block_read + 1
+            dev = self.device
+        self._last_block_read = block_id
+        t = dev.request_time(self.block_size, sequential=sequential)
+        self.stats.record_read(self.block_size, t, sequential=sequential)
+        if self.placement is not None:
+            with self.topology.lock:
+                self.topology.array_stats[a].record_read(
+                    self.block_size, t, sequential=sequential)
 
 
 class GraphBlockStore(_BlockReadBatcher):
     """Block-organized adjacency storage with pinned object index table."""
+
+    directory_header_words = _HDR  # per-entry directory width (topology.py
+    # derives per-block payload/degree estimates from it)
 
     def __init__(self, path: str, block_size: int, t_obj: np.ndarray,
                  n_nodes: int, n_edges: int,
@@ -244,18 +351,45 @@ class GraphBlockStore(_BlockReadBatcher):
         out = np.repeat(lo, lens) + np.arange(cum[-1]) - np.repeat(cum - lens, lens)
         return np.unique(out)
 
+    def entry_payload_estimate(self) -> np.ndarray:
+        """Per-block payload words per directory entry, from the pinned
+        T_obj (no I/O): each block's payload is split evenly over the
+        objects it holds.  Blocks holding few objects hold hubs — the
+        score the hotness-aware placement pins on (``topology.py``)."""
+        if self.n_blocks == 0:
+            return np.zeros(0, dtype=np.float64)
+        n_obj = (self.t_obj[:, 1] - self.t_obj[:, 0] + 1).astype(np.float64)
+        payload = np.maximum(
+            self.words_per_block - 1 - self.directory_header_words * n_obj,
+            1.0)
+        return payload / np.maximum(n_obj, 1.0)
+
+    def approx_degrees(self) -> np.ndarray:
+        """Per-node degree estimate from the pinned T_obj (no I/O).
+
+        An object split across k blocks accumulates ~k blocks of
+        payload, so hubs score near their true degree.  Feeds the
+        hotness-aware placement policy (``topology.py``)."""
+        deg = np.zeros(self.n_nodes + 1, dtype=np.float64)
+        if self.n_blocks == 0 or self.n_nodes == 0:
+            return deg[:-1]
+        firsts = self.t_obj[:, 0]
+        lasts = self.t_obj[:, 1]
+        per = self.entry_payload_estimate()
+        # add per[b] to every node in [first, last] via prefix sums
+        np.add.at(deg, firsts, per)
+        np.add.at(deg, np.minimum(lasts + 1, self.n_nodes), -per)
+        return np.cumsum(deg)[:-1]
+
     # ---------------------------------------------------------- I/O
     def read_block(self, block_id: int) -> GraphBlock:
         """Block-wise storage I/O: one device read of ``block_size`` bytes."""
         if not (0 <= block_id < self.n_blocks):
             raise IndexError(block_id)
         with self._io_lock:
-            sequential = block_id == self._last_block_read + 1
-            self._last_block_read = block_id
             w = self.words_per_block
             raw = np.asarray(self._mm[block_id * w:(block_id + 1) * w])
-            t = self.device.request_time(self.block_size, sequential=sequential)
-            self.stats.record_read(self.block_size, t, sequential=sequential)
+            self._record_block_read_locked(block_id)
         return self._decode(block_id, raw)
 
     def read_run(self, start: int, count: int) -> list[GraphBlock]:
@@ -393,12 +527,9 @@ class FeatureBlockStore(_BlockReadBatcher):
         if not (0 <= block_id < self.n_blocks):
             raise IndexError(block_id)
         with self._io_lock:
-            sequential = block_id == self._last_block_read + 1
-            self._last_block_read = block_id
             r = self.rows_per_block
             rows = np.asarray(self._mm[block_id * r:(block_id + 1) * r])
-            t = self.device.request_time(self.block_size, sequential=sequential)
-            self.stats.record_read(self.block_size, t, sequential=sequential)
+            self._record_block_read_locked(block_id)
         return rows
 
     def read_run(self, start: int, count: int) -> list[np.ndarray]:
@@ -427,8 +558,35 @@ class FeatureBlockStore(_BlockReadBatcher):
         self.stats.size_histogram[max(per_io // 1024, 1)] += len(nodes)
         return out
 
-    def write_rows_node_granular(self, nodes: np.ndarray, io_unit: int = 4096) -> None:
-        """Account a node-granular write-back (feature-cache eviction path)."""
+    def write_rows_node_granular(self, nodes: np.ndarray, io_unit: int = 4096,
+                                 queue_depth: int | None = None) -> None:
+        """Account a node-granular write-back (feature-cache eviction path).
+
+        Charged through :meth:`NVMeModel.batch_time` with queue-depth
+        overlap — matching the read path — with every write request's
+        size recorded in the histogram; with a placement attached the
+        writes split across their owning arrays and cost the ``max``
+        over per-array rooflines.
+        """
+        nodes = np.asarray(nodes)
+        if len(nodes) == 0:
+            return
         per_io = -(-self.row_bytes // io_unit) * io_unit
-        t = self.device.batch_time(per_io * len(nodes), n_random=len(nodes))
-        self.stats.record_write(per_io * len(nodes), t)
+        if self.placement is not None:
+            arrays = self.placement.array_of[self.block_of(nodes)]
+            t = 0.0
+            with self.topology.lock:
+                for a in np.unique(arrays):
+                    k = int((arrays == a).sum())
+                    dev = self.topology.devices[int(a)]
+                    ta = dev.batch_time(per_io * k, n_random=k,
+                                        queue_depth=queue_depth)
+                    self.topology.array_stats[int(a)].record_write(
+                        per_io * k, ta, request_sizes=[per_io] * k)
+                    t = max(t, ta)
+        else:
+            t = self.device.batch_time(per_io * len(nodes),
+                                       n_random=len(nodes),
+                                       queue_depth=queue_depth)
+        self.stats.record_write(per_io * len(nodes), t,
+                                request_sizes=[per_io] * len(nodes))

@@ -13,6 +13,12 @@ Aggregate with queue-depth QD in flight and an n-SSD RAID0 array:
     T(batch) = max(sum_bytes / (bw * n_ssd), n_random * latency / QD)
 which captures both the bandwidth-bound regime (large block I/O: AGNES)
 and the latency/IOPS-bound regime (many 4 KB reads: Ginex-like).
+
+``n_ssd`` models one *merged* RAID0 array (bandwidth scales, the queue
+does not).  Multi-array topologies — N independent devices with their
+own queues, placement, and per-array accounting — are modeled above
+this layer by ``repro.core.topology``; each array there is a
+single-SSD :class:`NVMeModel`.
 """
 from __future__ import annotations
 
@@ -102,11 +108,20 @@ class IOStats:
         for s in request_sizes:
             self.size_histogram[_bucket(s)] += 1
 
-    def record_write(self, nbytes: int, t: float) -> None:
-        self.n_writes += 1
-        self.n_requests += 1
+    def record_write(self, nbytes: int, t: float,
+                     request_sizes=None) -> None:
+        """Account a write batch; ``request_sizes`` lists the individual
+        device requests (one request of ``nbytes`` when omitted) so
+        fig4-style size histograms reflect the full I/O mix, reads and
+        writes alike."""
+        sizes = list(request_sizes) if request_sizes is not None \
+            else [int(nbytes)]
+        self.n_writes += len(sizes)
+        self.n_requests += len(sizes)
         self.bytes_written += int(nbytes)
         self.modeled_write_time += t
+        for s in sizes:
+            self.size_histogram[_bucket(s)] += 1
 
     @property
     def n_ios(self) -> int:

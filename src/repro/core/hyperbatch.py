@@ -66,6 +66,14 @@ class HopPlan:
         """The hop's ascending block visit order (Algorithm 1 line 7)."""
         return self.bck.row_blocks
 
+    def blocks_per_array(self, placement) -> np.ndarray:
+        """Per-array counts of this hop's block visit plan under a
+        :class:`~repro.core.topology.BlockPlacement` — how striping
+        reshapes the sampling fan-out (the ascending global visit order
+        round-robins across arrays, so per-array queues stay busy
+        together instead of draining one slab at a time)."""
+        return placement.blocks_per_array(self.row_blocks)
+
     def sampled_for(self, j: int) -> np.ndarray:
         return self.sampled[self.offsets[j]:self.offsets[j + 1]]
 

@@ -37,6 +37,15 @@ rather than deadlocking behind a queue_depth of undrained tail runs, and
 back-to-back submissions are charged through a shared
 :class:`PlanStream` (max-of-summed-rooflines instead of per-plan
 batches).
+
+**Storage topology** (``repro.core.topology``): when the store carries a
+:class:`~repro.core.topology.BlockPlacement`, submitted runs are split
+at stripe boundaries into per-array segments and queued on *per-array
+run queues*, each with an independent queue depth
+(:meth:`CoalescedReader.set_queue_depth` takes an optional ``array``);
+:class:`PlanStream` accumulates one open batch per *device object* and
+charges fused submissions the ``max`` over per-array rooflines, so N
+independent arrays genuinely overlap instead of summing.
 """
 from __future__ import annotations
 
@@ -119,44 +128,75 @@ class PlanStream:
     iops_h)``, letting the latency-bound sampling hops overlap the
     bandwidth-bound feature gather inside the device queue.
 
+    The stream accumulates one open batch **per device object**, so a
+    multi-array :class:`~repro.core.topology.StorageTopology` fuses too:
+    each array accumulates its own share and the stream's total time is
+    the ``max`` over per-array rooflines (independent arrays run in
+    parallel — they never sum).  :meth:`charge` takes an optional
+    ``device`` to route a submission at a specific array;
+    :meth:`charge_split` routes one split submission at several arrays
+    atomically (one incremental delta).
+
     :meth:`charge` returns each submission's incremental cost against the
     open stream (a single submission into a drained stream costs exactly
     :func:`plan_cost` — the barriered numbers are the degenerate case);
     :meth:`drain` closes the stream (an explicit barrier, or session
-    end).  One stream per *device*: readers over stores sharing an NVMe
-    array share the stream, so graph and feature plans fuse too.
+    end).  One stream per *topology*: readers over stores sharing the
+    same arrays share the stream, so graph and feature plans fuse too.
     """
 
     def __init__(self, device):
-        self.device = device
+        self.device = device          # default device for unrouted charges
         self._lock = threading.Lock()
-        self._bytes = 0
-        self._random = 0
-        self._seq = 0
+        # id(device) -> [device, bytes, n_random, n_seq, queue_depth]
+        self._acc: dict[int, list] = {}
         self._charged = 0.0
 
     def charge(self, runs: list[Run], block_size: int,
-               queue_depth: int) -> tuple[int, int, int, float]:
-        """(bytes, n_blocks, n_seq, incremental_time) of one submission."""
-        n_blocks = sum(r.count for r in runs)
-        n_random = len(runs)
-        n_seq = n_blocks - n_random
-        total = n_blocks * block_size
+               queue_depth: int, device=None) -> tuple[int, int, int, float]:
+        """(bytes, n_blocks, n_seq, incremental_time) of one submission.
+
+        ``device`` routes the submission at a specific array's open
+        batch; ``None`` uses the stream's default device (the
+        single-array degenerate case).
+        """
+        dev = device if device is not None else self.device
+        return self.charge_split([(dev, runs, queue_depth)], block_size)
+
+    def charge_split(self, placed, block_size: int
+                     ) -> tuple[int, int, int, float]:
+        """Charge one submission already split across arrays.
+
+        ``placed`` is ``[(device, runs, queue_depth), ...]``; all parts
+        enter their per-device open batches under one lock and the
+        caller is charged a single incremental delta of the stream's
+        ``max``-over-devices roofline.
+        """
+        total = blocks = seq = 0
         with self._lock:
-            self._bytes += total
-            self._random += n_random
-            self._seq += n_seq
-            t = self.device.batch_time(self._bytes, n_random=self._random,
-                                       n_sequential=self._seq,
-                                       queue_depth=queue_depth)
+            for dev, runs, qd in placed:
+                slot = self._acc.setdefault(id(dev), [dev, 0, 0, 0, qd])
+                nb = sum(r.count for r in runs)
+                nr = len(runs)
+                slot[1] += nb * block_size
+                slot[2] += nr
+                slot[3] += nb - nr
+                slot[4] = qd          # latest depth governs the open batch
+                total += nb * block_size
+                blocks += nb
+                seq += nb - nr
+            t = 0.0
+            for dev, b, r, s, qd in self._acc.values():
+                t = max(t, dev.batch_time(b, n_random=r, n_sequential=s,
+                                          queue_depth=qd))
             delta = max(t - self._charged, 0.0)
             self._charged += delta
-        return total, n_blocks, n_seq, delta
+        return total, blocks, seq, delta
 
     def drain(self) -> None:
         """Barrier: the queue empties; later plans start a fresh stream."""
         with self._lock:
-            self._bytes = self._random = self._seq = 0
+            self._acc.clear()
             self._charged = 0.0
 
 
@@ -165,7 +205,11 @@ class CoalescedReader:
 
     The store must provide ``block_size``, ``stats``, ``device``,
     ``read_run(start, count)`` (one memmap slice + vectorized decode, no
-    accounting) and ``account_runs(runs, queue_depth)``.
+    accounting) and ``account_runs(runs, queue_depth)``.  When the store
+    carries a :class:`~repro.core.topology.BlockPlacement`, each array
+    gets its own run queue with an independent queue depth; without one,
+    everything lives on the single implicit array 0 (behavior identical
+    to the pre-topology reader).
     """
 
     supports_fusion = True  # submit() accepts cross-hop plans, no barrier
@@ -184,12 +228,15 @@ class CoalescedReader:
         # resubmission may legitimately reuse the start of a still-open
         # earlier run (e.g. a delivered-then-evicted head block), and the
         # two must not share slot accounting
-        self._pending: deque[tuple[int, Run]] = deque()
+        self._pending: dict[int, deque] = {}      # array -> (tok, Run) queue
         self._ready: dict[int, object] = {}       # block_id -> decoded block
         self._run_of: dict[int, int] = {}         # block_id -> run token
         self._remaining: dict[int, int] = {}      # run token -> unfetched blocks
+        self._tok_array: dict[int, int] = {}      # run token -> array
+        self._qd: dict[int, int] = {}             # per-array depth overrides
+        self._ready_runs: dict[int, int] = {}     # array -> reserved runs
         self._run_seq = 0
-        self._ready_runs = 0                      # reserved/undelivered runs
+        self._rr = 0                              # worker round-robin cursor
         self._gen = 0
         self._stop = False
         self._threads = [
@@ -199,6 +246,24 @@ class CoalescedReader:
         for t in self._threads:
             t.start()
 
+    # ------------------------------------------------------------ topology
+    def _placement(self):
+        return getattr(self.store, "placement", None)
+
+    def _array_of(self, block_id: int) -> int:
+        pl = self._placement()
+        return int(pl.array_of[block_id]) if pl is not None else 0
+
+    def _qd_of(self, array: int) -> int:
+        return self._qd.get(array, self.queue_depth)
+
+    def queue_depths(self):
+        """Scalar depth, or per-array ``{array: depth}`` with a placement."""
+        pl = self._placement()
+        if pl is None:
+            return self.queue_depth
+        return {a: self._qd_of(a) for a in range(pl.n_arrays)}
+
     # ------------------------------------------------------------ plan
     def submit(self, block_ids) -> None:
         """Submit one IOPlan stage's block list (ascending, buffer-absent).
@@ -207,8 +272,9 @@ class CoalescedReader:
         consumed — are dropped here, so overlapping cross-hop submissions
         stay read-exactly-once.  Coalesces, charges the submission (via
         the fused :class:`PlanStream` when one is attached, as its own
-        batch at queue-depth overlap otherwise), and queues the runs for
-        the reader pool (or lazy execution).
+        batch at queue-depth overlap otherwise), splits runs at array
+        boundaries when the store has a placement, and queues the
+        per-array segments for the reader pool (or lazy execution).
         """
         ids = np.asarray(list(block_ids) if not isinstance(block_ids, np.ndarray)
                          else block_ids, dtype=np.int64)
@@ -222,18 +288,20 @@ class CoalescedReader:
         if ids.size == 0:
             return
         runs = coalesce(ids, self.store.block_size, self.max_coalesce_bytes)
-        if self.stream is not None:
-            self.store.account_runs(runs, self.queue_depth, stream=self.stream)
-        else:
-            self.store.account_runs(runs, self.queue_depth)
+        self.store.account_runs(runs, self.queue_depths(), stream=self.stream,
+                                max_coalesce_bytes=self.max_coalesce_bytes)
+        pl = self._placement()
         with self._cv:
             for r in runs:
-                tok = self._run_seq
-                self._run_seq += 1
-                self._pending.append((tok, r))
-                self._remaining[tok] = r.count
-                for b in range(r.start, r.stop):
-                    self._run_of[b] = tok
+                segments = pl.shard_run(r) if pl is not None else [(0, r)]
+                for a, seg in segments:
+                    tok = self._run_seq
+                    self._run_seq += 1
+                    self._pending.setdefault(a, deque()).append((tok, seg))
+                    self._remaining[tok] = seg.count
+                    self._tok_array[tok] = a
+                    for b in range(seg.start, seg.stop):
+                        self._run_of[b] = tok
             self._cv.notify_all()
 
     # protocol alias shared with BlockPrefetcher (one submission per hop)
@@ -254,25 +322,29 @@ class CoalescedReader:
             tok = self._run_of.get(b)
             if tok is None:
                 return None
+            arr = self._tok_array.get(tok, 0)
             if self.workers == 0:
-                while b not in self._ready and self._pending:
-                    self._execute_locked(self._pending.popleft()[1])
+                q = self._pending.get(arr)
+                while b not in self._ready and q:
+                    self._execute_locked(q.popleft()[1])
             else:
                 while (b not in self._ready and not self._stop
                        and b in self._run_of):
-                    if self._ready_runs >= self.queue_depth:
-                        # With fused cross-hop plans the pool can hold a
-                        # full queue_depth of this hop's undrained tail
-                        # runs while b's run is still queued behind them;
+                    if self._ready_runs.get(arr, 0) >= self._qd_of(arr):
+                        # With fused cross-hop plans this array's pool can
+                        # hold a full queue_depth of undrained tail runs
+                        # while b's run is still queued behind them;
                         # waiting would deadlock the consumer against its
                         # own slots.  Steal the queued run and execute it
-                        # inline — every worker is blocked on slot
-                        # backpressure anyway, so holding the lock is free.
-                        entry = next((e for e in self._pending
-                                      if e[0] == tok), None)
+                        # inline — every worker on this array is blocked
+                        # on slot backpressure anyway, so holding the
+                        # lock is free.
+                        q = self._pending.get(arr, ())
+                        entry = next((e for e in q if e[0] == tok), None)
                         if entry is not None:
-                            self._pending.remove(entry)
-                            self._ready_runs += 1  # balanced below
+                            self._pending[arr].remove(entry)
+                            self._ready_runs[arr] = \
+                                self._ready_runs.get(arr, 0) + 1  # balanced below
                             try:
                                 self._execute_locked(entry[1])
                             except Exception:
@@ -288,9 +360,9 @@ class CoalescedReader:
                     if not self._cv.wait_for(
                             lambda: b in self._ready or self._stop
                             or b not in self._run_of
-                            or (self._ready_runs >= self.queue_depth
+                            or (self._ready_runs.get(arr, 0) >= self._qd_of(arr)
                                 and any(e[0] == tok
-                                        for e in self._pending)),
+                                        for e in self._pending.get(arr, ()))),
                             timeout=max(deadline - time.monotonic(), 0.0)):
                         break  # timed out
             blk = self._ready.pop(b, None)
@@ -302,7 +374,8 @@ class CoalescedReader:
                 left = self._remaining[tok] - 1
                 if left <= 0:
                     self._remaining.pop(tok, None)
-                    self._ready_runs = max(self._ready_runs - 1, 0)
+                    a = self._tok_array.pop(tok, arr)
+                    self._ready_runs[a] = max(self._ready_runs.get(a, 0) - 1, 0)
                 else:
                     self._remaining[tok] = left
             self._cv.notify_all()
@@ -323,15 +396,28 @@ class CoalescedReader:
             self._ready.clear()
             self._run_of.clear()
             self._remaining.clear()
-            self._ready_runs = 0
+            self._tok_array.clear()
+            self._ready_runs.clear()
             self._cv.notify_all()
         if self.stream is not None:
             self.stream.drain()
 
-    def set_queue_depth(self, queue_depth: int) -> None:
-        """Adaptive scheduler hook: resize the in-flight run budget."""
+    def set_queue_depth(self, queue_depth: int, array: int | None = None) -> None:
+        """Adaptive scheduler hook: resize the in-flight run budget.
+
+        ``array=None`` sets the uniform depth (clearing any per-array
+        overrides); an explicit ``array`` resizes that array's queue
+        independently — the per-array knob the striping sweep exercises.
+        Safe while runs are in flight: workers and stealing consumers
+        re-read the depth on every wakeup.
+        """
         with self._cv:
-            self.queue_depth = max(int(queue_depth), 1)
+            qd = max(int(queue_depth), 1)
+            if array is None:
+                self.queue_depth = qd
+                self._qd.clear()
+            else:
+                self._qd[int(array)] = qd
             self._cv.notify_all()
 
     def close(self) -> None:
@@ -356,24 +442,43 @@ class CoalescedReader:
 
     def _unplan_locked(self, tok: int, run: Run) -> None:
         """Release a failed run's slot and drop the blocks it still owns."""
-        self._ready_runs = max(self._ready_runs - 1, 0)
+        a = self._tok_array.pop(tok, 0)
+        self._ready_runs[a] = max(self._ready_runs.get(a, 0) - 1, 0)
         self._remaining.pop(tok, None)
         for b in range(run.start, run.stop):
             if self._run_of.get(b) == tok:  # a resubmission may own b now
                 self._run_of.pop(b, None)
                 self._ready.pop(b, None)
 
+    def _pop_eligible_locked(self):
+        """Next (tok, run) from any array with pending work and a free
+        slot, round-robin across arrays for fairness.  None if no array
+        is eligible."""
+        arrays = [a for a, q in self._pending.items()
+                  if q and self._ready_runs.get(a, 0) < self._qd_of(a)]
+        if not arrays:
+            return None
+        arrays.sort()
+        a = arrays[self._rr % len(arrays)]
+        self._rr += 1
+        tok, run = self._pending[a].popleft()
+        self._ready_runs[a] = self._ready_runs.get(a, 0) + 1  # reserve slot
+        return tok, run
+
     def _worker(self) -> None:
         while True:
             with self._cv:
-                self._cv.wait_for(
-                    lambda: self._stop or (self._pending
-                                           and self._ready_runs < self.queue_depth))
-                if self._stop:
-                    return
+                entry = None
+                while entry is None:
+                    self._cv.wait_for(
+                        lambda: self._stop
+                        or any(q and self._ready_runs.get(a, 0) < self._qd_of(a)
+                               for a, q in self._pending.items()))
+                    if self._stop:
+                        return
+                    entry = self._pop_eligible_locked()
                 gen = self._gen
-                tok, run = self._pending.popleft()
-                self._ready_runs += 1  # reserve the slot before reading
+                tok, run = entry
             try:
                 blocks = self.store.read_run(run.start, run.count)
             except Exception:

@@ -54,6 +54,9 @@ class IOPlan:
     block_ids: np.ndarray    # ascending, buffer-absent at plan time
     block_size: int
     state: str = "planned"
+    # per-array block counts when the store has a storage topology
+    # attached (topology.py) — how placement splits this submission
+    blocks_per_array: np.ndarray | None = None
 
     @property
     def n_blocks(self) -> int:
@@ -94,6 +97,11 @@ class PrepareSession:
               block_size: int) -> IOPlan:
         plan = IOPlan(stage, store, np.asarray(block_ids, dtype=np.int64),
                       block_size)
+        st = (self.engine.graph_store if store == "graph"
+              else self.engine.feature_store)
+        if st.placement is not None and plan.n_blocks:
+            plan.blocks_per_array = st.placement.blocks_per_array(
+                plan.block_ids)
         self.plans.append(plan)
         return plan
 

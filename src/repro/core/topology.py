@@ -1,0 +1,410 @@
+"""Storage topology subsystem: multi-SSD block placement (ROADMAP item).
+
+The paper evaluates RAID0 arrays of 1-4 NVMe drives; until this module
+the reproduction only modeled that *aggregate* bandwidth inside
+``NVMeModel.n_ssd`` — everything above the device model treated storage
+as one opaque device, so striping could not change request shapes, queue
+depths, or placement.  This module makes the topology explicit:
+
+* :class:`StorageTopology` — N *independent* NVMe arrays, each its own
+  :class:`~repro.core.device_model.NVMeModel` (possibly heterogeneous)
+  with its own per-array :class:`~repro.core.device_model.IOStats`;
+* :class:`PlacementPolicy` implementations mapping every store block to
+  ``(array, local_block)``:
+
+  - :class:`ContiguousPlacement` — bandwidth-proportional contiguous
+    ranges (one array owns one slab of the id space);
+  - :class:`StripePlacement` — round-robin stripes of a configurable
+    width in blocks (RAID0: consecutive stripes on one array are
+    *physically adjacent*, so a long global run becomes N parallel
+    sequential reads);
+  - :class:`HotnessAwarePlacement` — Ginex-style: high-degree graph
+    blocks and hot feature blocks are pinned greedily on the
+    fastest/least-loaded array (load balanced relative to bandwidth);
+
+* :class:`BlockPlacement` — the concrete ``block_id -> (array, local)``
+  mapping, persisted in the store's on-disk directory
+  (``<store path>.topo.json``) and reloadable via :meth:`BlockPlacement.
+  load`;
+* :func:`topology_plan_cost` — per-array roofline accounting: arrays
+  serve their shares *in parallel*, so a split submission costs
+  ``max`` over the per-array ``batch_time`` rooflines instead of one
+  merged-device roofline (the seam that makes striping actually reduce
+  modeled prepare time instead of inflating a constant).
+
+Stores attach a topology via ``attach_topology`` (``block_store.py``),
+which splits coalesced runs at stripe boundaries into per-array runs;
+``CoalescedReader`` (``io_sched.py``) then grows per-array worker queues
+with independent ``io_queue_depth``, and ``PlanStream`` charges fused
+plans as the ``max`` over per-array accumulated rooflines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+
+import numpy as np
+
+from .device_model import IOStats, NVMeModel
+from .io_sched import Run, coalesce
+
+
+class StorageTopology:
+    """N independent NVMe arrays with per-array I/O accounting.
+
+    Unlike ``NVMeModel(n_ssd=N)`` — one merged device with N-fold
+    bandwidth — each array here has its own queue, its own latency
+    budget, and its own :class:`IOStats`, so placement and request
+    splitting are observable per array (``utilization_summary``).
+    """
+
+    def __init__(self, devices):
+        if not devices:
+            raise ValueError("a topology needs at least one array")
+        self.devices: list[NVMeModel] = list(devices)
+        self.array_stats: list[IOStats] = [IOStats() for _ in self.devices]
+        # several stores (and their reader/prefetch threads) share one
+        # topology; their per-store _io_locks do not protect these
+        # shared IOStats — every array_stats mutation takes this lock
+        self.lock = threading.Lock()
+
+    @property
+    def n_arrays(self) -> int:
+        return len(self.devices)
+
+    @classmethod
+    def uniform(cls, n_arrays: int, like: NVMeModel | None = None,
+                **kw) -> "StorageTopology":
+        """N identical single-SSD arrays (the paper's RAID0 sweep shape)."""
+        base = like if like is not None else NVMeModel()
+        return cls([dataclasses.replace(base, n_ssd=1, **kw)
+                    for _ in range(n_arrays)])
+
+    def queue_depth_of(self, queue_depth, array: int) -> int:
+        """Resolve a scalar-or-per-array queue depth for one array."""
+        if isinstance(queue_depth, dict):
+            return queue_depth.get(array, self.devices[array].queue_depth)
+        return queue_depth
+
+    def utilization_summary(self) -> dict:
+        """Per-array byte/request/busy-time balance of everything charged.
+
+        ``busy_s`` is each array's own isolated roofline (the time it
+        would take serving its share alone); ``balance`` is min/max busy
+        across arrays — 1.0 means perfectly even placement.
+        """
+        with self.lock:
+            return self._summary_locked()
+
+    def _summary_locked(self) -> dict:
+        busys = [st.modeled_io_time for st in self.array_stats]
+        total_bytes = sum(st.total_bytes for st in self.array_stats)
+        arrays = []
+        for a, (dev, st) in enumerate(zip(self.devices, self.array_stats)):
+            arrays.append({
+                "array": a,
+                "bandwidth_GBps": round(dev.array_bandwidth / 1e9, 3),
+                "bytes": st.total_bytes,
+                "n_requests": st.n_requests,
+                "sequential_fraction": round(
+                    st.n_sequential_reads / st.n_reads, 4) if st.n_reads else 0.0,
+                "busy_s": round(st.modeled_io_time, 6),
+                "share": round(st.total_bytes / total_bytes, 4)
+                if total_bytes else 0.0,
+            })
+        mx = max(busys) if busys else 0.0
+        return {
+            "n_arrays": self.n_arrays,
+            "balance": round(min(busys) / mx, 4) if mx > 0 else 1.0,
+            "arrays": arrays,
+        }
+
+
+class BlockPlacement:
+    """Concrete ``block_id -> (array, local_block)`` mapping for one store.
+
+    ``local_of`` numbers each array's blocks in ascending *global* order,
+    so globally-adjacent blocks that land on the same array stay locally
+    adjacent (device-level sequential) — the property the per-array run
+    splitting and sequential accounting rely on.
+    """
+
+    def __init__(self, array_of, local_of, policy: str = "custom",
+                 n_arrays: int | None = None):
+        self.array_of = np.asarray(array_of, dtype=np.int64)
+        self.local_of = np.asarray(local_of, dtype=np.int64)
+        if self.array_of.shape != self.local_of.shape:
+            raise ValueError("array_of and local_of must align")
+        self.policy = policy
+        self.n_arrays = int(n_arrays if n_arrays is not None
+                            else (self.array_of.max() + 1
+                                  if len(self.array_of) else 1))
+
+    @property
+    def n_blocks(self) -> int:
+        return int(len(self.array_of))
+
+    # ------------------------------------------------------------ splitting
+    def shard_run(self, run: Run) -> list[tuple[int, Run]]:
+        """Split one globally-contiguous run at array boundaries.
+
+        Under striping these are the stripe boundaries; each returned
+        segment is still globally contiguous (one memmap slice) and
+        lives wholly on one array — the unit the per-array execution
+        queues operate on.
+        """
+        arr = self.array_of[run.start:run.stop]
+        cuts = np.nonzero(np.diff(arr) != 0)[0] + 1
+        bounds = np.concatenate([[0], cuts, [run.count]]).astype(np.int64)
+        return [(int(arr[s]), Run(run.start + int(s), int(e - s)))
+                for s, e in zip(bounds[:-1], bounds[1:])]
+
+    def split_runs(self, runs: list[Run], block_size: int,
+                   max_coalesce_bytes: int = 0
+                   ) -> list[tuple[int, list[Run]]]:
+        """Per-array *device-request* view of one submission.
+
+        Maps every block to its local id and re-coalesces per array:
+        consecutive stripes on one array are physically adjacent (RAID0),
+        so segments that were split only by stripe boundaries merge back
+        into long per-array sequential requests, capped at
+        ``max_coalesce_bytes`` per request with :func:`coalesce`'s
+        convention (``0`` = one request per block — the per-block path
+        stays per-block on a placed store).  Returned runs are in
+        *local* block coordinates — accounting only, never dereferenced
+        against the global memmap.
+        """
+        ids = np.concatenate([np.arange(r.start, r.stop) for r in runs])
+        arr = self.array_of[ids]
+        loc = self.local_of[ids]
+        out: list[tuple[int, list[Run]]] = []
+        for a in np.unique(arr):
+            mine = np.sort(loc[arr == a])
+            out.append((int(a), coalesce(mine, block_size,
+                                         max_coalesce_bytes)))
+        return out
+
+    def blocks_per_array(self, block_ids) -> np.ndarray:
+        """Per-array block counts of a plan (introspection/benchmarks)."""
+        ids = np.asarray(block_ids, dtype=np.int64)
+        if ids.size == 0:
+            return np.zeros(self.n_arrays, dtype=np.int64)
+        return np.bincount(self.array_of[ids], minlength=self.n_arrays)
+
+    # ------------------------------------------------------------ persistence
+    def save(self, store_path: str) -> str:
+        """Persist next to the store's data file (``<path>.topo.json``)."""
+        out = store_path + ".topo.json"
+        with open(out, "w") as f:
+            json.dump({"policy": self.policy, "n_arrays": self.n_arrays,
+                       "array_of": self.array_of.tolist(),
+                       "local_of": self.local_of.tolist()}, f)
+        return out
+
+    @classmethod
+    def load(cls, store_path: str) -> "BlockPlacement":
+        with open(store_path + ".topo.json") as f:
+            meta = json.load(f)
+        return cls(np.asarray(meta["array_of"], dtype=np.int64),
+                   np.asarray(meta["local_of"], dtype=np.int64),
+                   policy=meta["policy"], n_arrays=meta["n_arrays"])
+
+
+# ---------------------------------------------------------------- policies
+class PlacementPolicy:
+    """Maps a store's block id space onto a topology's arrays."""
+
+    name = "base"
+
+    def place(self, n_blocks: int, topology: StorageTopology,
+              hotness: np.ndarray | None = None) -> BlockPlacement:
+        raise NotImplementedError
+
+
+class ContiguousPlacement(PlacementPolicy):
+    """Bandwidth-proportional contiguous ranges (one slab per array)."""
+
+    name = "contiguous"
+
+    def place(self, n_blocks, topology, hotness=None):
+        bw = np.array([d.array_bandwidth for d in topology.devices],
+                      dtype=np.float64)
+        ends = np.floor(np.cumsum(bw) / bw.sum() * n_blocks).astype(np.int64)
+        ends[-1] = n_blocks
+        starts = np.concatenate([[0], ends[:-1]])
+        array_of = np.repeat(np.arange(topology.n_arrays),
+                             np.maximum(ends - starts, 0))
+        local_of = np.arange(n_blocks, dtype=np.int64) - starts[array_of]
+        return BlockPlacement(array_of, local_of, self.name,
+                              topology.n_arrays)
+
+
+class StripePlacement(PlacementPolicy):
+    """Round-robin RAID0 stripes of ``stripe_width_blocks`` blocks."""
+
+    name = "stripe"
+
+    def __init__(self, stripe_width_blocks: int = 1):
+        self.width = max(int(stripe_width_blocks), 1)
+
+    def place(self, n_blocks, topology, hotness=None):
+        n, w = topology.n_arrays, self.width
+        ids = np.arange(n_blocks, dtype=np.int64)
+        stripe = ids // w
+        array_of = stripe % n
+        local_of = (stripe // n) * w + ids % w
+        return BlockPlacement(array_of, local_of, self.name, n)
+
+
+class HotnessAwarePlacement(PlacementPolicy):
+    """Degree/hotness-aware placement (Ginex-style pinning).
+
+    Two mechanisms on top of plain striping, both keyed to where the
+    modeled time actually goes:
+
+    * **Hot-run pinning** — the blocks covering ``hot_mass`` of the
+      total hotness (capped at ``max_hot_fraction`` of all blocks) are
+      pinned, *whole consecutive runs at a time*, on the
+      fastest/least-loaded array: greedy on accumulated hotness load
+      relative to bandwidth, seeded with each array's cold load so the
+      pinning balances *total* traffic, not just the hot set.  Runs,
+      not blocks: consecutive hot blocks are one object's chain (a hub
+      split across blocks) or one hot region (high-degree rows packed
+      together by the locality relabel), read with locally-sequential
+      I/O — scattering them across arrays turns every link into a
+      full-latency random head, costing more than the balance wins.
+    * **Skew gate** — pinning only happens when the capped hot set
+      concentrates >= ``hot_gate`` times its block-count share of the
+      mass.  A flat distribution has no hot set worth perturbing the
+      stripe for, so cold-path stores degenerate to plain striping.
+
+    Cold blocks keep their *natural* stripe slot (``(id // width) %
+    n_arrays`` computed on global ids, not renumbered around the hot
+    set): round-robin striping keeps any access stride that divides
+    ``n_arrays`` device-level sequential (the reason real RAID0 arrays
+    come in powers of two), and renumbering would shift every slot
+    after a pinned block and break those harmonics.  Pinned blocks land
+    in a dedicated *hot partition* at the end of each array's local
+    space — splicing them between an array's natural members would
+    punch holes in its stripe adjacency and turn the array's own
+    sequential runs into random heads.
+    """
+
+    name = "hotness"
+
+    def __init__(self, stripe_width_blocks: int = 1, hot_mass: float = 0.5,
+                 max_hot_fraction: float = 0.25, hot_gate: float = 2.0):
+        self.width = max(int(stripe_width_blocks), 1)
+        self.hot_mass = float(hot_mass)
+        self.max_hot_fraction = float(max_hot_fraction)
+        self.hot_gate = float(hot_gate)
+
+    def place(self, n_blocks, topology, hotness=None):
+        n = topology.n_arrays
+        if hotness is None or n_blocks == 0:
+            return StripePlacement(self.width).place(n_blocks, topology)
+        h = np.asarray(hotness, dtype=np.float64)
+        if len(h) != n_blocks:
+            raise ValueError("hotness must have one score per block")
+        ids = np.arange(n_blocks, dtype=np.int64)
+        natural = (ids // self.width) % n
+        order = np.argsort(-h, kind="stable")
+        cum = np.cumsum(h[order])
+        total = float(cum[-1])
+        k = int(np.searchsorted(cum, self.hot_mass * total) + 1) \
+            if total > 0 else 0
+        k = min(k, max(int(n_blocks * self.max_hot_fraction), 1))
+        # skew gate: pin only if the hot set genuinely concentrates mass
+        mass_frac = float(cum[k - 1]) / total if (k and total > 0) else 0.0
+        if k == 0 or mass_frac < self.hot_gate * (k / n_blocks):
+            k = 0
+        array_of = natural.copy()
+        pinned = np.zeros(n_blocks, dtype=bool)
+        if k:
+            bw = np.array([d.array_bandwidth for d in topology.devices],
+                          dtype=np.float64)
+            hot = np.sort(order[:k])
+            pinned[hot] = True
+            load = np.zeros(n, dtype=np.float64)
+            np.add.at(load, natural[~pinned], h[~pinned])  # cold seed
+            cuts = np.nonzero(np.diff(hot) != 1)[0] + 1
+            segments = np.split(hot, cuts)
+            for seg in sorted(segments, key=lambda s: -float(h[s].sum())):
+                a = int(np.argmin(load / bw))  # fastest/least-loaded
+                array_of[seg] = a
+                load[a] += float(h[seg].sum())
+        local_of = np.empty(n_blocks, dtype=np.int64)
+        for a in range(n):
+            mine = np.nonzero(array_of == a)[0]
+            # natural members first (stripe lattice intact), then the
+            # array's hot partition
+            mine = np.concatenate([mine[~pinned[mine]], mine[pinned[mine]]])
+            local_of[mine] = np.arange(len(mine), dtype=np.int64)
+        return BlockPlacement(array_of, local_of, self.name, n)
+
+
+def make_policy(name: str, stripe_width_blocks: int = 1) -> PlacementPolicy:
+    """Policy factory for the ``AgnesConfig.placement`` knob."""
+    if name == "contiguous":
+        return ContiguousPlacement()
+    if name == "stripe":
+        return StripePlacement(stripe_width_blocks)
+    if name == "hotness":
+        return HotnessAwarePlacement(stripe_width_blocks)
+    raise ValueError(f"unknown placement policy {name!r}")
+
+
+# ---------------------------------------------------------------- accounting
+def topology_plan_cost(placed, block_size: int, topology: StorageTopology,
+                       queue_depth) -> tuple[int, int, int, float]:
+    """(bytes, n_blocks, n_seq, time) of one split submission.
+
+    Independent arrays serve their shares in parallel, so the submission
+    costs the ``max`` over per-array :meth:`NVMeModel.batch_time`
+    rooflines — not one merged-device roofline.  ``queue_depth`` may be
+    a scalar or a per-array ``{array: depth}`` mapping (independent
+    per-array queues).
+    """
+    total = blocks = seq = 0
+    t = 0.0
+    for a, runs in placed:
+        nb = sum(r.count for r in runs)
+        nr = len(runs)
+        qd = topology.queue_depth_of(queue_depth, a)
+        t = max(t, topology.devices[a].batch_time(
+            nb * block_size, n_random=nr, n_sequential=nb - nr,
+            queue_depth=qd))
+        total += nb * block_size
+        blocks += nb
+        seq += nb - nr
+    return total, blocks, seq, t
+
+
+# ---------------------------------------------------------------- hotness
+def graph_block_hotness(store) -> np.ndarray:
+    """Per-graph-block hotness from the pinned T_obj: average object degree.
+
+    A block holding few objects holds hubs (one huge adjacency fills it),
+    and hubs are touched by nearly every frontier under power-law
+    sampling — the blocks Ginex would pin.
+    """
+    return store.entry_payload_estimate()
+
+
+def feature_block_hotness(store, degrees: np.ndarray) -> np.ndarray:
+    """Per-feature-block expected *touch* frequency under neighbor sampling.
+
+    High-degree nodes' rows are sampled most often, but a block is read
+    once per hyperbatch no matter how many of its rows (or minibatches)
+    hit it — traffic saturates.  So the proxy is the touch probability
+    ``1 - exp(-mass / mean_mass)`` of the block's degree mass, the
+    static stand-in for Ginex's empirical access counts: hub blocks
+    saturate near 1, leaf blocks fall off proportionally, and the
+    hot-set pinning moves blocks in proportion to the heads they will
+    actually cost."""
+    deg = np.asarray(degrees, dtype=np.float64)[:store.n_nodes]
+    blocks = np.arange(store.n_nodes, dtype=np.int64) // store.rows_per_block
+    mass = np.bincount(blocks, weights=deg, minlength=store.n_blocks)
+    scale = float(mass[mass > 0].mean()) if (mass > 0).any() else 1.0
+    return 1.0 - np.exp(-mass / scale)

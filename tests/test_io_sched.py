@@ -183,7 +183,7 @@ def test_coalesced_reader_run_tokens_survive_start_reuse(tiny_ds):
         assert rd.fetch(0, timeout=5.0).block_id == 0
         for b in range(1, n):
             assert rd.fetch(b, timeout=5.0).block_id == b
-        assert not rd._remaining and rd._ready_runs == 0
+        assert not rd._remaining and sum(rd._ready_runs.values()) == 0
 
 
 def test_coalesced_reader_survives_failing_read(tiny_ds):
@@ -196,8 +196,9 @@ def test_coalesced_reader_survives_failing_read(tiny_ds):
         stats = store.stats
         fail = True
 
-        def account_runs(self, runs, qd):
-            store.account_runs(runs, qd)
+        def account_runs(self, runs, qd, stream=None, max_coalesce_bytes=0):
+            store.account_runs(runs, qd, stream=stream,
+                               max_coalesce_bytes=max_coalesce_bytes)
 
         def read_run(self, start, count):
             if self.fail:
