@@ -1,0 +1,204 @@
+"""Drifting-hotspot duel: online re-placement vs static placement.
+
+The telemetry -> re-placement -> migration loop (``core/hotness.py`` +
+``core/migration.py``) exists to beat exactly one failure mode of PR 4's
+static placement: the *attach-time* hotness proxy (degree mass) cannot
+see where runtime traffic actually lands, and the landing spot drifts.
+This benchmark builds that workload deliberately:
+
+* a **locality-structured ring graph** (every node's neighbors are its
+  ±k ring neighbors — the shape the BFS locality relabel produces on
+  real graphs), so a hyperbatch's k-hop frontier and gather set stay
+  *inside* the hot region instead of spraying over the whole store;
+* a **rotating hot window**: all training targets of an epoch are drawn
+  from one contiguous window of the node space, and the window jumps
+  every ``ROTATE_EVERY`` epochs — degree is uniform, so the static
+  degree proxy is blind to it (its skew gate correctly degenerates to
+  plain striping);
+* a **heterogeneous 2-array topology** (one Gen5-class array at 3x
+  bandwidth / one-third latency beside a standard Gen4 array): striping
+  splits the hot window 50/50 and the slow array sets the roofline,
+  while measured-hotness placement rebalances the window
+  bandwidth-proportionally across the arrays.
+
+The online engine observes per-block touches, re-places at every epoch
+boundary (``AgnesEngine.end_epoch``), and migrates through the real
+crash-consistent write path — with every copy read/write charged to the
+owning arrays' rooflines, so the reported speedup already *pays* for
+migration.  Acceptance gates (tracked in ``BENCH_migrate.json``,
+guarded by ``benchmarks.check_regression``):
+
+* online >= ``MIN_SPEEDUP`` (1.15x) over the static engine on total
+  modeled prepare I/O time (reads + migration writes);
+* MFGs and gathered features byte-identical to the no-migration path
+  every hyperbatch (placement moves bytes, never changes them);
+* the per-store migration byte budget is respected every epoch.
+
+Fixed geometry in both tiers: a deterministic policy A/B at container
+scale, not a scaling measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from .common import WORKDIR, emit
+
+from repro.core import (AgnesConfig, AgnesEngine, FeatureBlockStore,
+                        GraphBlockStore, NVMeModel, StorageTopology)
+
+MIN_SPEEDUP = 1.15      # online vs static, migration cost charged
+
+N_NODES = 6_144
+RING_K = 8              # ring neighbors per side (degree 16, uniform)
+G_BLOCK = 2048          # graph block bytes (~26 objects/block)
+F_DIM = 512             # 2 KiB rows -> one row per feature block
+F_BLOCK = 2048
+WINDOW = 1_536          # hot-window width (1/4 of the node space)
+N_EPOCHS = 8
+ROTATE_EVERY = 4        # hot window jumps every k epochs
+PASSES_PER_EPOCH = 3    # full window re-reads per epoch (tiny buffers)
+HB_PER_WINDOW = 4       # hyperbatches tiling one window pass
+MB, N_MB = 64, 6        # minibatch geometry (4 x 6 x 64 = WINDOW)
+BUDGET = 4 << 20        # migrate_budget_bytes per store per epoch
+
+
+def _build_workload() -> tuple[str, str]:
+    gpath = os.path.join(WORKDIR, "migrate_ring.graph")
+    fpath = os.path.join(WORKDIR, "migrate_ring.feat")
+    if not os.path.exists(gpath + ".meta.json"):
+        offs = np.concatenate([np.arange(-RING_K, 0),
+                               np.arange(1, RING_K + 1)])
+        indices = ((np.arange(N_NODES)[:, None] + offs[None, :])
+                   % N_NODES).astype(np.int64).ravel()
+        indptr = (np.arange(N_NODES + 1, dtype=np.int64) * (2 * RING_K))
+        GraphBlockStore.build(gpath, indptr, indices, block_size=G_BLOCK)
+    if not os.path.exists(fpath + ".meta.json"):
+        rng = np.random.default_rng(7)
+        feats = rng.normal(0, 1, (N_NODES, F_DIM)).astype(np.float32)
+        FeatureBlockStore.build(fpath, feats, block_size=F_BLOCK)
+    return gpath, fpath
+
+
+def _engine(gpath: str, fpath: str, online: bool) -> AgnesEngine:
+    # heterogeneous pair: a 4-drive RAID0 array beside a single drive —
+    # striping splits the hot window 50/50 and the single drive gates it
+    fast = dataclasses.replace(NVMeModel(), n_ssd=4)
+    topo = StorageTopology([fast, NVMeModel()])
+    g = GraphBlockStore.open(gpath, NVMeModel())
+    f = FeatureBlockStore.open(fpath, NVMeModel())
+    cfg = AgnesConfig(block_size=G_BLOCK, minibatch_size=MB,
+                      hyperbatch_size=N_MB, fanouts=(RING_K,),
+                      graph_buffer_bytes=64 << 10,
+                      feature_buffer_bytes=128 << 10,
+                      feature_cache_rows=1, async_io=False,
+                      io_queue_depth=16, placement="hotness",
+                      online_placement=online,
+                      migrate_budget_bytes=BUDGET, hotness_decay=0.3)
+    return AgnesEngine(g, f, cfg, topology=topo)
+
+
+def _window_targets(epoch: int, hb: int) -> list[np.ndarray]:
+    """Hyperbatch ``hb``'s targets: one contiguous quarter of the current
+    hot window (the BFS-relabel regime: training labels cluster in the
+    locality order).  Every ``HB_PER_WINDOW`` hyperbatches tile the
+    window exactly, so the measured hot set is the *whole* window —
+    dense and stable — while each hyperbatch's gather is a handful of
+    long sequential runs; the buffers are far smaller than the window,
+    so each of the epoch's ``PASSES_PER_EPOCH`` passes re-reads it.
+    """
+    w = (epoch // ROTATE_EVERY) % (N_NODES // WINDOW)
+    lo = w * WINDOW + (hb % HB_PER_WINDOW) * N_MB * MB
+    return [lo + np.arange(j * MB, (j + 1) * MB) for j in range(N_MB)]
+
+
+def _io_time(eng: AgnesEngine) -> float:
+    g, f = eng.graph_store.stats, eng.feature_store.stats
+    return (g.modeled_read_time + g.modeled_write_time
+            + f.modeled_read_time + f.modeled_write_time)
+
+
+def _assert_parity(p1, p0, tag):
+    for a, b in zip(p1, p0):
+        for x, y in zip(a.mfg.nodes, b.mfg.nodes):
+            assert np.array_equal(x, y), f"{tag}: migration changed MFGs"
+        for lx, ly in zip(a.mfg.layers, b.mfg.layers):
+            assert np.array_equal(lx.nbr_idx, ly.nbr_idx)
+            assert np.array_equal(lx.self_idx, ly.self_idx)
+        assert np.array_equal(a.features, b.features), \
+            f"{tag}: migration changed gathered features"
+
+
+def run() -> dict:
+    gpath, fpath = _build_workload()
+    static = _engine(gpath, fpath, online=False)
+    online = _engine(gpath, fpath, online=True)
+    per_epoch: list[dict] = []
+    moved_total = 0
+    for epoch in range(N_EPOCHS):
+        s0, o0 = _io_time(static), _io_time(online)
+        for hb in range(PASSES_PER_EPOCH * HB_PER_WINDOW):
+            targets = _window_targets(epoch, hb)
+            p0 = static.prepare(targets, epoch=epoch)
+            p1 = online.prepare(targets, epoch=epoch)
+            _assert_parity(p1, p0, f"epoch{epoch}/hb{hb}")
+        static.end_epoch()              # telemetry roll only (no topology
+        reports = online.end_epoch()    # diff) vs roll + budgeted moves
+        epoch_moved = 0
+        for name, rep in (reports or {}).items():
+            # acceptance gate: the migration budget holds every epoch
+            assert rep["bytes_moved"] <= BUDGET, \
+                (f"epoch {epoch}: {name} moved {rep['bytes_moved']} bytes "
+                 f"> budget {BUDGET}")
+            epoch_moved += rep["n_moved"]
+        moved_total += epoch_moved
+        per_epoch.append({
+            "epoch": epoch,
+            "window": (epoch // ROTATE_EVERY) % (N_NODES // WINDOW),
+            "static_io_s": round(_io_time(static) - s0, 6),
+            "online_io_s": round(_io_time(online) - o0, 6),
+            "blocks_migrated": epoch_moved,
+            "feature_top_share":
+                online.feature_hotness.skew_summary()["top_share"],
+        })
+    assert moved_total > 0, "online engine never migrated"
+    static_t, online_t = _io_time(static), _io_time(online)
+    speedup = static_t / max(online_t, 1e-12)
+    # acceptance gate: online re-placement beats static placement with
+    # the migration copy traffic fully charged
+    assert speedup >= MIN_SPEEDUP, \
+        (f"online re-placement regression: {speedup:.3f}x < "
+         f"{MIN_SPEEDUP}x vs static placement on the drifting hotspot")
+    mig = online.io_stats().get("migration", {})
+    steady = [e for e in per_epoch if e["epoch"] % ROTATE_EVERY != 0]
+    steady_speedup = (sum(e["static_io_s"] for e in steady)
+                      / max(sum(e["online_io_s"] for e in steady), 1e-12))
+    emit("migrate/speedup", speedup,
+         f"{static_t*1e3:.2f}ms -> {online_t*1e3:.2f}ms over {N_EPOCHS} "
+         f"epochs, {moved_total} blocks migrated")
+    emit("migrate/steady_state_speedup", steady_speedup,
+         "epochs after the window's first (placement converged)")
+    out = {
+        "workload": {"n_nodes": N_NODES, "window": WINDOW,
+                     "rotate_every": ROTATE_EVERY, "n_epochs": N_EPOCHS,
+                     "graph_blocks": online.graph_store.n_blocks,
+                     "feature_blocks": online.feature_store.n_blocks,
+                     "budget_bytes": BUDGET},
+        "static_io_s": round(static_t, 6),
+        "online_io_s": round(online_t, 6),
+        "speedup": round(speedup, 3),
+        "steady_state_speedup": round(steady_speedup, 3),
+        "blocks_migrated": moved_total,
+        "bytes_migrated": int(mig.get("bytes_migrated", 0)),
+        "per_epoch": per_epoch,
+        "arrays": online.io_stats()["arrays"],
+    }
+    static.close()
+    online.close()
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -17,7 +17,8 @@ import json
 import os
 import sys
 
-from . import bench_io_sched, bench_plan_fusion, bench_striping
+from . import (bench_io_sched, bench_migration, bench_plan_fusion,
+               bench_striping)
 
 # file -> [(dotted path into the json payload, floor, description)]
 GUARDS = {
@@ -36,6 +37,11 @@ GUARDS = {
          "striped 4-array vs single-array prepare I/O"),
         ("stripe.policy_duel.speedup", bench_striping.MIN_POLICY_GAIN,
          "degree-aware placement vs round-robin stripe"),
+    ],
+    "BENCH_migrate.json": [
+        ("migrate.speedup", bench_migration.MIN_SPEEDUP,
+         "online re-placement vs static placement, drifting hotspot "
+         "(migration write cost charged)"),
     ],
 }
 

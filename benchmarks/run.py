@@ -22,8 +22,8 @@ import time
 from . import (bench_fig2_breakdown, bench_fig4_io_unit, bench_fig6_eq1,
                bench_fig7_distdgl, bench_fig8_hyperbatch, bench_fig9_sweep,
                bench_fig10_sensitivity, bench_fig11_bw, bench_fig12_accuracy,
-               bench_io_sched, bench_pipeline_overlap, bench_plan_fusion,
-               bench_striping, common)
+               bench_io_sched, bench_migration, bench_pipeline_overlap,
+               bench_plan_fusion, bench_striping, common)
 
 ALL = {
     "fig2": bench_fig2_breakdown.run,
@@ -39,6 +39,7 @@ ALL = {
     "io": bench_io_sched.run,
     "fusion": bench_plan_fusion.run,
     "stripe": bench_striping.run,
+    "migrate": bench_migration.run,
 }
 
 OUT_PATH = os.environ.get(
@@ -50,6 +51,9 @@ FUSION_OUT_PATH = os.environ.get(
 STRIPE_OUT_PATH = os.environ.get(
     "REPRO_BENCH_STRIPE_OUT",
     os.path.join(os.path.dirname(__file__), "..", "BENCH_stripe.json"))
+MIGRATE_OUT_PATH = os.environ.get(
+    "REPRO_BENCH_MIGRATE_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_migrate.json"))
 
 
 def main() -> None:
@@ -76,32 +80,23 @@ def main() -> None:
         results[name] = entry
         print(f"# {name} done in {dt:.1f}s", flush=True)
     if quick:
-        if "io" in results:
-            # only overwrite the tracked trajectory when the io benchmark
-            # actually ran — a subset run must not clobber it with null
+        # per-benchmark trajectory files, tracked PR over PR; only the
+        # benchmarks that actually ran overwrite their file — a subset
+        # run must not clobber the others with null
+        tracked = [("io", OUT_PATH), ("fusion", FUSION_OUT_PATH),
+                   ("stripe", STRIPE_OUT_PATH),
+                   ("migrate", MIGRATE_OUT_PATH)]
+        for name, path in tracked:
+            if name not in results:
+                continue
             payload = {"quick": True,
-                       "io": results.get("io", {}).get("metrics"),
-                       "benchmarks": results}
-            out = os.path.abspath(OUT_PATH)
+                       name: results[name].get("metrics")}
+            if name == "io":
+                payload["benchmarks"] = results
+            out = os.path.abspath(path)
             with open(out, "w") as f:
                 json.dump(payload, f, indent=2)
             print(f"# wrote {out}", flush=True)
-        if "fusion" in results:
-            # fused vs barriered prepare trajectory, tracked PR over PR
-            fout = os.path.abspath(FUSION_OUT_PATH)
-            with open(fout, "w") as f:
-                json.dump({"quick": True,
-                           "fusion": results["fusion"].get("metrics")},
-                          f, indent=2)
-            print(f"# wrote {fout}", flush=True)
-        if "stripe" in results:
-            # multi-SSD striping saturation sweep, tracked PR over PR
-            sout = os.path.abspath(STRIPE_OUT_PATH)
-            with open(sout, "w") as f:
-                json.dump({"quick": True,
-                           "stripe": results["stripe"].get("metrics")},
-                          f, indent=2)
-            print(f"# wrote {sout}", flush=True)
 
 
 if __name__ == '__main__':

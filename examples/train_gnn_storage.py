@@ -58,6 +58,13 @@ def main():
                          "(hotness = degree-aware, Ginex-style pinning)")
     ap.add_argument("--stripe-width", type=int, default=1,
                     help="RAID0 chunk in blocks for striped placements")
+    ap.add_argument("--online-placement", action="store_true",
+                    help="re-place blocks at epoch boundaries from "
+                         "measured per-block hotness and migrate them "
+                         "through the crash-consistent write path "
+                         "(needs --n-arrays > 1)")
+    ap.add_argument("--migrate-budget-mb", type=int, default=64,
+                    help="per-store migration byte budget per epoch")
     args = ap.parse_args()
 
     if args.backend == "pallas":
@@ -105,10 +112,23 @@ def main():
                     io_time += engine.last_report.modeled_io_s
                     for p in prepared:
                         losses.append(tr.train_minibatch(p))
+            migrate = ""
+            if getattr(getattr(engine, "config", None),
+                       "online_placement", False):
+                # pipelined epochs already migrated inside run_epoch;
+                # the serial path runs its boundary pass here
+                reports = (rep.migration if pipelined
+                           else engine.end_epoch())
+                if reports:
+                    moved = sum(r["n_moved"] for r in reports.values())
+                    skew = engine.feature_hotness.skew_summary()
+                    migrate = (f" migrated {moved} blocks "
+                               f"(hot top-10% share "
+                               f"{skew['top_share']:.0%})")
             acc = tr.evaluate(engine.prepare(holdout, epoch=900 + epoch))
             print(f"[{name}] epoch {epoch}: loss {np.mean(losses):.4f} "
-                  f"acc {acc:.3f} modeled_io {io_time:.3f}s{overlap}",
-                  flush=True)
+                  f"acc {acc:.3f} modeled_io {io_time:.3f}s{overlap}"
+                  f"{migrate}", flush=True)
         if executor is not None:
             executor.close()
         return acc, io_time
@@ -120,7 +140,9 @@ def main():
         io_queue_depth=args.io_queue_depth, io_workers=args.io_workers,
         plan_fusion=not args.no_fusion,
         n_arrays=args.n_arrays, placement=args.placement,
-        stripe_width_blocks=args.stripe_width))
+        stripe_width_blocks=args.stripe_width,
+        online_placement=args.online_placement,
+        migrate_budget_bytes=args.migrate_budget_mb << 20))
     acc_a, io_a = run("agnes", agnes)
     if agnes.topology is not None:
         u = agnes.io_stats()["arrays"]
@@ -131,6 +153,11 @@ def main():
                   f"{a['bytes'] / 1e6:.1f} MB in {a['n_requests']} requests "
                   f"(seq {a['sequential_fraction']:.0%}), "
                   f"busy {a['busy_s'] * 1e3:.2f} ms, share {a['share']:.0%}")
+        mig = agnes.io_stats().get("migration")
+        if mig:
+            print(f"[agnes] online re-placement: "
+                  f"{mig['n_migrated_blocks']} blocks / "
+                  f"{mig['bytes_migrated'] / 1e6:.1f} MB migrated")
     agnes.close()
 
     ginex = GinexLike(ds.csr_storage(16 << 20, NVMeModel()),

@@ -2,10 +2,11 @@
 # Tier-1 verify — runs the suite exactly as ROADMAP.md specifies.
 # RUN_BENCH=1 additionally runs the --quick benchmark smoke tier, which
 # writes BENCH_io.json (I/O scheduler before/after numbers),
-# BENCH_fusion.json (fused vs barriered staged prepare) and
-# BENCH_stripe.json (multi-SSD striping sweep) at repo root, then runs
-# the regression guard: every freshly written BENCH_*.json speedup is
-# compared against its benchmark's asserted floor and any regression
+# BENCH_fusion.json (fused vs barriered staged prepare),
+# BENCH_stripe.json (multi-SSD striping sweep) and BENCH_migrate.json
+# (online re-placement vs static, drifting hotspot) at repo root, then
+# runs the regression guard: every freshly written BENCH_*.json speedup
+# is compared against its benchmark's asserted floor and any regression
 # fails the build loudly (benchmarks/check_regression.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."

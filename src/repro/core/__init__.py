@@ -11,14 +11,16 @@ from .async_io import BlockPrefetcher
 from .baselines import (BaselineConfig, CSRStorage, GinexLike, GNNDriveLike,
                         MariusLike, OutreLike)
 from .block_store import (DEFAULT_BLOCK_SIZE, FeatureBlockStore, GraphBlock,
-                          GraphBlockStore)
+                          GraphBlockStore, recover_store_metadata)
 from .bucket import Bucket, build_bucket
 from .buffer import BlockBuffer
 from .device_model import IOStats, NVMeModel
 from .feature_cache import FeatureCache
 from .gather import FeatureGatherer, GatherPlan
+from .hotness import HotnessTracker
 from .hyperbatch import HopPlan, HyperbatchSampler
 from .io_sched import CoalescedReader, PlanStream, Run, coalesce, plan_cost
+from .migration import BlockMove, MigrationEngine, MigrationReport
 from .layout import apply_relabel, bfs_locality_order, degree_order
 from .sampling import (MFG, MFGLayer, assemble_layer, layer_from_frontier,
                        next_frontier, sample_indices)
@@ -43,5 +45,7 @@ __all__ = [
     "sample_indices", "BlockPlacement", "ContiguousPlacement",
     "HotnessAwarePlacement", "PlacementPolicy", "StorageTopology",
     "StripePlacement", "feature_block_hotness", "graph_block_hotness",
-    "make_policy", "topology_plan_cost",
+    "make_policy", "topology_plan_cost", "HotnessTracker",
+    "BlockMove", "MigrationEngine", "MigrationReport",
+    "recover_store_metadata",
 ]

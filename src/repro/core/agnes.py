@@ -25,11 +25,14 @@ from .buffer import BlockBuffer
 from .device_model import IOStats, NVMeModel
 from .feature_cache import FeatureCache
 from .gather import FeatureGatherer
+from .hotness import HotnessTracker
 from .hyperbatch import HyperbatchSampler
+from .migration import MigrationEngine
 from .sampling import MFG
 from .session import PrepareSession
-from .topology import (StorageTopology, feature_block_hotness,
-                       graph_block_hotness, make_policy)
+from .topology import (HotnessAwarePlacement, StorageTopology,
+                       feature_block_hotness, graph_block_hotness,
+                       make_policy)
 
 
 @dataclasses.dataclass
@@ -69,6 +72,19 @@ class AgnesConfig:
     # RAID0 chunk in blocks; the block is already the I/O unit, so
     # one-block chunks interleave finest and balance short runs best
     stripe_width_blocks: int = 1
+    # --- online re-placement (core/hotness.py + core/migration.py) ---
+    # at epoch boundaries, re-score placement from *measured* per-block
+    # touch counts (Ginex-style) and migrate up to migrate_budget_bytes
+    # of blocks per store per epoch through the crash-consistent write
+    # path, charging the copy I/O to the owning arrays
+    online_placement: bool = False
+    migrate_budget_bytes: int = 64 << 20
+    # exponential decay of the hotness accumulator at each epoch roll
+    # (0 = only the last epoch counts)
+    hotness_decay: float = 0.5
+    # weight of a feature-cache *hit* in the hotness signal (hits are
+    # absorbed storage traffic — forward-looking, not current cost)
+    hotness_cache_hit_weight: float = 0.25
     seed: int = 0
 
     def buffer_blocks(self, nbytes: int) -> int:
@@ -132,7 +148,8 @@ class AgnesEngine:
     def __init__(self, graph_store: GraphBlockStore,
                  feature_store: FeatureBlockStore,
                  config: AgnesConfig | None = None,
-                 topology: StorageTopology | None = None):
+                 topology: StorageTopology | None = None,
+                 migration_policy=None):
         self.config = config or AgnesConfig()
         cfg = self.config
         self.graph_store = graph_store
@@ -180,6 +197,55 @@ class AgnesEngine:
             cache_rows, feature_store.n_nodes, feature_store.dim,
             admit_threshold=cfg.cache_admit_threshold,
             dtype=feature_store.dtype)
+        # hotness telemetry (core/hotness.py): every storage touch from
+        # the prepare path lands in per-store trackers; the feature
+        # cache reports its hits at a discount.  Always on — the
+        # counters are cheap and io_stats() surfaces the measured skew.
+        self.graph_hotness = HotnessTracker(graph_store.n_blocks,
+                                            decay=cfg.hotness_decay)
+        self.feature_hotness = HotnessTracker(feature_store.n_blocks,
+                                              decay=cfg.hotness_decay)
+        graph_store.attach_hotness(self.graph_hotness)
+        feature_store.attach_hotness(self.feature_hotness)
+        self.feature_cache.attach_hotness(
+            self.feature_hotness, feature_store.rows_per_block,
+            hit_weight=cfg.hotness_cache_hit_weight)
+        # online re-placement (core/migration.py): at epoch boundaries
+        # the measured hotness replaces the static degree proxy as the
+        # PlacementPolicy input and a budgeted migration pass moves the
+        # hottest misplaced blocks through the durable write path
+        self._migrations: list[tuple[str, MigrationEngine, HotnessTracker]] = []
+        if cfg.online_placement and self.topology is not None:
+            if migration_policy is None:
+                # hot_mass=1.0: pin *everything measured hot* — a mass
+                # cut on near-uniform measured hotness selects a random
+                # subset that reshuffles every epoch (churn), while the
+                # budget + hottest-first ordering already bound the
+                # write traffic.  hot_gate=1.2 (vs the attach-time
+                # default of 2.0): measured traffic needs far less skew
+                # evidence than a noisy proxy, but flat traffic — a hot
+                # set no denser than its block share — must still
+                # degenerate to plain striping rather than pin a
+                # contiguous slab of the store onto one array.
+                migration_policy = HotnessAwarePlacement(
+                    cfg.stripe_width_blocks, hot_mass=1.0,
+                    max_hot_fraction=0.6, hot_gate=1.2)
+            self._migrations = [
+                ("graph", MigrationEngine(
+                    graph_store, migration_policy,
+                    cfg.migrate_budget_bytes, name="graph",
+                    queue_depth=cfg.io_queue_depth), self.graph_hotness),
+                ("feature", MigrationEngine(
+                    feature_store, migration_policy,
+                    cfg.migrate_budget_bytes, name="feature",
+                    queue_depth=cfg.io_queue_depth), self.feature_hotness),
+            ]
+        self.last_migration: dict | None = None
+        self._in_session = False
+        self._array_qd: dict[int, int] = {}
+        # lazy plan_epoch trigger bookkeeping: tracker roll counts seen
+        # at the last plan_epoch (see the hook in plan_epoch)
+        self._rolls_at_last_plan: tuple[int, int] = (0, 0)
         self._g_prefetch = None
         self._f_prefetch = None
         if cfg.max_coalesce_bytes > 0:
@@ -266,6 +332,24 @@ class AgnesEngine:
         counter-hash sampler, makes pipelined losses equal serial losses.
         """
         cfg = self.config
+        if cfg.online_placement and not self._in_session:
+            # lazy epoch-boundary hook for flows that never call
+            # end_epoch() themselves (plain iter_epoch loops): fold the
+            # traffic observed since the last roll and re-place before
+            # the new epoch's first plan splits against the old layout.
+            # Defers to any *explicit* roller — if end_epoch ran since
+            # the previous plan_epoch (the pipelined executor does this
+            # every epoch), stray touches in the window (e.g. a holdout
+            # evaluation between epochs) must not drive a second
+            # migration pass per epoch.
+            rolls = (self.graph_hotness.n_rolls,
+                     self.feature_hotness.n_rolls)
+            if (self._rolls_at_last_plan == rolls
+                    and (self.graph_hotness.window_touches > 0
+                         or self.feature_hotness.window_touches > 0)):
+                self.end_epoch()
+            self._rolls_at_last_plan = (self.graph_hotness.n_rolls,
+                                        self.feature_hotness.n_rolls)
         targets = np.asarray(all_targets, dtype=np.int64)
         if shuffle:
             rng = np.random.default_rng(cfg.seed + epoch)
@@ -284,6 +368,42 @@ class AgnesEngine:
         for mbs in self.plan_epoch(all_targets, epoch=epoch, shuffle=shuffle):
             yield self.prepare(mbs, epoch)
 
+    def end_epoch(self) -> dict | None:
+        """Epoch boundary: roll the hotness windows and, with
+        ``online_placement`` on, run one budgeted migration pass per
+        store (measured hotness replaces the static degree proxy as the
+        placement-policy input).
+
+        Safe to call every epoch — with no placement diff (or no
+        topology) it only rolls the telemetry.  Also triggered lazily by
+        :meth:`plan_epoch` when un-rolled traffic exists, so the
+        pipelined executor and ``iter_epoch`` migrate without explicit
+        calls; calling both is idempotent (the second sees an empty
+        window).  Returns per-store migration summaries or ``None``.
+        """
+        if self._in_session:
+            raise RuntimeError("end_epoch must not run inside a "
+                               "PrepareSession (placement swap would race "
+                               "the open I/O plan)")
+        # quiesce the readers: no in-flight run may straddle the swap
+        for p in (self._g_prefetch, self._f_prefetch):
+            if p is not None:
+                p.reset()
+                assert getattr(p, "idle", True), \
+                    "reader still holds an in-flight plan after reset"
+        self.graph_hotness.roll()
+        self.feature_hotness.roll()
+        if not self._migrations:
+            return None
+        reports = {}
+        for name, mig, tracker in self._migrations:
+            # charge the copy I/O at the depths currently in force (the
+            # adaptive controller may have resized since construction)
+            mig.queue_depth = self.io_queue_depths()
+            reports[name] = mig.run(tracker.hotness()).summary()
+        self.last_migration = reports
+        return reports
+
     def set_io_queue_depth(self, queue_depth: int,
                            array: int | None = None) -> int:
         """Adaptive scheduler hook: resize the coalesced readers' in-flight
@@ -294,10 +414,21 @@ class AgnesEngine:
         qd = max(int(queue_depth), 1)
         if array is None:
             self.config.io_queue_depth = qd
+            self._array_qd.clear()
+        else:
+            self._array_qd[int(array)] = qd
         for p in (self._g_prefetch, self._f_prefetch):
             if p is not None and hasattr(p, "set_queue_depth"):
                 p.set_queue_depth(qd, array=array)
         return qd
+
+    def io_queue_depths(self):
+        """Current depth per array (``{array: depth}`` with a topology,
+        scalar otherwise) — the per-array adaptive controller's view."""
+        if self.topology is None:
+            return self.config.io_queue_depth
+        return {a: self._array_qd.get(a, self.config.io_queue_depth)
+                for a in range(self.topology.n_arrays)}
 
     def io_stats(self) -> dict:
         g = self.graph_store.stats
@@ -312,6 +443,16 @@ class AgnesEngine:
         }
         if self.topology is not None:
             out["arrays"] = self.topology.utilization_summary()
+        out["hotness"] = {
+            "graph": self.graph_hotness.skew_summary(),
+            "feature": self.feature_hotness.skew_summary(),
+        }
+        if total.n_migrated_blocks:
+            out["migration"] = {
+                "n_migrated_blocks": total.n_migrated_blocks,
+                "bytes_migrated": total.bytes_migrated,
+                "last": self.last_migration,
+            }
         return out
 
     def close(self) -> None:

@@ -28,16 +28,44 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import threading
 
 import numpy as np
 
 from .device_model import IOStats, NVMeModel
+from .hotness import HotnessTracker
 from .io_sched import Run, coalesce, plan_cost
-from .topology import BlockPlacement, StorageTopology, topology_plan_cost
+from .topology import (BlockPlacement, StorageTopology, fsync_dir,
+                       topology_plan_cost)
 
 DEFAULT_BLOCK_SIZE = 1 << 20  # 1 MiB (paper default)
 _HDR = 3  # directory words per entry: node_id, count, total_degree
+_MIGRATE_LOG = ".migrate.log"   # block-copy journal (crash consistency)
+_TOPO_TMP = ".topo.json.tmp"    # atomic-save staging file
+
+
+def recover_store_metadata(path: str) -> dict:
+    """Discard partial migration/placement state left by a crash.
+
+    The migration protocol (``migrate_blocks``) is: append moved blocks
+    to ``<path>.migrate.log`` + fsync, then atomically commit the new
+    ``<path>.topo.json`` via temp-file + ``os.replace``, then remove the
+    journal.  The committed ``topo.json`` is therefore always a complete
+    old or complete new mapping, and the data file is never touched — so
+    recovery is pure garbage collection: a leftover journal means the
+    crash happened before (old placement wins) or after (new placement
+    already committed) the rename, and a leftover ``.tmp`` means a save
+    died mid-write; both are safe to delete.  Called whenever a store
+    handle opens.
+    """
+    removed = {}
+    for suffix in (_MIGRATE_LOG, _TOPO_TMP):
+        stale = path + suffix
+        if os.path.exists(stale):
+            removed[suffix] = os.path.getsize(stale)
+            os.remove(stale)
+    return removed
 
 
 @dataclasses.dataclass
@@ -79,6 +107,18 @@ class _BlockReadBatcher:
 
     topology: StorageTopology | None = None
     placement: BlockPlacement | None = None
+    hotness: HotnessTracker | None = None
+
+    def attach_hotness(self, tracker: HotnessTracker) -> None:
+        """Bind a :class:`HotnessTracker`: every storage touch charged
+        through this store (coalesced submissions, per-block reads,
+        node-granular rows) is recorded per block — the empirical
+        replacement for the static degree proxies (``core/hotness.py``)."""
+        if tracker.n_blocks != self.n_blocks:
+            raise ValueError(
+                f"tracker covers {tracker.n_blocks} blocks, "
+                f"store has {self.n_blocks}")
+        self.hotness = tracker
 
     def attach_topology(self, topology: StorageTopology,
                         placement: BlockPlacement,
@@ -146,6 +186,8 @@ class _BlockReadBatcher:
         """
         if not runs:
             return
+        if self.hotness is not None:
+            self.hotness.touch_runs(runs)
         if self.placement is not None:
             placed = self.placement.split_runs(runs, self.block_size,
                                                max_coalesce_bytes)
@@ -196,6 +238,8 @@ class _BlockReadBatcher:
         """Charge one block-granular read on its owning array (or the
         single device), with sequential detection in that array's local
         block coordinates.  Caller holds ``_io_lock``."""
+        if self.hotness is not None:
+            self.hotness.touch([block_id])
         if self.placement is not None:
             a = int(self.placement.array_of[block_id])
             loc = int(self.placement.local_of[block_id])
@@ -212,6 +256,145 @@ class _BlockReadBatcher:
             with self.topology.lock:
                 self.topology.array_stats[a].record_read(
                     self.block_size, t, sequential=sequential)
+
+    # ---------------------------------------------------------- migration
+    def read_block_bytes(self, block_id: int) -> bytes:
+        """Raw on-disk bytes of one block (the migration copy unit)."""
+        raise NotImplementedError
+
+    def migrate_blocks(self, moves, queue_depth=None, _fault=None) -> int:
+        """Durably move blocks between arrays (``core/migration.py``).
+
+        ``moves`` is ``[(block_id, dst_array), ...]``.  Protocol, in
+        order, with a crash at any point leaving the store loadable:
+
+        1. **copy** — every moved block's bytes are read from the data
+           file and appended to the journal ``<path>.migrate.log``
+           (real file I/O on behalf of the destination array), then
+           fsynced.  Reads are charged to the *source* arrays and
+           writes to the *destination* arrays — migration competes in
+           the same per-array rooflines as the prepare path;
+        2. **commit** — the updated ``block_id -> (array, local)``
+           mapping is rewritten atomically (``BlockPlacement.save``:
+           temp file + ``os.replace``).  This rename is the linearization
+           point: before it the old placement is on disk, after it the
+           new one — never a torn mix;
+        3. **free** — the journal is removed and the freed source slots
+           are returned to their arrays' free lists
+           (``BlockPlacement.move_block``).
+
+        ``recover_store_metadata`` (run at store open) discards a
+        leftover journal/temp file from a crash between the steps.
+        Returns the number of blocks moved.  ``_fault`` is a test hook
+        called with ``"copied"`` and ``"committed"`` at the two crash
+        windows.
+        """
+        if self.placement is None or self.topology is None:
+            raise RuntimeError("migrate_blocks needs an attached topology")
+        pl, topo = self.placement, self.topology
+        moves = [(int(b), int(dst)) for b, dst in moves
+                 if int(dst) != int(pl.array_of[int(b)])]
+        if not moves:
+            return 0
+        dst_of = dict(moves)
+        if len(dst_of) != len(moves):
+            raise ValueError("duplicate block in migration plan")
+        ids = np.sort(np.fromiter(dst_of, dtype=np.int64, count=len(dst_of)))
+        with self._io_lock:
+            # -------- copy: journal the moved blocks' bytes, then fsync
+            journal = self.path + _MIGRATE_LOG
+            with open(journal, "wb") as jf:
+                for b in ids.tolist():
+                    raw = self.read_block_bytes(b)
+                    np.asarray([b, len(raw)], dtype=np.int64).tofile(jf)
+                    jf.write(raw)
+                jf.flush()
+                os.fsync(jf.fileno())
+            fsync_dir(journal)  # the journal's existence must survive too
+            # copy reads are charged against the *source* placement, so
+            # this must precede the moves
+            self._charge_migration_reads(ids, queue_depth)
+            if _fault is not None:
+                _fault("copied")
+            # -------- commit: atomic metadata rewrite (the linearization
+            # point — old mapping before the rename, new mapping after)
+            for b in ids.tolist():
+                pl.move_block(b, dst_of[b])
+            # write charges come from the *actual* destination slots the
+            # moves landed on (free-list reuse can scatter them)
+            self._charge_migration_writes(ids, dst_of, queue_depth)
+            pl.save(self.path)
+            if _fault is not None:
+                _fault("committed")
+            # -------- free: drop the journal, reset sequential detection
+            os.remove(journal)
+            self._last_local_read = np.full(topo.n_arrays, -2,
+                                            dtype=np.int64)
+            self._last_block_read = -2
+        return len(ids)
+
+    def _migration_qd(self, queue_depth, array: int) -> int:
+        return self.topology.queue_depth_of(
+            queue_depth if queue_depth is not None
+            else self.topology.devices[array].queue_depth, array)
+
+    def _charge_migration_reads(self, ids: np.ndarray,
+                                queue_depth=None) -> None:
+        """Charge the copy's read side on the *source* arrays (call
+        before the moves are applied).  Caller holds ``_io_lock``; takes
+        the topology lock itself."""
+        pl, topo, bs = self.placement, self.topology, self.block_size
+        placed = pl.split_runs(coalesce(ids, bs, 8 << 20), bs, 8 << 20)
+        read_t = 0.0
+        read_blocks = read_seq = 0
+        read_sizes: list[int] = []
+        with topo.lock:
+            for a, rs in placed:
+                nb = sum(r.count for r in rs)
+                t = topo.devices[a].batch_time(
+                    nb * bs, n_random=len(rs), n_sequential=nb - len(rs),
+                    queue_depth=self._migration_qd(queue_depth, a))
+                sizes = [r.count * bs for r in rs]
+                topo.array_stats[a].record_run_batch(
+                    nb * bs, nb, nb - len(rs), sizes, t)
+                topo.array_stats[a].note_migration(nb, nb * bs)
+                read_t = max(read_t, t)
+                read_blocks += nb
+                read_seq += nb - len(rs)
+                read_sizes.extend(sizes)
+        nbytes = int(len(ids)) * bs
+        self.stats.record_run_batch(nbytes, read_blocks, read_seq,
+                                    read_sizes, read_t)
+        self.stats.note_migration(int(len(ids)), nbytes)
+
+    def _charge_migration_writes(self, ids: np.ndarray, dst_of: dict,
+                                 queue_depth=None) -> None:
+        """Charge the copy's write side on the *destination* arrays from
+        the local slots the moves actually landed on — fresh tail slots
+        stream sequentially, reused free-list slots pay random heads.
+        Call after the moves are applied; caller holds ``_io_lock``."""
+        pl, topo, bs = self.placement, self.topology, self.block_size
+        dst_arrays = np.asarray([dst_of[int(b)] for b in ids],
+                                dtype=np.int64)
+        write_t = 0.0
+        write_sizes: list[int] = []
+        with topo.lock:
+            for a in np.unique(dst_arrays).tolist():
+                loc = np.sort(pl.local_of[ids[dst_arrays == a]])
+                k = int(loc.size)
+                n_runs = int((np.diff(loc) != 1).sum()) + 1
+                t = topo.devices[a].batch_time(
+                    k * bs, n_random=n_runs, n_sequential=k - n_runs,
+                    queue_depth=self._migration_qd(queue_depth, a))
+                cuts = np.nonzero(np.diff(loc) != 1)[0] + 1
+                sizes = [len(seg) * bs for seg in np.split(loc, cuts)]
+                topo.array_stats[a].record_write(
+                    k * bs, t, request_sizes=sizes)
+                topo.array_stats[a].note_migration(k, k * bs)
+                write_t = max(write_t, t)
+                write_sizes.extend(sizes)
+        self.stats.record_write(int(len(ids)) * bs, write_t,
+                                request_sizes=write_sizes)
 
 
 class GraphBlockStore(_BlockReadBatcher):
@@ -232,6 +415,7 @@ class GraphBlockStore(_BlockReadBatcher):
         self.n_edges = n_edges
         self.device = device or NVMeModel()
         self.stats = IOStats()
+        recover_store_metadata(path)  # GC partial migration state (crash)
         self._mm = np.memmap(path, dtype=np.int32, mode="r")
         self._last_block_read = -2  # sequential-access detection
         self._io_lock = threading.Lock()  # prefetch thread vs consumer
@@ -392,6 +576,13 @@ class GraphBlockStore(_BlockReadBatcher):
             self._record_block_read_locked(block_id)
         return self._decode(block_id, raw)
 
+    def read_block_bytes(self, block_id: int) -> bytes:
+        """Raw on-disk bytes of one graph block (migration copy unit)."""
+        if not (0 <= block_id < self.n_blocks):
+            raise IndexError(block_id)
+        w = self.words_per_block
+        return np.asarray(self._mm[block_id * w:(block_id + 1) * w]).tobytes()
+
     def read_run(self, start: int, count: int) -> list[GraphBlock]:
         """One memmap slice over ``count`` adjacent blocks, decoded together.
 
@@ -482,6 +673,7 @@ class FeatureBlockStore(_BlockReadBatcher):
         self.n_blocks = -(-n_nodes // self.rows_per_block)
         self.device = device or NVMeModel()
         self.stats = IOStats()
+        recover_store_metadata(path)  # GC partial migration state (crash)
         self._mm = np.memmap(path, dtype=self.dtype, mode="r",
                              shape=(self.n_blocks * self.rows_per_block, dim))
         self._last_block_read = -2
@@ -532,6 +724,13 @@ class FeatureBlockStore(_BlockReadBatcher):
             self._record_block_read_locked(block_id)
         return rows
 
+    def read_block_bytes(self, block_id: int) -> bytes:
+        """Raw on-disk bytes of one feature block (migration copy unit)."""
+        if not (0 <= block_id < self.n_blocks):
+            raise IndexError(block_id)
+        r = self.rows_per_block
+        return np.asarray(self._mm[block_id * r:(block_id + 1) * r]).tobytes()
+
     def read_run(self, start: int, count: int) -> list[np.ndarray]:
         """One memmap slice over ``count`` adjacent blocks; no accounting."""
         if not (0 <= start and start + count <= self.n_blocks):
@@ -549,6 +748,8 @@ class FeatureBlockStore(_BlockReadBatcher):
         """
         nodes = np.asarray(nodes)
         out = np.asarray(self._mm[nodes])
+        if self.hotness is not None:
+            self.hotness.touch(self.block_of(nodes))
         per_io = -(-self.row_bytes // io_unit) * io_unit
         t = self.device.batch_time(per_io * len(nodes), n_random=len(nodes))
         self.stats.n_reads += len(nodes)

@@ -74,6 +74,12 @@ class IOStats:
     bytes_written: int = 0
     modeled_read_time: float = 0.0
     modeled_write_time: float = 0.0
+    # background migration traffic (core/migration.py): the copy I/O is
+    # charged through record_run_batch / record_write like any other
+    # request — these counters additionally isolate how much of the
+    # above was re-placement overhead rather than prepare traffic
+    n_migrated_blocks: int = 0
+    bytes_migrated: int = 0
     size_histogram: Counter = dataclasses.field(default_factory=Counter)
 
     # cache-level accounting (filled by the buffer layers)
@@ -123,6 +129,11 @@ class IOStats:
         for s in sizes:
             self.size_histogram[_bucket(s)] += 1
 
+    def note_migration(self, n_blocks: int, nbytes: int) -> None:
+        """Tag already-charged copy I/O as block-migration traffic."""
+        self.n_migrated_blocks += int(n_blocks)
+        self.bytes_migrated += int(nbytes)
+
     @property
     def n_ios(self) -> int:
         return self.n_reads + self.n_writes
@@ -154,7 +165,8 @@ class IOStats:
     def merge(self, other: "IOStats") -> "IOStats":
         for f in ("n_reads", "n_requests", "n_writes", "n_sequential_reads",
                   "bytes_read",
-                  "bytes_written", "buffer_hits", "buffer_misses",
+                  "bytes_written", "n_migrated_blocks", "bytes_migrated",
+                  "buffer_hits", "buffer_misses",
                   "cache_hits", "cache_misses"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         self.modeled_read_time += other.modeled_read_time
@@ -172,6 +184,8 @@ class IOStats:
                 self.n_sequential_reads / self.n_reads, 4) if self.n_reads else 0.0,
             "bytes_read": self.bytes_read,
             "bytes_written": self.bytes_written,
+            "n_migrated_blocks": self.n_migrated_blocks,
+            "bytes_migrated": self.bytes_migrated,
             "modeled_io_time_s": round(self.modeled_io_time, 6),
             "achieved_bw_GBps": round(self.achieved_bandwidth() / 1e9, 3),
             "buffer_hit_ratio": round(self.buffer_hit_ratio, 4),

@@ -40,6 +40,24 @@ class FeatureCache:
         self.counts = np.zeros(n_nodes, dtype=np.int64)
         self._clock = 0
         self._n_resident = 0
+        # hotness telemetry (core/hotness.py): cache hits attributed to
+        # their feature blocks at a discount — a hit is storage traffic
+        # the cache absorbed *this* epoch but may not absorb the next
+        self._hotness = None
+        self._hot_rows_per_block = 1
+        self._hot_hit_weight = 0.0
+
+    def attach_hotness(self, tracker, rows_per_block: int,
+                       hit_weight: float = 0.25) -> None:
+        """Report per-block hit traffic into a :class:`HotnessTracker`.
+
+        Misses are *not* recorded here — the store's accounting layer
+        records them when the missed blocks are actually read, so a row
+        is never double counted.
+        """
+        self._hotness = tracker
+        self._hot_rows_per_block = max(int(rows_per_block), 1)
+        self._hot_hit_weight = float(hit_weight)
 
     def __len__(self) -> int:
         return self._n_resident
@@ -52,6 +70,10 @@ class FeatureCache:
         mask = slots >= 0
         self.stats.cache_hits += int(mask.sum())
         self.stats.cache_misses += int((~mask).sum())
+        if self._hotness is not None and self._hot_hit_weight > 0 \
+                and mask.any():
+            self._hotness.touch(nodes[mask] // self._hot_rows_per_block,
+                                weight=self._hot_hit_weight)
         return mask, self.rows[slots[mask]]
 
     def note_access(self, nodes: np.ndarray) -> None:

@@ -1,0 +1,131 @@
+"""Empirical per-block hotness telemetry (ROADMAP item: Ginex-style).
+
+PR 4's placement policies score blocks with *static* proxies computed at
+attach time (``graph_block_hotness`` / ``feature_block_hotness`` in
+``topology.py``: degree mass from the pinned T_obj).  Real access skew
+only emerges at runtime — hub sampling, label skew, cache residency —
+and drifts across epochs.  Ginex (VLDB'22) shows placement/caching
+driven by *measured* access traces substantially beats static
+heuristics for SSD-based GNN training; this module is that measurement.
+
+:class:`HotnessTracker` accumulates per-block touch counts from the
+prepare path:
+
+* the store accounting layer (``block_store._BlockReadBatcher``) records
+  one touch per block of every submitted coalesced run and every
+  block-granular read — exact storage touches, covering the coalesced
+  scheduler, the legacy prefetcher, and direct reads alike;
+* :class:`~repro.core.feature_cache.FeatureCache` attributes cache
+  *hits* to their feature blocks at a configurable discount
+  (``hit_weight``): a hit generates no storage I/O today, but the row
+  can be evicted and its block re-read tomorrow, so hit traffic is a
+  forward-looking placement signal rather than a current cost.
+
+At epoch boundaries :meth:`roll` folds the epoch's window into an
+exponentially-decayed hotness vector (``hot = decay * hot + window``),
+so the score tracks drift with bounded memory of the past.
+:meth:`hotness` (decayed history + the open window) is what the online
+re-placement feeds to :class:`~repro.core.topology.PlacementPolicy`
+instead of the static degree proxy — see ``core/migration.py``.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+
+class HotnessTracker:
+    """Exponentially-decayed per-block touch counter for one block store.
+
+    Thread-safe: the coalesced reader pool, the legacy prefetch thread
+    and the consumer all record touches concurrently with the stores'
+    per-store ``_io_lock`` *not* held across stores, so the tracker
+    carries its own lock.
+    """
+
+    def __init__(self, n_blocks: int, decay: float = 0.5):
+        if not (0.0 <= decay < 1.0):
+            raise ValueError("decay must be in [0, 1)")
+        self.n_blocks = int(n_blocks)
+        self.decay = float(decay)
+        self.hot = np.zeros(self.n_blocks, dtype=np.float64)
+        self.window = np.zeros(self.n_blocks, dtype=np.float64)
+        self.n_rolls = 0
+        self.total_touches = 0.0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ record
+    def touch(self, block_ids, weight: float = 1.0) -> None:
+        """Record one touch per entry of ``block_ids`` (repeats add up)."""
+        ids = np.asarray(block_ids, dtype=np.int64)
+        if ids.size == 0:
+            return
+        with self._lock:
+            np.add.at(self.window, ids, weight)
+            self.total_touches += weight * ids.size
+
+    def touch_runs(self, runs, weight: float = 1.0) -> None:
+        """Record every block of a submitted coalesced-run plan."""
+        with self._lock:
+            n = 0
+            for r in runs:
+                self.window[r.start:r.stop] += weight
+                n += r.count
+            self.total_touches += weight * n
+
+    # ------------------------------------------------------------ epoch
+    def roll(self) -> np.ndarray:
+        """Epoch boundary: fold the window into the decayed accumulator.
+
+        Returns the epoch's (pre-fold) window so callers can report
+        per-epoch traffic.
+        """
+        with self._lock:
+            epoch_window = self.window
+            self.hot *= self.decay
+            self.hot += epoch_window
+            self.window = np.zeros(self.n_blocks, dtype=np.float64)
+            self.n_rolls += 1
+            return epoch_window
+
+    @property
+    def window_touches(self) -> float:
+        """Touches recorded since the last :meth:`roll` (un-rolled traffic)."""
+        with self._lock:
+            return float(self.window.sum())
+
+    def hotness(self) -> np.ndarray:
+        """Current per-block hotness: decayed history + the open window.
+
+        This is the drop-in replacement for the static degree proxies as
+        the ``hotness=`` input to ``PlacementPolicy.place``.
+        """
+        with self._lock:
+            return self.hot + self.window
+
+    # ------------------------------------------------------------ reporting
+    def skew_summary(self, top_fraction: float = 0.1) -> dict:
+        """How concentrated the measured traffic is (placement headroom).
+
+        ``top_share`` is the hotness mass held by the hottest
+        ``top_fraction`` of blocks — 1.0 means the hot set is tiny and
+        pinnable, ``top_fraction`` means traffic is flat and placement
+        cannot beat plain striping.
+        """
+        h = self.hotness()
+        total = float(h.sum())
+        k = max(int(self.n_blocks * top_fraction), 1)
+        if total <= 0 or self.n_blocks == 0:
+            return {"n_blocks": self.n_blocks, "total_touches": 0.0,
+                    "top_fraction": top_fraction, "top_share": 0.0,
+                    "touched_fraction": 0.0, "n_rolls": self.n_rolls}
+        top = np.partition(h, self.n_blocks - k)[self.n_blocks - k:]
+        return {
+            "n_blocks": self.n_blocks,
+            "total_touches": round(float(total), 3),
+            "top_fraction": top_fraction,
+            "top_share": round(float(top.sum()) / total, 4),
+            "touched_fraction": round(float((h > 0).mean()), 4),
+            "n_rolls": self.n_rolls,
+        }

@@ -384,6 +384,18 @@ class CoalescedReader:
     # alias kept for symmetry with BlockPrefetcher's non-blocking API
     take = fetch
 
+    @property
+    def idle(self) -> bool:
+        """True when no submitted plan remains undelivered.
+
+        The online re-placement path (``core/migration.py``) swaps the
+        store's :class:`~repro.core.topology.BlockPlacement` between
+        epochs; an idle reader guarantees no in-flight run was split
+        against the outgoing mapping.  ``reset()`` forces idleness.
+        """
+        with self._cv:
+            return not self._run_of and not any(self._pending.values())
+
     def reset(self) -> None:
         """Drop any undelivered plan state and close the fused stream.
 

@@ -1,0 +1,178 @@
+"""Online re-placement + background block migration (ROADMAP items:
+*empirical hotness*, *rebalancing writes*, *writable stores*).
+
+PR 4's :class:`~repro.core.topology.BlockPlacement` is computed once at
+attach time from a static degree proxy.  Real access skew only emerges
+at runtime and drifts across epochs (a rotating hot train subset, label
+skew, cache dynamics) — Ginex (VLDB'22) shows measured access traces
+beat static heuristics for SSD-based GNN training, and Jiang et al.
+(arXiv:2406.13984) show unmanaged write traffic congests the same NVMe
+queues the read path needs, which is why migration here is *budgeted*
+and charged into the same per-array rooflines it competes with.
+
+At each epoch boundary the :class:`MigrationEngine`:
+
+1. **re-scores** — runs the placement policy over the *measured*
+   hotness vector (:class:`~repro.core.hotness.HotnessTracker`, decayed
+   across epochs) instead of the attach-time degree proxy;
+2. **diffs** — blocks whose target array differs from their current one
+   become candidate moves, ordered hottest first (the hottest
+   misplacements buy the most roofline per byte written);
+3. **caps** — the plan is truncated to ``budget_bytes`` of moved blocks
+   per epoch, so migration can never starve the prepare path;
+4. **executes** — through the store's crash-consistent write path
+   (``block_store.migrate_blocks``: journal the block copies + fsync,
+   atomically rewrite ``<store>.topo.json`` via temp-file rename, free
+   the old slots), charging reads to the source arrays and writes to
+   the destinations.
+
+Blocks with zero measured hotness are never moved: with no capacity
+model an unread block costs nothing wherever it sits, so moving it is
+pure write traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .hotness import HotnessTracker
+from .topology import PlacementPolicy, StorageTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMove:
+    """One planned migration: ``block_id`` from ``src`` to ``dst``."""
+
+    block_id: int
+    src: int
+    dst: int
+    score: float    # measured hotness — the move ordering key
+
+
+@dataclasses.dataclass
+class MigrationReport:
+    """What one epoch-boundary migration pass did on one store."""
+
+    store: str
+    n_wanted: int           # placement diff size before the budget cap
+    n_moved: int
+    bytes_moved: int
+    budget_bytes: int
+    read_s: float           # copy-read time charged to source arrays
+    write_s: float          # copy-write time charged to destinations
+    blocks_per_array: list[int] | None = None  # post-migration layout
+
+    def summary(self) -> dict:
+        return {
+            "store": self.store,
+            "n_wanted": self.n_wanted,
+            "n_moved": self.n_moved,
+            "bytes_moved": self.bytes_moved,
+            "budget_bytes": self.budget_bytes,
+            "budget_utilization": round(
+                self.bytes_moved / self.budget_bytes, 4)
+            if self.budget_bytes else 0.0,
+            "copy_read_s": round(self.read_s, 6),
+            "copy_write_s": round(self.write_s, 6),
+            "blocks_per_array": self.blocks_per_array,
+        }
+
+
+class MigrationEngine:
+    """Budgeted epoch-boundary re-placement for one block store.
+
+    ``store`` must carry an attached topology + placement
+    (``attach_topology``); ``policy`` is the scorer run over measured
+    hotness — typically :class:`~repro.core.topology.
+    HotnessAwarePlacement`, the only shipped policy that consumes a
+    hotness vector (stripe/contiguous targets are hotness-independent,
+    so their diffs are empty and migration no-ops).
+    """
+
+    def __init__(self, store, policy: PlacementPolicy,
+                 budget_bytes: int, name: str = "store",
+                 queue_depth: int | None = None,
+                 min_score_fraction: float = 0.01):
+        if store.topology is None or store.placement is None:
+            raise ValueError("store needs an attached topology/placement")
+        self.store = store
+        self.policy = policy
+        self.budget_bytes = int(budget_bytes)
+        self.name = name
+        self.queue_depth = queue_depth
+        # churn guard: moves colder than this fraction of the hottest
+        # move are noise (stale windows decaying toward zero, boundary
+        # wobble) — pure write traffic with negligible roofline value
+        self.min_score_fraction = float(min_score_fraction)
+        self.last_report: MigrationReport | None = None
+
+    @property
+    def topology(self) -> StorageTopology:
+        return self.store.topology
+
+    # ------------------------------------------------------------ plan
+    def plan(self, hotness: np.ndarray) -> tuple[list[BlockMove], int]:
+        """Diff the measured-hotness placement against the current one.
+
+        Returns ``(moves, n_wanted)``: the hottest-first move list
+        truncated to the byte budget, and the untruncated diff size.
+        """
+        h = np.asarray(hotness, dtype=np.float64)
+        cur = self.store.placement
+        # noise floor *before* placing: blocks colder than the fraction
+        # of the hottest drop out of the policy's hot set entirely —
+        # stale windows decaying toward zero neither fragment the live
+        # hot runs nor generate move-back churn (they stay pinned where
+        # they are, costing nothing without a capacity model)
+        floor = self.min_score_fraction * float(h.max()) if h.size else 0.0
+        h_eff = np.where(h > floor, h, 0.0) if floor > 0 else h
+        target = self.policy.place(self.store.n_blocks, self.topology,
+                                   hotness=h_eff)
+        diff = np.nonzero((target.array_of != cur.array_of)
+                          & (h_eff > 0))[0]
+        n_wanted = int(diff.size)
+        if n_wanted == 0:
+            return [], 0
+        order = diff[np.argsort(-h[diff], kind="stable")]
+        # budget <= block_size means no block fits — migration disabled,
+        # not unlimited (the cap is a ceiling, never an opt-out)
+        order = order[:max(self.budget_bytes // self.store.block_size, 0)]
+        return [BlockMove(int(b), int(cur.array_of[b]),
+                          int(target.array_of[b]), float(h[b]))
+                for b in order.tolist()], n_wanted
+
+    # ------------------------------------------------------------ execute
+    def run(self, tracker_or_hotness) -> MigrationReport:
+        """Plan + execute one bounded migration pass.
+
+        Accepts a :class:`HotnessTracker` (its current
+        :meth:`~HotnessTracker.hotness` view is used) or a raw hotness
+        vector.  Copy I/O deltas are measured off the store's own
+        :class:`~repro.core.device_model.IOStats`.
+        """
+        hot = (tracker_or_hotness.hotness()
+               if isinstance(tracker_or_hotness, HotnessTracker)
+               else tracker_or_hotness)
+        moves, n_wanted = self.plan(hot)
+        st = self.store.stats
+        r0, w0 = st.modeled_read_time, st.modeled_write_time
+        moved = 0
+        if moves:
+            moved = self.store.migrate_blocks(
+                [(m.block_id, m.dst) for m in moves],
+                queue_depth=self.queue_depth)
+        report = MigrationReport(
+            store=self.name,
+            n_wanted=n_wanted,
+            n_moved=moved,
+            bytes_moved=moved * self.store.block_size,
+            budget_bytes=self.budget_bytes,
+            read_s=st.modeled_read_time - r0,
+            write_s=st.modeled_write_time - w0,
+            blocks_per_array=np.bincount(
+                self.store.placement.array_of,
+                minlength=self.topology.n_arrays).tolist(),
+        )
+        self.last_report = report
+        return report

@@ -123,6 +123,11 @@ class PrepareSession:
         if self._done:
             raise RuntimeError("a PrepareSession is single-use")
         eng = self.engine
+        # the online re-placement path (engine.end_epoch) swaps store
+        # placements and must only run between sessions — mark the
+        # engine busy so a mid-session migration fails loudly instead
+        # of racing the open plan's array split
+        eng._in_session = True
         sampler, gatherer = eng.sampler, eng.gatherer
         g_reader, f_reader = eng._g_prefetch, eng._f_prefetch
         g_bs = eng.graph_store.block_size
@@ -196,6 +201,7 @@ class PrepareSession:
             # session end: the stream's barrier + drop any stale state
             # (early-planned blocks that turned out buffer-resident);
             # no-op on the barriered path, cleanup after an exception
+            eng._in_session = False
             for rd in (g_reader, f_reader):
                 if rd is not None:
                     rd.reset()

@@ -40,11 +40,25 @@ plans as the ``max`` over per-array accumulated rooflines.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import json
+import os
 import threading
 
 import numpy as np
+
+
+def fsync_dir(path: str) -> None:
+    """fsync the directory holding ``path`` so a just-renamed or
+    just-created entry survives power loss (the rename itself is atomic
+    but not durable until its directory is flushed)."""
+    fd = os.open(os.path.dirname(os.path.abspath(path)) or ".",
+                 os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 from .device_model import IOStats, NVMeModel
 from .io_sched import Run, coalesce
@@ -140,6 +154,10 @@ class BlockPlacement:
         self.n_arrays = int(n_arrays if n_arrays is not None
                             else (self.array_of.max() + 1
                                   if len(self.array_of) else 1))
+        # per-array slot bookkeeping for online migration (lazy: only
+        # built once move_block is first called)
+        self._next_local: dict[int, int] | None = None
+        self._free: dict[int, list[int]] | None = None
 
     @property
     def n_blocks(self) -> int:
@@ -192,14 +210,75 @@ class BlockPlacement:
             return np.zeros(self.n_arrays, dtype=np.int64)
         return np.bincount(self.array_of[ids], minlength=self.n_arrays)
 
+    # ------------------------------------------------------------ migration
+    def _ensure_slots(self) -> None:
+        """Build the per-array free/next-slot maps from the current mapping."""
+        if self._next_local is not None:
+            return
+        self._next_local = {}
+        self._free = {}
+        for a in range(self.n_arrays):
+            mine = self.local_of[self.array_of == a]
+            if len(mine) == 0:
+                self._next_local[a] = 0
+                self._free[a] = []
+                continue
+            nxt = int(mine.max()) + 1
+            present = np.zeros(nxt, dtype=bool)
+            present[mine] = True
+            self._next_local[a] = nxt
+            # ascending: reuse the lowest freed slot first
+            self._free[a] = np.nonzero(~present)[0].tolist()
+
+    def move_block(self, block_id: int, dst_array: int) -> None:
+        """Reassign one block to ``dst_array``, freeing its old local slot.
+
+        The destination slot comes from the array's free list (lowest
+        first) or, when none is free, a fresh slot past the end of its
+        local space — the same tail "hot partition" convention as
+        :class:`HotnessAwarePlacement`, so the destination's natural
+        stripe lattice is never perturbed.  This only rewrites the
+        mapping; the durable write path (block copy + fsync + atomic
+        metadata commit) lives in ``block_store.migrate_blocks``.
+        """
+        b = int(block_id)
+        dst = int(dst_array)
+        if not (0 <= dst < self.n_arrays):
+            raise ValueError(f"array {dst} outside topology of {self.n_arrays}")
+        src = int(self.array_of[b])
+        if src == dst:
+            return
+        self._ensure_slots()
+        bisect.insort(self._free[src], int(self.local_of[b]))
+        if self._free[dst]:
+            slot = self._free[dst].pop(0)
+        else:
+            slot = self._next_local[dst]
+            self._next_local[dst] = slot + 1
+        self.array_of[b] = dst
+        self.local_of[b] = slot
+
     # ------------------------------------------------------------ persistence
     def save(self, store_path: str) -> str:
-        """Persist next to the store's data file (``<path>.topo.json``)."""
+        """Persist next to the store's data file (``<path>.topo.json``).
+
+        Atomic: the payload is written to ``<path>.topo.json.tmp`` and
+        fsynced, then moved into place with :func:`os.replace` — a crash
+        mid-save can leave a stale temp file behind but never a torn
+        ``topo.json`` (the committed file is always the complete old or
+        the complete new mapping).  Stale temp files are discarded by
+        ``block_store.recover_store_metadata`` when the store reopens.
+        """
         out = store_path + ".topo.json"
-        with open(out, "w") as f:
+        tmp = out + ".tmp"
+        with open(tmp, "w") as f:
             json.dump({"policy": self.policy, "n_arrays": self.n_arrays,
                        "array_of": self.array_of.tolist(),
                        "local_of": self.local_of.tolist()}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, out)
+        fsync_dir(out)  # make the rename itself durable
         return out
 
     @classmethod

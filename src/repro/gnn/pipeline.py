@@ -44,8 +44,12 @@ class OverlapReport:
     losses: list[float]
     prepare_reports: list[PrepareReport]
     # io_queue_depth after each hyperbatch when the adaptive scheduler
-    # hook is on (empty otherwise)
-    queue_depths: list[int] = dataclasses.field(default_factory=list)
+    # hook is on (empty otherwise); scalar per hyperbatch without a
+    # storage topology, ``{array: depth}`` with one (per-array control)
+    queue_depths: list = dataclasses.field(default_factory=list)
+    # per-store migration summaries from the engine's epoch-boundary
+    # online re-placement pass (None when online_placement is off)
+    migration: dict | None = None
 
     @property
     def exposed_prepare_s(self) -> float:
@@ -102,7 +106,7 @@ class OverlapReport:
         }
 
     def summary(self) -> dict:
-        return {
+        out = {
             "epoch_wall_s": self.epoch_wall_s,
             "prepare_wall_s": self.prepare_wall_s,
             "train_wall_s": self.train_wall_s,
@@ -112,6 +116,9 @@ class OverlapReport:
             "n_minibatches": self.n_minibatches,
             "io": self.io_summary(),
         }
+        if self.migration is not None:
+            out["migration"] = self.migration
+        return out
 
 
 class PipelinedExecutor:
@@ -133,6 +140,19 @@ class PipelinedExecutor:
     shrink back.  Only the modeled device time changes — plans, bytes
     and losses are identical.
 
+    With a storage topology attached, each array is driven
+    *independently* from its own windowed roofline (its per-array
+    ``IOStats`` busy-time delta over the hyperbatch): when prepare is
+    exposed, only the roofline-setting array(s) deepen — the ones whose
+    busy time actually gates the ``max``-over-arrays cost — while
+    arrays with significant slack shrink back toward the lower bound
+    (``engine.set_io_queue_depth(qd, array=...)``).
+
+    When the engine's ``online_placement`` is on, the executor also
+    drives ``engine.end_epoch()`` after the epoch completes — the
+    epoch-boundary hotness roll + budgeted block migration pass — and
+    surfaces its per-store summaries on :attr:`OverlapReport.migration`.
+
     Use as a context manager or call :meth:`close`; a mid-epoch
     exception on either side stops and joins the background thread
     before propagating.
@@ -152,6 +172,7 @@ class PipelinedExecutor:
         self._producer: threading.Thread | None = None
         self._queue: queue.Queue | None = None
         self._producer_error: BaseException | None = None
+        self._prev_array_busy: list[float] | None = None
 
     # ---------------------------------------------------------- epoch
     def run_epoch(self, all_targets: np.ndarray, epoch: int = 0,
@@ -165,6 +186,15 @@ class PipelinedExecutor:
             raise RuntimeError("an epoch is already running")
         plan = self.engine.plan_epoch(all_targets, epoch=epoch,
                                       shuffle=shuffle)
+        topo = getattr(self.engine, "topology", None)
+        if topo is not None:
+            # window base for the per-array adaptive signal: each
+            # hyperbatch's busy-time delta, not cumulative history
+            with topo.lock:
+                self._prev_array_busy = [st.modeled_io_time
+                                         for st in topo.array_stats]
+        else:
+            self._prev_array_busy = None
         q: queue.Queue = queue.Queue(maxsize=self.depth)
         # fresh per-epoch stop event: a producer from a previous epoch that
         # outlived its join timeout keeps seeing its own (set) event and can
@@ -199,7 +229,7 @@ class PipelinedExecutor:
                                           name="agnes-prepare-pipeline")
         losses: list[float] = []
         reports: list[PrepareReport] = []
-        queue_depths: list[int] = []
+        queue_depths: list = []  # scalar per hyperbatch, or {array: depth}
         train_s = 0.0
         n_hb = n_mb = 0
         prev_wall = prev_prep = prev_train = 0.0  # adaptive-signal window
@@ -255,9 +285,16 @@ class PipelinedExecutor:
             leaked = self._shutdown()
             if leaked is not None:
                 raise leaked  # a swallowed producer error is a real failure
+        migration = None
+        if getattr(getattr(self.engine, "config", None),
+                   "online_placement", False) \
+                and hasattr(self.engine, "end_epoch"):
+            # epoch boundary: hotness roll + budgeted re-placement, so
+            # the next epoch's plans split against the migrated layout
+            migration = self.engine.end_epoch()
         wall = time.perf_counter() - t_epoch
         return OverlapReport(wall, prepare_s[0], train_s, n_hb, n_mb,
-                             losses, reports, queue_depths)
+                             losses, reports, queue_depths, migration)
 
     # ------------------------------------------------------- lifecycle
     def close(self) -> None:
@@ -291,17 +328,41 @@ class PipelinedExecutor:
                 continue
         return False
 
-    def _resize_queue_depth(self, exposed_frac: float) -> int:
+    def _resize_queue_depth(self, exposed_frac: float):
         """Hyperbatch-level scheduler integration: exposed prepare means
         the epoch is I/O-bound — deepen the queue so the coalesced plans
-        overlap more requests; fully hidden prepare shrinks it back."""
+        overlap more requests; fully hidden prepare shrinks it back.
+
+        With a storage topology each array is resized independently
+        from its own windowed roofline: exposed prepare deepens only
+        the array(s) whose busy time sets the ``max``-over-arrays cost,
+        while arrays with >= 2x slack (or a fully hidden epoch) shrink
+        back.  Returns the scalar depth, or ``{array: depth}``.
+        """
         lo, hi = self.io_queue_depth_bounds
-        qd = self.engine.config.io_queue_depth
-        if exposed_frac > 0.2:
-            qd = min(max(qd * 2, lo), hi)
-        elif exposed_frac < 0.02:
-            qd = min(max(qd // 2, lo), hi)
-        return self.engine.set_io_queue_depth(qd)
+        topo = getattr(self.engine, "topology", None)
+        if topo is None or not hasattr(self.engine, "io_queue_depths"):
+            qd = self.engine.config.io_queue_depth
+            if exposed_frac > 0.2:
+                qd = min(max(qd * 2, lo), hi)
+            elif exposed_frac < 0.02:
+                qd = min(max(qd // 2, lo), hi)
+            return self.engine.set_io_queue_depth(qd)
+        with topo.lock:
+            busys = [st.modeled_io_time for st in topo.array_stats]
+        prev = self._prev_array_busy or [0.0] * len(busys)
+        deltas = [b - p for b, p in zip(busys, prev)]
+        self._prev_array_busy = busys
+        mx = max(deltas) if deltas else 0.0
+        depths = dict(self.engine.io_queue_depths())
+        for a, delta in enumerate(deltas):
+            qd = depths.get(a, self.engine.config.io_queue_depth)
+            if exposed_frac > 0.2 and mx > 0 and delta >= 0.9 * mx:
+                qd = min(max(qd * 2, lo), hi)   # this array gates the max
+            elif exposed_frac < 0.02 or (mx > 0 and delta <= 0.5 * mx):
+                qd = min(max(qd // 2, lo), hi)  # idle or 2x slack
+            depths[a] = self.engine.set_io_queue_depth(qd, array=a)
+        return depths
 
     def _shutdown(self) -> BaseException | None:
         """Stop, drain and join; returns a producer exception that would

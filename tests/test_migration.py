@@ -1,0 +1,296 @@
+"""Online re-placement + background block migration (core/migration.py).
+
+Covers the migration plan (diff, hottest-first order, budget cap), the
+crash-consistent write path (journal -> atomic metadata commit -> free),
+slot bookkeeping on live placements, interrupted-save recovery, and the
+engine-level epoch-boundary loop (byte parity with the static path).
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (AgnesConfig, AgnesEngine, BlockPlacement,
+                        HotnessAwarePlacement, MigrationEngine, NVMeModel,
+                        StorageTopology, StripePlacement,
+                        recover_store_metadata)
+
+
+def hetero_topo(speedup=3.0):
+    fast = dataclasses.replace(NVMeModel(), bandwidth=speedup * 6.7e9,
+                               latency=80e-6 / speedup)
+    return StorageTopology([fast, NVMeModel()])
+
+
+def striped_feature_store(ds, topo, persist=True):
+    _, f = ds.reopen_stores()
+    f.attach_topology(topo, StripePlacement(1).place(f.n_blocks, topo),
+                      persist=persist)
+    return f
+
+
+ONLINE_POLICY = HotnessAwarePlacement(1, hot_mass=0.9, max_hot_fraction=0.5)
+
+
+# ---------------------------------------------------------------- placement
+def test_move_block_keeps_bijection_and_reuses_slots():
+    topo = StorageTopology.uniform(2)
+    pl = StripePlacement(1).place(10, topo)
+    pl.move_block(1, 0)   # array 1 -> 0: fresh tail slot on 0
+    assert pl.array_of[1] == 0 and pl.local_of[1] == 5
+    pl.move_block(3, 0)
+    assert pl.local_of[3] == 6
+    pl.move_block(1, 1)   # back: reuses 1's freed slot (lowest first)
+    assert pl.array_of[1] == 1 and pl.local_of[1] == 0
+    pl.move_block(1, 0)   # forth again: reuses the freed tail slot on 0
+    assert pl.local_of[1] == 5
+    # every array's local ids stay dense-injective (no collisions)
+    for a in range(2):
+        mine = pl.local_of[pl.array_of == a]
+        assert len(set(mine.tolist())) == len(mine)
+    pl.move_block(0, 0)   # no-op: same array
+    with pytest.raises(ValueError):
+        pl.move_block(0, 5)
+
+
+def test_save_is_atomic_and_recovery_discards_tmp(tmp_path):
+    topo = StorageTopology.uniform(2)
+    pl = StripePlacement(1).place(8, topo)
+    base = str(tmp_path / "store.bin")
+    out = pl.save(base)
+    assert not os.path.exists(out + ".tmp")
+    # interrupted save: a torn temp file must never shadow the committed
+    # mapping, and store-open recovery garbage-collects it
+    with open(out + ".tmp", "w") as f:
+        f.write('{"policy": "torn garb')
+    loaded = BlockPlacement.load(base)
+    assert np.array_equal(loaded.array_of, pl.array_of)
+    removed = recover_store_metadata(base)
+    assert ".topo.json.tmp" in removed
+    assert not os.path.exists(out + ".tmp")
+    pl.save(base)  # saving over the recovered state still works
+    assert np.array_equal(BlockPlacement.load(base).local_of, pl.local_of)
+
+
+# ---------------------------------------------------------------- planning
+def test_plan_diff_order_and_budget(tiny_ds):
+    topo = hetero_topo()
+    f = striped_feature_store(tiny_ds, topo, persist=False)
+    hot = np.zeros(f.n_blocks)
+    hot[1], hot[3], hot[5] = 10.0, 30.0, 20.0  # all on slow array 1
+    mig = MigrationEngine(f, ONLINE_POLICY,
+                          budget_bytes=2 * f.block_size, name="feature")
+    moves, wanted = mig.plan(hot)
+    # the greedy balances hot load relative to bandwidth: 3 and 1 pin to
+    # the fast array, 5 stays put on the slow one — 2 moves wanted
+    assert wanted == 2
+    assert [m.block_id for m in moves] == [3, 1]  # hottest-delta first
+    assert all(m.src == 1 and m.dst == 0 for m in moves)
+    # a 1-block budget truncates to the hottest move only
+    mig_tight = MigrationEngine(f, ONLINE_POLICY,
+                                budget_bytes=f.block_size)
+    tight, _ = mig_tight.plan(hot)
+    assert [m.block_id for m in tight] == [3]
+    # zero-hotness blocks never move (pure write traffic, no benefit)
+    assert all(hot[m.block_id] > 0 for m in moves)
+
+
+def test_zero_budget_disables_migration(tiny_ds):
+    """budget <= block_size is a hard off switch, never 'unlimited'."""
+    topo = hetero_topo()
+    f = striped_feature_store(tiny_ds, topo, persist=False)
+    hot = np.zeros(f.n_blocks)
+    hot[1:5] = 5.0
+    moves, wanted = MigrationEngine(f, ONLINE_POLICY,
+                                    budget_bytes=0).plan(hot)
+    assert wanted > 0 and moves == []
+    rep = MigrationEngine(f, ONLINE_POLICY, budget_bytes=0).run(hot)
+    assert rep.n_moved == 0 and f.stats.bytes_written == 0
+
+
+def test_flat_traffic_degenerates_to_no_migration(tiny_ds, rng):
+    """Uniform measured hotness must not pin a contiguous slab onto one
+    array: the online policy's skew gate falls back to striping, so a
+    striped store sees an empty diff."""
+    eng = engine_for(tiny_ds, hetero_topo(), online_placement=True,
+                     migrate_budget_bytes=64 << 20)
+    # every feature block touched equally: full sequential passes
+    eng.feature_hotness.touch(np.arange(eng.feature_store.n_blocks))
+    eng.graph_hotness.touch(np.arange(eng.graph_store.n_blocks))
+    rep = eng.end_epoch()
+    assert rep["feature"]["n_moved"] == 0
+    assert rep["graph"]["n_moved"] == 0
+    eng.close()
+
+
+def test_untouched_store_never_migrates(tiny_ds):
+    topo = hetero_topo()
+    f = striped_feature_store(tiny_ds, topo, persist=False)
+    mig = MigrationEngine(f, ONLINE_POLICY, budget_bytes=1 << 20)
+    rep = mig.run(np.zeros(f.n_blocks))
+    assert rep.n_wanted == rep.n_moved == 0
+    assert f.stats.bytes_written == 0
+
+
+# ---------------------------------------------------------------- write path
+def test_migrate_blocks_charges_arrays_and_persists(tiny_ds):
+    topo = hetero_topo()
+    f = striped_feature_store(tiny_ds, topo)
+    hot = np.zeros(f.n_blocks)
+    hot[1:5] = 5.0  # one contiguous hot run: pinned whole on the fast
+    # array, so its array-1 members (blocks 1 and 3) migrate
+    snapshot = [f.read_block_bytes(b) for b in range(f.n_blocks)]
+    mig = MigrationEngine(f, ONLINE_POLICY, budget_bytes=4 * f.block_size,
+                          name="feature")
+    rep = mig.run(hot)
+    assert rep.n_moved == 2 and rep.bytes_moved == 2 * f.block_size
+    assert rep.bytes_moved <= rep.budget_bytes
+    assert rep.read_s > 0 and rep.write_s > 0
+    # writes landed on the destination (fast) array, reads on the source
+    assert topo.array_stats[0].bytes_written == 2 * f.block_size
+    assert topo.array_stats[1].bytes_migrated == 2 * f.block_size
+    assert f.stats.n_migrated_blocks == 2
+    assert f.stats.bytes_migrated == 2 * f.block_size
+    # durable: journal gone, metadata committed, reload agrees
+    assert not os.path.exists(f.path + ".migrate.log")
+    _, f2 = tiny_ds.reopen_stores()
+    reloaded = f2.load_placement(topo)
+    assert np.array_equal(reloaded.array_of, f.placement.array_of)
+    assert np.array_equal(reloaded.local_of, f.placement.local_of)
+    # the data file is untouched: every block byte-identical
+    for b in range(f.n_blocks):
+        assert f.read_block_bytes(b) == snapshot[b]
+
+
+@pytest.mark.parametrize("crash_at", ["copied", "committed"])
+def test_crash_consistency_between_copy_and_commit(tiny_ds, crash_at):
+    """A kill at either crash window reloads to a valid, byte-identical
+    state: old placement before the atomic rename, new placement after."""
+    topo = hetero_topo()
+    f = striped_feature_store(tiny_ds, topo)
+    before = np.array(f.placement.array_of)
+    snapshot = [f.read_block_bytes(b) for b in range(f.n_blocks)]
+    hot = np.zeros(f.n_blocks)
+    hot[1:5] = 5.0
+    mig = MigrationEngine(f, ONLINE_POLICY, budget_bytes=4 * f.block_size)
+    moves, _ = mig.plan(hot)
+
+    def fault(point):
+        if point == crash_at:
+            raise RuntimeError("simulated kill")
+
+    with pytest.raises(RuntimeError, match="simulated kill"):
+        f.migrate_blocks([(m.block_id, m.dst) for m in moves], _fault=fault)
+    # the journal survives the "kill" ...
+    assert os.path.exists(f.path + ".migrate.log")
+    # ... and a reopened store garbage-collects it and loads a complete
+    # mapping: the old one before the rename, the new one after
+    _, f2 = tiny_ds.reopen_stores()
+    assert not os.path.exists(f2.path + ".migrate.log")
+    reloaded = f2.load_placement(topo)
+    moved = np.array([m.block_id for m in moves])
+    if crash_at == "copied":
+        assert np.array_equal(reloaded.array_of, before)
+    else:
+        assert np.array_equal(reloaded.array_of[moved],
+                              [m.dst for m in moves])
+    for a in range(topo.n_arrays):  # either way the mapping is injective
+        mine = reloaded.local_of[reloaded.array_of == a]
+        assert len(set(mine.tolist())) == len(mine)
+    for b in range(f2.n_blocks):  # and the data never tore
+        assert f2.read_block_bytes(b) == snapshot[b]
+
+
+def test_migrate_requires_topology(tiny_ds):
+    _, f = tiny_ds.reopen_stores()
+    with pytest.raises(RuntimeError):
+        f.migrate_blocks([(0, 1)])
+
+
+# ---------------------------------------------------------------- engine
+def engine_for(ds, topo, **over):
+    g, f = ds.reopen_stores()
+    cfg = AgnesConfig(block_size=16384, minibatch_size=64,
+                      hyperbatch_size=4, fanouts=(), feature_cache_rows=1,
+                      graph_buffer_bytes=1 << 20,
+                      feature_buffer_bytes=1 << 20, async_io=False,
+                      placement="stripe", **over)
+    return AgnesEngine(g, f, cfg, topology=topo)
+
+
+def test_engine_online_replacement_parity_and_budget(tiny_ds, rng):
+    """Two epochs of concentrated traffic: the online engine migrates the
+    hot feature blocks to the fast array, stays byte-identical to the
+    static engine, and respects the per-epoch budget."""
+    targets = [[rng.choice(256, 64, replace=False) for _ in range(4)]
+               for _ in range(2)]  # hot: feature blocks 0-1 only
+    static = engine_for(tiny_ds, hetero_topo())
+    online = engine_for(tiny_ds, hetero_topo(), online_placement=True,
+                        migrate_budget_bytes=4 * 16384)
+    for epoch in range(2):
+        p0 = static.prepare(targets[epoch], epoch=epoch)
+        p1 = online.prepare(targets[epoch], epoch=epoch)
+        for a, b in zip(p1, p0):
+            assert np.allclose(a.features, b.features)
+            for x, y in zip(a.mfg.nodes, b.mfg.nodes):
+                assert np.array_equal(x, y)
+        rep = online.end_epoch()
+        assert rep["feature"]["bytes_moved"] <= 4 * 16384
+    # the concentrated hot set ended up pinned on the fast array
+    hot_blocks = online.feature_store.placement.array_of[:2]
+    assert set(hot_blocks.tolist()) == {0}
+    assert online.io_stats()["migration"]["n_migrated_blocks"] > 0
+    # and the online epochs now cost less modeled read time per epoch
+    static.close()
+    online.close()
+
+
+def test_plan_epoch_triggers_migration_and_is_idempotent(tiny_ds, rng):
+    eng = engine_for(tiny_ds, hetero_topo(), online_placement=True,
+                     migrate_budget_bytes=4 * 16384)
+    targets = [rng.choice(256, 64, replace=False) for _ in range(4)]
+    eng.prepare(targets, epoch=0)
+    assert eng.feature_hotness.window_touches > 0
+    eng.plan_epoch(np.arange(256), epoch=1)  # epoch boundary: migrates
+    # the boundary pass quiesced the readers before swapping placement
+    for rd in (eng._g_prefetch, eng._f_prefetch):
+        if rd is not None and hasattr(rd, "idle"):
+            assert rd.idle
+    assert eng.last_migration is not None
+    moved = eng.last_migration["feature"]["n_moved"]
+    assert moved > 0
+    # idempotent: the window is already rolled, a second boundary does
+    # not roll or migrate again
+    first = eng.last_migration
+    rolls = eng.feature_hotness.n_rolls
+    eng.plan_epoch(np.arange(256), epoch=1)
+    assert eng.last_migration is first
+    assert eng.feature_hotness.n_rolls == rolls
+    # the lazy hook defers to explicit rollers: an end_epoch (as the
+    # pipelined executor runs every epoch) followed by stray holdout
+    # traffic must not drive a second migration pass at the next plan
+    eng.prepare([rng.choice(256, 64, replace=False)], epoch=0)
+    eng.end_epoch()
+    eng.prepare([rng.choice(256, 16, replace=False)], epoch=900)  # eval
+    rolls = eng.feature_hotness.n_rolls
+    eng.plan_epoch(np.arange(256), epoch=2)
+    assert eng.feature_hotness.n_rolls == rolls, \
+        "eval traffic after an explicit roll re-triggered the boundary"
+    # end_epoch refuses to run mid-session (placement swap would race)
+    eng._in_session = True
+    with pytest.raises(RuntimeError, match="PrepareSession"):
+        eng.end_epoch()
+    eng._in_session = False
+    eng.close()
+
+
+def test_online_default_off_keeps_static_behavior(tiny_ds, rng):
+    eng = engine_for(tiny_ds, hetero_topo())
+    targets = [rng.choice(256, 64, replace=False)]
+    eng.prepare(targets, epoch=0)
+    before = np.array(eng.feature_store.placement.array_of)
+    eng.plan_epoch(np.arange(256), epoch=1)
+    assert np.array_equal(eng.feature_store.placement.array_of, before)
+    assert eng.last_migration is None
+    eng.close()
