@@ -17,8 +17,8 @@ import json
 import os
 import sys
 
-from . import (bench_io_sched, bench_migration, bench_plan_fusion,
-               bench_striping)
+from . import (bench_cache, bench_io_sched, bench_migration,
+               bench_plan_fusion, bench_striping)
 
 # file -> [(dotted path into the json payload, floor, description)]
 GUARDS = {
@@ -42,6 +42,11 @@ GUARDS = {
         ("migrate.speedup", bench_migration.MIN_SPEEDUP,
          "online re-placement vs static placement, drifting hotspot "
          "(migration write cost charged)"),
+    ],
+    "BENCH_cache.json": [
+        ("cache.speedup", bench_cache.MIN_SPEEDUP,
+         "oracle (Belady MIN) vs clock cache on modeled prepare I/O "
+         "at equal capacity (eviction writebacks charged)"),
     ],
 }
 

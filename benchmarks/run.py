@@ -19,11 +19,12 @@ import os
 import sys
 import time
 
-from . import (bench_fig2_breakdown, bench_fig4_io_unit, bench_fig6_eq1,
-               bench_fig7_distdgl, bench_fig8_hyperbatch, bench_fig9_sweep,
-               bench_fig10_sensitivity, bench_fig11_bw, bench_fig12_accuracy,
-               bench_io_sched, bench_migration, bench_pipeline_overlap,
-               bench_plan_fusion, bench_striping, common)
+from . import (bench_cache, bench_fig2_breakdown, bench_fig4_io_unit,
+               bench_fig6_eq1, bench_fig7_distdgl, bench_fig8_hyperbatch,
+               bench_fig9_sweep, bench_fig10_sensitivity, bench_fig11_bw,
+               bench_fig12_accuracy, bench_io_sched, bench_migration,
+               bench_pipeline_overlap, bench_plan_fusion, bench_striping,
+               common)
 
 ALL = {
     "fig2": bench_fig2_breakdown.run,
@@ -40,6 +41,7 @@ ALL = {
     "fusion": bench_plan_fusion.run,
     "stripe": bench_striping.run,
     "migrate": bench_migration.run,
+    "cache": bench_cache.run,
 }
 
 OUT_PATH = os.environ.get(
@@ -54,6 +56,9 @@ STRIPE_OUT_PATH = os.environ.get(
 MIGRATE_OUT_PATH = os.environ.get(
     "REPRO_BENCH_MIGRATE_OUT",
     os.path.join(os.path.dirname(__file__), "..", "BENCH_migrate.json"))
+CACHE_OUT_PATH = os.environ.get(
+    "REPRO_BENCH_CACHE_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_cache.json"))
 
 
 def main() -> None:
@@ -85,7 +90,8 @@ def main() -> None:
         # run must not clobber the others with null
         tracked = [("io", OUT_PATH), ("fusion", FUSION_OUT_PATH),
                    ("stripe", STRIPE_OUT_PATH),
-                   ("migrate", MIGRATE_OUT_PATH)]
+                   ("migrate", MIGRATE_OUT_PATH),
+                   ("cache", CACHE_OUT_PATH)]
         for name, path in tracked:
             if name not in results:
                 continue

@@ -1,16 +1,25 @@
 #!/usr/bin/env bash
 # Tier-1 verify — runs the suite exactly as ROADMAP.md specifies.
+# RUN_SLOW=1 additionally re-runs the cache-oracle property battery at
+# its widened budget (REPRO_SLOW=1: ~5x the seeded traces, and larger
+# hypothesis example budgets where hypothesis is installed).
 # RUN_BENCH=1 additionally runs the --quick benchmark smoke tier, which
 # writes BENCH_io.json (I/O scheduler before/after numbers),
 # BENCH_fusion.json (fused vs barriered staged prepare),
-# BENCH_stripe.json (multi-SSD striping sweep) and BENCH_migrate.json
-# (online re-placement vs static, drifting hotspot) at repo root, then
-# runs the regression guard: every freshly written BENCH_*.json speedup
-# is compared against its benchmark's asserted floor and any regression
-# fails the build loudly (benchmarks/check_regression.py).
+# BENCH_stripe.json (multi-SSD striping sweep), BENCH_migrate.json
+# (online re-placement vs static, drifting hotspot) and BENCH_cache.json
+# (oracle vs clock/LRU cache policy duel + HBM hit fraction) at repo
+# root, then runs the regression guard: every freshly written
+# BENCH_*.json speedup is compared against its benchmark's asserted
+# floor and any regression fails the build loudly
+# (benchmarks/check_regression.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+if [[ "${RUN_SLOW:-0}" == "1" ]]; then
+  REPRO_SLOW=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_cache_oracle.py
+fi
 if [[ "${RUN_BENCH:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.check_regression

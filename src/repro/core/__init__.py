@@ -14,9 +14,12 @@ from .block_store import (DEFAULT_BLOCK_SIZE, FeatureBlockStore, GraphBlock,
                           GraphBlockStore, recover_store_metadata)
 from .bucket import Bucket, build_bucket
 from .buffer import BlockBuffer
+from .cache_oracle import (NEVER, OracleSchedule, belady_min_misses,
+                           trace_from_plan)
 from .device_model import IOStats, NVMeModel
-from .feature_cache import FeatureCache
-from .gather import FeatureGatherer, GatherPlan
+from .feature_cache import CACHE_POLICIES, FeatureCache
+from .gather import (DeviceFeatureTable, FeatureGatherer, GatherPlan,
+                     ResidentSplit)
 from .hotness import HotnessTracker
 from .hyperbatch import HopPlan, HyperbatchSampler
 from .io_sched import CoalescedReader, PlanStream, Run, coalesce, plan_cost
@@ -37,6 +40,8 @@ __all__ = [
     "GNNDriveLike", "MariusLike", "OutreLike", "DEFAULT_BLOCK_SIZE",
     "FeatureBlockStore", "GraphBlock", "GraphBlockStore", "Bucket",
     "build_bucket", "BlockBuffer", "IOStats", "NVMeModel", "FeatureCache",
+    "CACHE_POLICIES", "NEVER", "OracleSchedule", "belady_min_misses",
+    "trace_from_plan", "DeviceFeatureTable", "ResidentSplit",
     "CoalescedReader", "PlanStream", "Run", "coalesce", "plan_cost",
     "FeatureGatherer", "GatherPlan", "HopPlan", "HyperbatchSampler",
     "IOPlan", "PrepareSession", "apply_relabel",

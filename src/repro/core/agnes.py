@@ -47,6 +47,20 @@ class AgnesConfig:
     feature_buffer_bytes: int = 16 << 30
     feature_cache_rows: int = 0          # 0 = auto (half the feature buffer)
     cache_admit_threshold: int = 2
+    # --- feature-cache policy (core/feature_cache.py + cache_oracle.py) ---
+    # eviction policy: "clock" | "lru" | "oracle" (Belady MIN from a
+    # precomputed trace — install via engine.install_cache_oracle)
+    cache_policy: str = "clock"
+    # explicit row budget; overrides feature_cache_rows when > 0 (the
+    # load-bearing capacity knob: small budgets force real eviction)
+    cache_capacity_rows: int = 0
+    # charge evictions as row-granular writeback I/O on the feature
+    # store's device (the paper's minibatch-boundary writeback)
+    cache_writeback: bool = False
+    # append each gather cycle's node list to engine.feature_trace —
+    # the recorded access trace a later install_cache_oracle() replays
+    # (Ginex's offline pass; exact when the same plan is replayed)
+    record_feature_trace: bool = False
     hyperbatch_enabled: bool = True      # False = AGNES-No ablation
     async_io: bool = True
     prefetch_depth: int = 8
@@ -95,13 +109,17 @@ class AgnesConfig:
 class PreparedMinibatch:
     mfg: MFG
     features: np.ndarray  # (len(mfg.input_nodes), dim) contiguous
+    # cache-hit split recorded at gather time (core/gather.py) — fuels
+    # the device-resident transfer; None on cache-less/baseline paths
+    resident: object | None = None
 
     @property
     def targets(self) -> np.ndarray:
         return self.mfg.nodes[0]
 
     def to_device(self, device=None, backend: str = "jnp",
-                  pad_multiple: int = 128) -> "PreparedMinibatch":
+                  pad_multiple: int = 128,
+                  table=None) -> "PreparedMinibatch":
         """Placement hook: land the gathered features as a jax device array.
 
         ``backend="pallas"`` builds the jit-stable *padded* feature block
@@ -111,12 +129,30 @@ class PreparedMinibatch:
         padded block and skipping its host round-trip; ``"jnp"`` is a
         plain host→device transfer.  The MFG index arrays stay numpy
         (``pad_mfg`` converts them at jit boundaries).
+
+        With a :class:`~repro.core.gather.DeviceFeatureTable`, cache-hit
+        rows are gathered HBM→HBM from the pinned cache mirror and only
+        miss (or demoted) rows travel host→device, through the masked
+        Pallas kernel (``backend="pallas"``) or its jnp oracle.
         """
         import jax
         import jax.numpy as jnp
 
+        n = self.features.shape[0]
+        if table is not None and n:
+            from ..kernels.ops import gather_resident_rows
+            padded_n = -(-n // pad_multiple) * pad_multiple
+            slots, host_pos = table.resolve(self.resident, n, padded_n)
+            miss_rows = np.ascontiguousarray(self.features[host_pos])
+            feats = gather_resident_rows(
+                table.array, jnp.asarray(slots, dtype=jnp.int32),
+                jnp.asarray(host_pos, dtype=jnp.int32),
+                jnp.asarray(miss_rows),
+                use_kernel=None if backend == "pallas" else False)
+            if device is not None:
+                feats = jax.device_put(feats, device)
+            return PreparedMinibatch(self.mfg, feats, self.resident)
         feats = jnp.asarray(self.features)
-        n = feats.shape[0]
         if backend == "pallas" and n:
             from ..kernels.ops import gather_rows
             padded_n = -(-n // pad_multiple) * pad_multiple
@@ -125,7 +161,7 @@ class PreparedMinibatch:
             feats = jnp.where((idx < n)[:, None], rows, 0)
         if device is not None:
             feats = jax.device_put(feats, device)
-        return PreparedMinibatch(self.mfg, feats)
+        return PreparedMinibatch(self.mfg, feats, self.resident)
 
 
 @dataclasses.dataclass
@@ -188,7 +224,7 @@ class AgnesEngine:
             cfg.buffer_blocks(cfg.graph_buffer_bytes), name="graph")
         self.feature_buffer = BlockBuffer(
             cfg.buffer_blocks(cfg.feature_buffer_bytes), name="feature")
-        cache_rows = cfg.feature_cache_rows
+        cache_rows = cfg.cache_capacity_rows or cfg.feature_cache_rows
         if cache_rows == 0:
             cache_rows = (cfg.feature_buffer_bytes // 2) // max(
                 feature_store.row_bytes, 1)
@@ -196,7 +232,16 @@ class AgnesEngine:
         self.feature_cache = FeatureCache(
             cache_rows, feature_store.n_nodes, feature_store.dim,
             admit_threshold=cfg.cache_admit_threshold,
-            dtype=feature_store.dtype)
+            dtype=feature_store.dtype, policy=cfg.cache_policy)
+        if cfg.cache_writeback:
+            # evictions become row-granular writes on the feature store's
+            # device — the capacity budget now costs modeled I/O time
+            self.feature_cache.attach_writeback(
+                feature_store.device, feature_store.stats,
+                queue_depth=cfg.io_queue_depth)
+        # recorded feature-access trace (one entry per gather cycle);
+        # install_cache_oracle() replays it as a Belady MIN schedule
+        self.feature_trace: list[np.ndarray] = []
         # hotness telemetry (core/hotness.py): every storage touch from
         # the prepare path lands in per-store trackers; the feature
         # cache reports its hits at a discount.  Always on — the
@@ -283,6 +328,8 @@ class AgnesEngine:
         self.gatherer = FeatureGatherer(
             feature_store, self.feature_buffer, self.feature_cache,
             prefetcher=self._f_prefetch)
+        if cfg.record_feature_trace:
+            self.gatherer.trace_sink = self.feature_trace
         self.last_report: PrepareReport | None = None
         self.last_session: PrepareSession | None = None
 
@@ -429,6 +476,45 @@ class AgnesEngine:
             return self.config.io_queue_depth
         return {a: self._array_qd.get(a, self.config.io_queue_depth)
                 for a in range(self.topology.n_arrays)}
+
+    def install_cache_oracle(self, trace: list | None = None,
+                             clear: bool = True):
+        """Arm the oracle feature cache with a Belady MIN schedule.
+
+        ``trace`` is a per-gather-cycle node-list sequence; ``None``
+        replays :attr:`feature_trace` as recorded by a
+        ``record_feature_trace=True`` epoch (Ginex's offline pass).  For
+        0-hop workloads build it directly from the epoch plan with
+        :func:`repro.core.cache_oracle.trace_from_plan` — no recording
+        epoch needed.  ``clear`` resets cache contents so the scheduled
+        trace starts from the same cold state it was computed for.
+        Requires ``cache_policy="oracle"``.
+        """
+        from .cache_oracle import OracleSchedule
+
+        if trace is None:
+            trace = self.feature_trace
+        schedule = OracleSchedule.from_trace(
+            trace, self.feature_store.n_nodes)
+        self.feature_cache.set_oracle(schedule)
+        if clear:
+            self.feature_cache.clear()
+        else:
+            schedule.reset()
+        return schedule
+
+    def device_feature_table(self, lane_multiple: int = 128):
+        """Pin the feature cache's rows in an HBM-resident mirror.
+
+        Hand the returned :class:`~repro.core.gather.DeviceFeatureTable`
+        to ``PreparedMinibatch.to_device(table=...)`` (or set it as
+        ``GNNTrainer.feature_table``) so cache hits are gathered on
+        device and only miss rows travel host→device.
+        """
+        from .gather import DeviceFeatureTable
+
+        return DeviceFeatureTable(self.feature_cache,
+                                  lane_multiple=lane_multiple)
 
     def io_stats(self) -> dict:
         g = self.graph_store.stats

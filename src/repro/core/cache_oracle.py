@@ -1,0 +1,183 @@
+"""Oracle (Belady MIN) eviction schedule for the feature cache.
+
+Ginex's observation, transplanted: storage-based GNN training knows its
+feature-access trace *ahead of time* — the epoch plan fixes the targets,
+the counter-hash sampler is deterministic, and ``PrepareSession`` holds
+every minibatch's input-node list before a single gather I/O is issued.
+Belady's MIN ("evict the row whose next use is farthest in the future")
+is therefore not a thought experiment here but an implementable policy:
+this module turns a trace into a precomputed eviction schedule that
+:class:`repro.core.feature_cache.FeatureCache` consults at admit time
+(``policy="oracle"``).
+
+The cache's access model is *batched*: each step runs all of its lookups
+first, then one batched admit of the step's misses (one step = one
+hyperbatch in the engine, one minibatch in the bare driver).  MIN
+generalizes unchanged: at each step boundary, of the residents and the
+step's miss candidates, keep the ``capacity`` rows with the *nearest
+next use* — the classic exchange argument applies per decision point, so
+no policy (LRU, clock, anything) can miss less on the same trace.
+``tests/test_cache_oracle.py`` verifies this against an independent
+brute-force reference (:func:`belady_min_misses`) and against LRU/clock
+on randomized traces.
+
+Where the trace comes from:
+
+* :func:`trace_from_plan` — 0-hop workloads (pure feature serving, the
+  ``bench_cache`` shape): the epoch plan *is* the trace, no sampling
+  needed;
+* ``AgnesEngine.record_feature_trace`` — k-hop workloads: the session
+  appends each hyperbatch's gather node list as soon as the final
+  sampling frontier exists (Ginex's "offline sampling pass", amortized
+  into a recording epoch); replaying the same plan (same targets, same
+  epoch seed) makes the recorded trace exact for the replay.
+
+A schedule driven past its trace (or against a different plan) stays
+*correct* — features are read from storage on every miss regardless —
+it merely stops being optimal; overruns are counted, never raised.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# "never used again": any step comparison must see this as farthest
+NEVER = np.iinfo(np.int64).max
+
+
+class OracleSchedule:
+    """Precomputed per-step next-use table over a fixed access trace.
+
+    ``advance()`` moves the cursor to the next step and updates
+    ``next_use[node]`` for every node accessed at that step to the step
+    of its *next* access (``NEVER`` if none) — so after ``advance()``,
+    ``next_use`` is exact for every node accessed so far, and the admit
+    decision for the current step reads it directly.
+    """
+
+    def __init__(self, n_nodes: int, step_nodes: np.ndarray,
+                 step_next: np.ndarray, step_ptr: np.ndarray):
+        self.n_nodes = int(n_nodes)
+        self._step_nodes = step_nodes    # unique nodes, grouped by step
+        self._step_next = step_next      # their next-use step (or NEVER)
+        self._step_ptr = step_ptr        # (n_steps + 1,) group offsets
+        self.next_use = np.full(n_nodes, NEVER, dtype=np.int64)
+        self.step = -1                   # advance() enters step 0
+        self.overruns = 0                # advances past the trace end
+
+    @property
+    def n_steps(self) -> int:
+        return len(self._step_ptr) - 1
+
+    @classmethod
+    def from_trace(cls, trace: list[np.ndarray],
+                   n_nodes: int) -> "OracleSchedule":
+        """Build the schedule from per-step access lists.
+
+        One vectorized pass: dedupe (node, step) pairs, then each pair's
+        next-use is simply the following pair of the same node in
+        (node, step) order.
+        """
+        n_steps = len(trace)
+        steps = [np.asarray(s, dtype=np.int64).ravel() for s in trace]
+        lens = np.array([len(s) for s in steps], dtype=np.int64)
+        if lens.sum() == 0:
+            ptr = np.zeros(n_steps + 1, dtype=np.int64)
+            z = np.zeros(0, dtype=np.int64)
+            return cls(n_nodes, z, z, ptr)
+        flat = np.concatenate(steps)
+        step_of = np.repeat(np.arange(n_steps, dtype=np.int64), lens)
+        order = np.lexsort((step_of, flat))       # by node, then step
+        fn, fs = flat[order], step_of[order]
+        keep = np.ones(len(fn), dtype=bool)       # dedupe same-step repeats
+        keep[1:] = (fn[1:] != fn[:-1]) | (fs[1:] != fs[:-1])
+        un, us = fn[keep], fs[keep]
+        nxt = np.full(len(un), NEVER, dtype=np.int64)
+        same = un[1:] == un[:-1]                  # next pair, same node
+        nxt[:-1][same] = us[1:][same]
+        by_step = np.argsort(us, kind="stable")   # regroup by step
+        step_nodes, step_next = un[by_step], nxt[by_step]
+        step_ptr = np.searchsorted(us[by_step], np.arange(n_steps + 1))
+        return cls(n_nodes, step_nodes, step_next,
+                   step_ptr.astype(np.int64))
+
+    def advance(self) -> int:
+        """Enter the next step; refresh next-use for its accessed nodes."""
+        self.step += 1
+        if self.step >= self.n_steps:
+            # driven past the trace: freeze (correctness is unaffected —
+            # the cache just stops admitting optimally) and count it
+            self.overruns += 1
+            return self.step
+        lo, hi = int(self._step_ptr[self.step]), \
+            int(self._step_ptr[self.step + 1])
+        self.next_use[self._step_nodes[lo:hi]] = self._step_next[lo:hi]
+        return self.step
+
+    def next_use_of(self, nodes: np.ndarray) -> np.ndarray:
+        return self.next_use[np.asarray(nodes, dtype=np.int64)]
+
+    def reset(self) -> None:
+        self.next_use.fill(NEVER)
+        self.step = -1
+        self.overruns = 0
+
+
+# ------------------------------------------------------------ traces
+def trace_from_plan(plan: list[list[np.ndarray]]) -> list[np.ndarray]:
+    """Epoch plan -> feature-access trace, one step per hyperbatch.
+
+    Exact for 0-hop workloads (``fanouts=()``): the gathered nodes *are*
+    the (deduplicated, sorted) minibatch targets — which is precisely
+    what ``PrepareSession`` hands the gatherer.  k-hop workloads need
+    the recorded trace instead (``AgnesEngine.record_feature_trace``).
+    """
+    return [np.concatenate([np.unique(np.asarray(t, dtype=np.int64))
+                            for t in mbs])
+            if mbs else np.zeros(0, dtype=np.int64)
+            for mbs in plan]
+
+
+# ------------------------------------------------- brute-force reference
+def belady_min_misses(trace: list[np.ndarray], capacity: int) -> int:
+    """Independent O(T^2) Belady MIN reference for small traces.
+
+    Same batched access model as :class:`FeatureCache` (per-step lookups,
+    then one batched keep-set decision), but next-use distances are
+    recomputed by scanning the remaining trace forward at every step —
+    no shared code with :class:`OracleSchedule`, so the property test
+    cross-checks two implementations.
+
+    Exact agreement with the cache is guaranteed for traces whose steps
+    contain no duplicate nodes (the engine's per-hyperbatch gathers are
+    deduplicated, so real traces qualify).  With intra-step duplicates
+    the *multiplicity-weighted* miss count depends on how ties at equal
+    next-use are broken, and the two implementations may differ by a few
+    misses in either direction; the dominance property (oracle <= LRU,
+    clock) is unaffected.
+    """
+    capacity = int(capacity)
+    raw = [np.asarray(s, dtype=np.int64).ravel() for s in trace]
+    steps = [set(int(v) for v in s) for s in raw]
+    resident: set[int] = set()
+    misses = 0
+    for t, acc in enumerate(steps):
+        # multiplicity-aware, matching FeatureCache.lookup accounting:
+        # every occurrence of a non-resident node is one miss
+        misses += sum(1 for v in raw[t] if int(v) not in resident)
+        if capacity <= 0:
+            continue
+        pool = resident | acc
+        # forward scan: next step > t that touches each pool node
+        nxt = {}
+        for v in pool:
+            nxt[v] = NEVER
+            for u in range(t + 1, len(steps)):
+                if v in steps[u]:
+                    nxt[v] = u
+                    break
+        # keep the `capacity` nearest next uses (residents win ties so
+        # the schedule never churns for free); rows never used again
+        # need not occupy a slot — dropping them cannot add misses
+        ranked = sorted(pool, key=lambda v: (nxt[v], v not in resident, v))
+        resident = {v for v in ranked[:capacity] if nxt[v] != NEVER}
+    return misses

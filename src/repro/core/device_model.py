@@ -87,6 +87,10 @@ class IOStats:
     buffer_misses: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
+    # feature-cache rows displaced under capacity pressure; with a
+    # writeback device attached (FeatureCache.attach_writeback) each
+    # eviction is also charged as a row-granular write above
+    cache_evictions: int = 0
 
     def record_read(self, nbytes: int, t: float, sequential: bool = False) -> None:
         self.n_reads += 1
@@ -167,7 +171,7 @@ class IOStats:
                   "bytes_read",
                   "bytes_written", "n_migrated_blocks", "bytes_migrated",
                   "buffer_hits", "buffer_misses",
-                  "cache_hits", "cache_misses"):
+                  "cache_hits", "cache_misses", "cache_evictions"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         self.modeled_read_time += other.modeled_read_time
         self.modeled_write_time += other.modeled_write_time
@@ -190,6 +194,7 @@ class IOStats:
             "achieved_bw_GBps": round(self.achieved_bandwidth() / 1e9, 3),
             "buffer_hit_ratio": round(self.buffer_hit_ratio, 4),
             "cache_hit_ratio": round(self.cache_hit_ratio, 4),
+            "cache_evictions": self.cache_evictions,
         }
 
 

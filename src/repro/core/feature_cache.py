@@ -1,23 +1,51 @@
 """Feature cache ``C_f`` + cache index table ``T_ch^f`` (paper §3.4(2)).
 
-AGNES counts accesses to each feature vector and keeps only rows whose
-access count exceeds a threshold resident in the in-memory feature cache;
-infrequently accessed rows are written back / dropped at minibatch
-boundaries and re-read from storage when needed again.
-
-Implementation is fully vectorized (this container has one CPU core):
+AGNES counts accesses to each feature vector and keeps hot rows resident
+in the in-memory feature cache; infrequently accessed rows are written
+back / dropped at minibatch boundaries and re-read from storage when
+needed again.  Implementation is fully vectorized (this container has
+one CPU core):
 
 * ``T_ch`` (cache index table)  → ``slot_of[node] ∈ {-1, slot}``
 * ``C_f``  (feature cache)      → ``rows[slot, :]``
 * access counters               → ``counts[node]``
-* eviction                      → clock (second-chance-free FIFO ring),
-  which approximates the paper's LRU within the admitted set.
+
+Eviction is pluggable (``policy=``):
+
+* ``"clock"``  — second-chance-free FIFO ring (the original default;
+  approximates the paper's LRU within the admitted set);
+* ``"lru"``    — true least-recently-used over per-slot access stamps
+  (hits refresh the stamp, eviction takes the stalest slots);
+* ``"oracle"`` — Belady MIN driven by a precomputed
+  :class:`repro.core.cache_oracle.OracleSchedule`: of residents and the
+  step's miss candidates, keep the ``capacity`` rows with the nearest
+  next use.  Provably optimal on the scheduled trace (Ginex's insight:
+  storage-based GNN training knows its access future); the access-count
+  admission threshold is ignored — the oracle's future knowledge
+  supersedes the frequency heuristic.
+
+Capacity is load-bearing: evictions are counted
+(``IOStats.cache_evictions``) and, with a writeback device attached
+(:meth:`attach_writeback`), charged as row-granular write I/O — the
+paper's minibatch-boundary writeback of cooled rows — so a finite
+``capacity_rows`` budget shows up in the modeled I/O time instead of
+being free.
+
+The cache also backs the GIDS-style device-resident gather
+(``core/gather.py``): :attr:`lock` makes admit atomic against a
+concurrent device-table sync, and per-slot dirty tracking
+(:meth:`drain_dirty`) lets the HBM mirror upload only the slots an
+admit actually rewrote.
 """
 from __future__ import annotations
+
+import threading
 
 import numpy as np
 
 from .device_model import IOStats
+
+CACHE_POLICIES = ("clock", "lru", "oracle")
 
 
 class FeatureCache:
@@ -26,13 +54,18 @@ class FeatureCache:
     def __init__(self, capacity_rows: int, n_nodes: int, dim: int,
                  admit_threshold: int = 2,
                  dtype: np.dtype = np.float32,
-                 stats: IOStats | None = None):
+                 stats: IOStats | None = None,
+                 policy: str = "clock"):
+        if policy not in CACHE_POLICIES:
+            raise ValueError(f"unknown cache policy {policy!r}; "
+                             f"choose from {CACHE_POLICIES}")
         self.capacity = max(int(capacity_rows), 0)
         self.n_nodes = n_nodes
         self.dim = dim
         self.admit_threshold = admit_threshold
         self.dtype = np.dtype(dtype)
         self.stats = stats if stats is not None else IOStats()
+        self.policy = policy
         cap = max(self.capacity, 1)
         self.slot_of = np.full(n_nodes, -1, dtype=np.int64)   # T_ch
         self.node_at = np.full(cap, -1, dtype=np.int64)
@@ -40,6 +73,19 @@ class FeatureCache:
         self.counts = np.zeros(n_nodes, dtype=np.int64)
         self._clock = 0
         self._n_resident = 0
+        # LRU bookkeeping: per-slot last-access stamp (0 = never)
+        self._last_used = np.zeros(cap, dtype=np.int64)
+        self._tick = 0
+        # oracle schedule (core/cache_oracle.py), policy="oracle" only
+        self.oracle = None
+        # admit/device-sync exclusion + per-slot dirty tracking for the
+        # HBM-resident mirror (core/gather.py DeviceFeatureTable)
+        self.lock = threading.Lock()
+        self._dirty = np.zeros(cap, dtype=bool)
+        # modeled eviction writeback (attach_writeback)
+        self._wb_device = None
+        self._wb_stats = None
+        self._wb_queue_depth = 8
         # hotness telemetry (core/hotness.py): cache hits attributed to
         # their feature blocks at a discount — a hit is storage traffic
         # the cache absorbed *this* epoch but may not absorb the next
@@ -59,8 +105,42 @@ class FeatureCache:
         self._hot_rows_per_block = max(int(rows_per_block), 1)
         self._hot_hit_weight = float(hit_weight)
 
+    def attach_writeback(self, device, stats: IOStats | None = None,
+                         queue_depth: int = 8) -> None:
+        """Charge evictions as row-granular writeback I/O on ``device``.
+
+        The paper writes cooled rows back to storage at minibatch
+        boundaries; charging that traffic makes the capacity budget
+        load-bearing — a too-small cache pays for its churn in modeled
+        device time, not just in miss counts.
+        """
+        self._wb_device = device
+        self._wb_stats = stats if stats is not None else self.stats
+        self._wb_queue_depth = max(int(queue_depth), 1)
+
+    def set_oracle(self, schedule) -> None:
+        """Install a precomputed MIN schedule (switches admit to it)."""
+        if self.policy != "oracle":
+            raise ValueError("set_oracle requires policy='oracle', "
+                             f"cache has policy={self.policy!r}")
+        self.oracle = schedule
+
+    def oracle_advance(self) -> None:
+        """Enter the next trace step (no-op for non-oracle policies).
+
+        Called once per gather cycle by ``FeatureGatherer.plan_gather``
+        — i.e. once per hyperbatch in the engine — and once per step by
+        the bare trace driver, *before* the step's lookups.
+        """
+        if self.oracle is not None:
+            self.oracle.advance()
+
     def __len__(self) -> int:
         return self._n_resident
+
+    @property
+    def row_bytes(self) -> int:
+        return self.dim * self.dtype.itemsize
 
     # ------------------------------------------------------------ reads
     def lookup(self, nodes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -70,53 +150,208 @@ class FeatureCache:
         mask = slots >= 0
         self.stats.cache_hits += int(mask.sum())
         self.stats.cache_misses += int((~mask).sum())
+        if self.policy == "lru" and mask.any():
+            self._tick += 1
+            self._last_used[slots[mask]] = self._tick
         if self._hotness is not None and self._hot_hit_weight > 0 \
                 and mask.any():
             self._hotness.touch(nodes[mask] // self._hot_rows_per_block,
                                 weight=self._hot_hit_weight)
         return mask, self.rows[slots[mask]]
 
+    def lookup_slots(self, nodes: np.ndarray) -> np.ndarray:
+        """Current slot of each node (-1 = not resident); no accounting.
+
+        The device-resident gather records these at cache-pass time and
+        re-validates them against ``node_at`` at gather time (a slot
+        re-used by a later admit demotes that row to the host path).
+        """
+        return self.slot_of[np.asarray(nodes, dtype=np.int64)]
+
     def note_access(self, nodes: np.ndarray) -> None:
         np.add.at(self.counts, np.asarray(nodes), 1)
 
     # ------------------------------------------------------------ admit
     def admit(self, nodes: np.ndarray, rows: np.ndarray) -> int:
-        """Offer freshly-read rows; admit those above the access threshold.
+        """Offer freshly-read rows; admit per the eviction policy.
 
-        Rows below the threshold are *not* kept (the paper writes them back
-        to storage each minibatch).  Returns the number admitted.
+        clock/lru: rows at/above the access-count threshold are admitted
+        (the paper's frequency heuristic), evicting per the policy; a
+        batch with more candidates than ``capacity`` keeps the
+        highest-``counts`` candidates (not an arbitrary prefix).
+        oracle: the installed MIN schedule picks the keep-set by nearest
+        next use.  Returns the number admitted.
         """
         if self.capacity == 0 or len(nodes) == 0:
             return 0
         nodes = np.asarray(nodes)
-        cand = (self.counts[nodes] >= self.admit_threshold) & (self.slot_of[nodes] < 0)
+        with self.lock:
+            if self.policy == "oracle" and self.oracle is not None:
+                return self._admit_oracle(nodes, rows)
+            return self._admit_counted(nodes, rows)
+
+    def _admit_counted(self, nodes: np.ndarray, rows: np.ndarray) -> int:
+        """clock/lru admission: threshold-gated, frequency-capped."""
+        cand = (self.counts[nodes] >= self.admit_threshold) \
+            & (self.slot_of[nodes] < 0)
         cand_idx = np.nonzero(cand)[0]
         if cand_idx.size == 0:
             return 0
-        # dedupe within the batch, keep first occurrence; a single batch
-        # can admit at most `capacity` rows (slots must stay distinct)
-        uniq_nodes, first = np.unique(nodes[cand_idx], return_index=True)
-        cand_idx = cand_idx[first][:self.capacity]
+        # dedupe within the batch, keep first occurrence (slots must
+        # stay distinct)
+        _, first = np.unique(nodes[cand_idx], return_index=True)
+        cand_idx = cand_idx[first]
+        if len(cand_idx) > self.capacity:
+            # over-capacity batch: keep the hottest candidates by access
+            # count, not whichever happened to sort first
+            cnt = self.counts[nodes[cand_idx]]
+            top = np.argpartition(-cnt, self.capacity - 1)[:self.capacity]
+            cand_idx = cand_idx[np.sort(top)]
         k = len(cand_idx)
-        # allocate k slots from the clock ring, evicting current occupants
-        slots = (self._clock + np.arange(k)) % max(self.capacity, 1)
-        self._clock = int((self._clock + k) % max(self.capacity, 1))
+        if self.policy == "lru":
+            slots = self._take_lru_slots(k)
+        else:
+            slots = (self._clock + np.arange(k)) % max(self.capacity, 1)
+            self._clock = int((self._clock + k) % max(self.capacity, 1))
+        self._install(slots, nodes[cand_idx], rows[cand_idx])
+        return k
+
+    def _admit_oracle(self, nodes: np.ndarray, rows: np.ndarray) -> int:
+        """Belady MIN keep-set: residents + candidates ranked by next use."""
+        from .cache_oracle import NEVER
+
+        cand = self.slot_of[nodes] < 0
+        cand_idx = np.nonzero(cand)[0]
+        if cand_idx.size == 0:
+            return 0
+        _, first = np.unique(nodes[cand_idx], return_index=True)
+        cand_idx = cand_idx[first]
+        cand_nodes = nodes[cand_idx]
+        nu_cand = self.oracle.next_use_of(cand_nodes)
+        # rows never used again can't earn their slot — drop them first
+        live = nu_cand < NEVER
+        cand_idx, cand_nodes, nu_cand = \
+            cand_idx[live], cand_nodes[live], nu_cand[live]
+        if cand_idx.size == 0:
+            return 0
+        res_slots = np.nonzero(self.node_at >= 0)[0]
+        res_nodes = self.node_at[res_slots]
+        nu_res = self.oracle.next_use_of(res_nodes)
+        free = self.capacity - len(res_slots)
+        if len(cand_idx) <= free:
+            keep_c = np.arange(len(cand_idx))
+            evict_slots = np.zeros(0, dtype=np.int64)
+        else:
+            # rank the pool by next use; residents win ties (an exchange
+            # at equal distance buys nothing and costs a writeback).
+            # Dead residents (next use NEVER) rank last so they fund the
+            # admission first, but are never evicted *without* an
+            # incoming row — an idle eviction is a free writeback.
+            n_c, n_r = len(cand_idx), len(res_slots)
+            pool_nu = np.concatenate([nu_res, nu_cand])
+            is_cand = np.concatenate([np.zeros(n_r, np.int8),
+                                      np.ones(n_c, np.int8)])
+            order = np.lexsort((is_cand, pool_nu))
+            keep = np.zeros(n_r + n_c, dtype=bool)
+            keep[order[:self.capacity]] = True
+            keep_c = np.nonzero(keep[n_r:])[0]
+            evict_slots = res_slots[~keep[:n_r]]
+        k = len(keep_c)
+        if k == 0:
+            return 0
+        free_slots = np.nonzero(self.node_at < 0)[0]
+        # exactly enough by construction: free + evicted == kept candidates
+        slots = np.concatenate([free_slots, evict_slots])[:k]
+        self._install(np.asarray(slots, dtype=np.int64),
+                      cand_nodes[keep_c], rows[cand_idx[keep_c]])
+        return k
+
+    # ------------------------------------------------------ slot helpers
+    def _take_lru_slots(self, k: int) -> np.ndarray:
+        """k slots: free ones first, then least-recently-used stamps."""
+        free = np.nonzero(self.node_at < 0)[0]
+        if len(free) >= k:
+            return free[:k]
+        need = k - len(free)
+        occupied = np.nonzero(self.node_at >= 0)[0]
+        stale = np.argpartition(self._last_used[occupied], need - 1)[:need]
+        return np.concatenate([free, occupied[stale]])
+
+    def _install(self, slots: np.ndarray, nodes: np.ndarray,
+                 rows: np.ndarray) -> None:
+        """Place ``nodes``' rows into ``slots``, evicting occupants."""
         evicted = self.node_at[slots]
         live = evicted >= 0
-        self.slot_of[evicted[live]] = -1
-        self._n_resident -= int(live.sum())
-        self.node_at[slots] = nodes[cand_idx]
-        self.slot_of[nodes[cand_idx]] = slots
-        self.rows[slots] = rows[cand_idx]
-        self._n_resident += k
-        return k
+        if live.any():
+            self._evict_arrays(slots[live], evicted[live])
+        self.node_at[slots] = nodes
+        self.slot_of[nodes] = slots
+        self.rows[slots] = rows
+        self._dirty[slots] = True
+        self._tick += 1
+        self._last_used[slots] = self._tick
+        self._n_resident += len(slots)
+
+    def _evict_arrays(self, slots: np.ndarray, nodes: np.ndarray) -> None:
+        """Common eviction bookkeeping + modeled writeback charge."""
+        self.slot_of[nodes] = -1
+        self._n_resident -= len(slots)
+        k = int(len(slots))
+        self.stats.cache_evictions += k
+        if self._wb_device is not None and k:
+            nbytes = k * self.row_bytes
+            t = self._wb_device.batch_time(
+                nbytes, n_random=k, queue_depth=self._wb_queue_depth)
+            self._wb_stats.record_write(
+                nbytes, t, request_sizes=[self.row_bytes] * k)
+
+    # ------------------------------------------------------------ device
+    def drain_dirty(self) -> np.ndarray:
+        """Slots rewritten since the last drain (caller holds the lock)."""
+        dirty = np.nonzero(self._dirty)[0]
+        self._dirty[dirty] = False
+        return dirty
+
+    # ------------------------------------------------------------ debug
+    def check_invariants(self) -> None:
+        """Assert the slot_of/node_at bijection and resident accounting.
+
+        Cheap enough to run every minibatch in stress tests; takes the
+        admit lock so it can run from a consumer thread while a producer
+        is admitting (the pipelined-executor interleaving).
+        """
+        with self.lock:
+            res_slots = np.nonzero(self.node_at >= 0)[0]
+            assert len(res_slots) == self._n_resident, \
+                (f"_n_resident={self._n_resident} but "
+                 f"{len(res_slots)} occupied slots")
+            res_nodes = self.node_at[res_slots]
+            assert len(np.unique(res_nodes)) == len(res_nodes), \
+                "a node occupies two slots"
+            assert np.array_equal(self.slot_of[res_nodes], res_slots), \
+                "slot_of does not invert node_at on residents"
+            fwd = np.nonzero(self.slot_of >= 0)[0]
+            assert len(fwd) == self._n_resident, \
+                (f"{len(fwd)} nodes map to slots but "
+                 f"{self._n_resident} residents")
+            assert np.array_equal(self.node_at[self.slot_of[fwd]], fwd), \
+                "node_at does not invert slot_of"
+            if self.capacity:
+                assert 0 <= self._clock < self.capacity
+                assert (self.slot_of < self.capacity).all()
 
     def resident_nodes(self) -> np.ndarray:
         return self.node_at[self.node_at >= 0]
 
     def clear(self) -> None:
-        self.slot_of.fill(-1)
-        self.node_at.fill(-1)
-        self.counts.fill(0)
-        self._clock = 0
-        self._n_resident = 0
+        with self.lock:
+            self.slot_of.fill(-1)
+            self.node_at.fill(-1)
+            self.counts.fill(0)
+            self._clock = 0
+            self._n_resident = 0
+            self._last_used.fill(0)
+            self._tick = 0
+            self._dirty.fill(True)  # a mirror must resync everything
+            if self.oracle is not None:
+                self.oracle.reset()

@@ -32,12 +32,29 @@ from .feature_cache import FeatureCache
 
 
 @dataclasses.dataclass
+class ResidentSplit:
+    """Cache-hit rows of one minibatch, recorded at cache-pass time.
+
+    The device-resident gather re-validates ``(slots, nodes)`` against
+    the live cache at transfer time — a slot re-used by a later admit
+    demotes that row to the host path (its bytes are already in the
+    minibatch's host ``features``), so staleness can never corrupt a
+    feature, only shrink the HBM-served fraction.
+    """
+
+    pos: np.ndarray     # positions in the minibatch output (hits)
+    slots: np.ndarray   # their cache slots at cache-pass time
+    nodes: np.ndarray   # their node ids (revalidation key)
+
+
+@dataclasses.dataclass
 class GatherPlan:
     """Planned gather state: cache-filled outputs + bucketed misses."""
 
     outs: list[np.ndarray]            # per-mb contiguous outputs (G-3)
     miss_lists: list                  # per-mb (miss_nodes, miss_positions)
     bck: Bucket                       # misses bucketed by feature block
+    resident: list | None = None      # per-mb ResidentSplit (cache on)
 
     @property
     def row_blocks(self) -> np.ndarray:
@@ -58,14 +75,28 @@ class FeatureGatherer:
         self.buffer = buffer
         self.cache = cache
         self.prefetcher = prefetcher
+        # when set (a list), plan_gather appends each gather cycle's node
+        # list — the feature-access trace the cache oracle replays
+        # (AgnesEngine.record_feature_trace)
+        self.trace_sink: list | None = None
 
     # ------------------------------------------------------------ stages
     def plan_gather(self, nodes_per_mb: list[np.ndarray]) -> GatherPlan:
         """Cache pass + block bucket of the misses (the *plan* stage)."""
-        outs, miss_lists = self._cache_pass(nodes_per_mb)
+        if self.cache is not None:
+            if self.trace_sink is not None:
+                self.trace_sink.append(np.concatenate(
+                    [np.unique(np.asarray(m, dtype=np.int64))
+                     for m in nodes_per_mb]) if nodes_per_mb
+                    else np.zeros(0, dtype=np.int64))
+            # one oracle step per gather cycle (= one batched admit),
+            # entered before the cycle's lookups; no-op off-policy
+            self.cache.oracle_advance()
+        outs, miss_lists, resident = self._cache_pass(nodes_per_mb)
         miss_nodes = [m for m, _ in miss_lists]
         blocks = [self.store.block_of(m) for m in miss_nodes]
-        return GatherPlan(outs, miss_lists, build_bucket(miss_nodes, blocks))
+        return GatherPlan(outs, miss_lists, build_bucket(miss_nodes, blocks),
+                          resident)
 
     def consume_gather(self, gp: GatherPlan) -> list[np.ndarray]:
         """Block-major fill of the planned misses; one read per block.
@@ -139,7 +170,7 @@ class FeatureGatherer:
     def gather_node_granular(self, nodes_per_mb: list[np.ndarray],
                              io_unit: int = 4096) -> list[np.ndarray]:
         """Baseline path: per-row small I/Os for every cache miss."""
-        outs, miss_lists = self._cache_pass(nodes_per_mb)
+        outs, miss_lists, _ = self._cache_pass(nodes_per_mb)
         for j, (miss_nodes, miss_pos) in enumerate(miss_lists):
             if len(miss_nodes) == 0:
                 continue
@@ -151,8 +182,10 @@ class FeatureGatherer:
 
     # ------------------------------------------------------------ internals
     def _cache_pass(self, nodes_per_mb):
-        """Fill from feature cache; return per-mb outputs + miss lists."""
+        """Fill from feature cache; return per-mb outputs, miss lists and
+        :class:`ResidentSplit` records (``None`` without a cache)."""
         outs, miss_lists = [], []
+        resident = [] if self.cache is not None else None
         for nodes in nodes_per_mb:
             nodes = np.asarray(nodes, dtype=np.int64)
             out = np.empty((len(nodes), self.store.dim), dtype=self.store.dtype)
@@ -162,10 +195,14 @@ class FeatureGatherer:
                 out[mask] = rows
                 miss = ~mask
                 miss_lists.append((nodes[miss], np.nonzero(miss)[0]))
+                hit_pos = np.nonzero(mask)[0]
+                resident.append(ResidentSplit(
+                    hit_pos, self.cache.lookup_slots(nodes[hit_pos]),
+                    nodes[hit_pos]))
             else:
                 miss_lists.append((nodes, np.arange(len(nodes))))
             outs.append(out)
-        return outs, miss_lists
+        return outs, miss_lists, resident
 
     def _load_block(self, b: int) -> np.ndarray:
         if b not in self.buffer and self.prefetcher is not None:
@@ -175,3 +212,85 @@ class FeatureGatherer:
                 self.buffer.put(b, rows)
                 return rows
         return self.buffer.get(b, self.store.read_block)
+
+
+class DeviceFeatureTable:
+    """HBM-resident mirror of the feature cache (the GIDS-style table).
+
+    Pins the cache's ``rows`` array on device (lane-padded once, so the
+    per-minibatch gather never re-pads the whole table) and keeps it
+    fresh *incrementally*: each sync uploads only the slots admits have
+    rewritten since the last one (``FeatureCache.drain_dirty``).  With
+    this table, ``PreparedMinibatch.to_device`` ships only miss rows
+    host→device — cache hits are served HBM→HBM through the Pallas
+    masked-gather kernel (``kernels.ops.gather_resident_rows``).
+
+    Correctness under the producer/consumer interleaving: a recorded
+    ``(slot, node)`` pair is only *used* if ``node_at[slot] == node``
+    still holds at sync time, checked under the cache lock in the same
+    critical section as the dirty-slot upload — so the device mirror the
+    gather reads (an immutable jnp snapshot) is guaranteed to hold
+    exactly that node's row for every validated slot.  Invalidated hits
+    demote to the host path; their bytes are already in the minibatch's
+    host ``features`` array.
+    """
+
+    def __init__(self, cache: FeatureCache, lane_multiple: int = 128):
+        import jax.numpy as jnp
+
+        self.cache = cache
+        self._d_pad = -(-cache.dim // lane_multiple) * lane_multiple
+        self.array = jnp.zeros((max(cache.capacity, 1), self._d_pad),
+                               dtype=cache.dtype)
+        self.hit_rows_served = 0    # rows gathered HBM->HBM
+        self.host_rows_shipped = 0  # miss + demoted rows host->device
+        self.demoted_rows = 0       # stale hits re-routed to host
+        self.sync_rows = 0          # dirty slots uploaded
+        with cache.lock:
+            self._sync_locked()
+
+    @property
+    def host_bytes_shipped(self) -> int:
+        return self.host_rows_shipped * self.cache.row_bytes
+
+    def _sync_locked(self) -> None:
+        """Upload dirty slots (caller holds ``cache.lock``)."""
+        import jax.numpy as jnp
+
+        dirty = self.cache.drain_dirty()
+        if dirty.size:
+            rows = np.zeros((len(dirty), self._d_pad),
+                            dtype=self.cache.rows.dtype)
+            rows[:, :self.cache.dim] = self.cache.rows[dirty]
+            self.array = self.array.at[jnp.asarray(dirty)].set(
+                jnp.asarray(rows))
+            self.sync_rows += int(dirty.size)
+
+    def resolve(self, split: ResidentSplit | None, n: int,
+                padded_n: int) -> tuple[np.ndarray, np.ndarray]:
+        """Sync the mirror and validate a minibatch's recorded hits.
+
+        Returns ``(slots, host_pos)``: per-output-row device slots (-1 =
+        not resident; rows past ``n`` are jit padding and stay -1) and
+        the positions whose bytes must travel from host ``features``.
+        """
+        slots = np.full(padded_n, -1, dtype=np.int64)
+        with self.cache.lock:
+            self._sync_locked()
+            if split is not None and len(split.pos):
+                ok = self.cache.node_at[split.slots] == split.nodes
+                slots[split.pos[ok]] = split.slots[ok]
+                self.demoted_rows += int((~ok).sum())
+        host_pos = np.nonzero(slots[:n] < 0)[0]
+        self.hit_rows_served += int(n - len(host_pos))
+        self.host_rows_shipped += int(len(host_pos))
+        return slots, host_pos
+
+    def stats(self) -> dict:
+        return {
+            "hit_rows_served": self.hit_rows_served,
+            "host_rows_shipped": self.host_rows_shipped,
+            "host_bytes_shipped": self.host_bytes_shipped,
+            "demoted_rows": self.demoted_rows,
+            "sync_rows": self.sync_rows,
+        }

@@ -195,8 +195,9 @@ class PrepareSession:
                 f_reader.reset()
             self.gather_wall_s = time.perf_counter() - t1
             self._done = True
-            return [PreparedMinibatch(m, f)
-                    for m, f in zip(self.mfgs, feats)]
+            resident = gp.resident or [None] * len(self.mfgs)
+            return [PreparedMinibatch(m, f, r)
+                    for m, f, r in zip(self.mfgs, feats, resident)]
         finally:
             # session end: the stream's barrier + drop any stale state
             # (early-planned blocks that turned out buffer-resident);

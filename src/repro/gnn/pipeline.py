@@ -160,7 +160,8 @@ class PipelinedExecutor:
 
     def __init__(self, engine, trainer, depth: int = 2,
                  adaptive_io: bool = False,
-                 io_queue_depth_bounds: tuple[int, int] = (2, 32)):
+                 io_queue_depth_bounds: tuple[int, int] = (2, 32),
+                 check_cache_invariants: bool = False):
         if depth < 1:
             raise ValueError("depth must be >= 1")
         self.engine = engine
@@ -168,6 +169,11 @@ class PipelinedExecutor:
         self.depth = depth
         self.adaptive_io = adaptive_io
         self.io_queue_depth_bounds = io_queue_depth_bounds
+        # debug/stress knob: assert the feature cache's slot_of/node_at
+        # bijection from the consumer thread after every minibatch, while
+        # the producer may be mid-admit (FeatureCache.check_invariants
+        # takes the cache lock, so this exercises the real interleaving)
+        self.check_cache_invariants = check_cache_invariants
         self._stop = threading.Event()
         self._producer: threading.Thread | None = None
         self._queue: queue.Queue | None = None
@@ -262,6 +268,10 @@ class PipelinedExecutor:
                 for p in payload:
                     losses.append(self.trainer.train_minibatch(p))
                     n_mb += 1
+                    if self.check_cache_invariants:
+                        cache = getattr(self.engine, "feature_cache", None)
+                        if cache is not None:
+                            cache.check_invariants()
                 train_s += time.perf_counter() - t0
                 if self.adaptive_io and hasattr(self.engine,
                                                 "set_io_queue_depth"):

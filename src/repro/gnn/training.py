@@ -44,6 +44,10 @@ class GNNTrainer:
     # run PreparedMinibatch.to_device first (the GIDS-style placement
     # hook; "pallas" routes rows through the gather_rows kernel path)
     feature_placement: str | None = None
+    # DeviceFeatureTable (engine.device_feature_table()): cache hits are
+    # gathered from the HBM-resident mirror, only misses cross the host
+    # boundary; requires feature_placement to be set
+    feature_table: object | None = None
     labels: np.ndarray | None = None
 
     def __post_init__(self):
@@ -80,7 +84,8 @@ class GNNTrainer:
         assert self.labels is not None, "set trainer.labels first"
         if self.feature_placement is not None and isinstance(
                 prepared.features, np.ndarray):
-            prepared = prepared.to_device(backend=self.feature_placement)
+            prepared = prepared.to_device(backend=self.feature_placement,
+                                          table=self.feature_table)
         mfg = pad_mfg(prepared.mfg, prepared.features, self.labels)
         t0 = time.perf_counter()
         self.params, self.opt_state, loss, _ = self._step_fn(

@@ -4,7 +4,9 @@ kernel files (pl.pallas_call + BlockSpec) | ops.py (jit wrappers) | ref.py
 (pure-jnp oracles).  Validated in interpret mode on CPU; compiled for TPU
 as the deployment target.
 """
-from .ops import flash_attention, gather_aggregate, gather_rows
+from .ops import (flash_attention, gather_aggregate, gather_resident_rows,
+                  gather_rows)
 from . import ref
 
-__all__ = ["flash_attention", "gather_aggregate", "gather_rows", "ref"]
+__all__ = ["flash_attention", "gather_aggregate", "gather_resident_rows",
+           "gather_rows", "ref"]

@@ -24,6 +24,18 @@ def _gather_kernel(idx_ref, table_ref, out_ref):
     out_ref[...] = table_ref[...]
 
 
+def _gather_masked_kernel(idx_ref, valid_ref, table_ref, out_ref):
+    """Masked row gather: invalid rows come out exactly zero.
+
+    ``valid`` rides the scalar-prefetch channel next to ``idx`` — the
+    DMA address (index map) only consumes ``idx``; the mask is applied
+    in-kernel so a clamped placeholder address never leaks data into a
+    row the caller marked invalid.
+    """
+    i = pl.program_id(0)
+    out_ref[...] = table_ref[...] * valid_ref[i].astype(out_ref.dtype)
+
+
 def gather_rows_kernel(table: jnp.ndarray, idx: jnp.ndarray, *,
                        interpret: bool = False) -> jnp.ndarray:
     """out[i] = table[idx[i]].
@@ -49,3 +61,34 @@ def gather_rows_kernel(table: jnp.ndarray, idx: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
         interpret=interpret,
     )(idx.astype(jnp.int32), table)
+
+
+def gather_rows_masked_kernel(table: jnp.ndarray, idx: jnp.ndarray,
+                              valid: jnp.ndarray, *,
+                              interpret: bool = False) -> jnp.ndarray:
+    """out[i] = table[idx[i]] if valid[i] else 0.
+
+    The device-resident gather primitive (GIDS-style): ``table`` is the
+    HBM-pinned feature-cache mirror, ``idx`` the per-output cache slot
+    (callers clamp invalid slots to a legal placeholder address), and
+    ``valid`` marks which outputs are genuine cache hits — the rest are
+    zeroed here and scattered in from host memory by the wrapper.
+    """
+    n = idx.shape[0]
+    m, d = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx_ref, valid_ref:
+                         (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref, valid_ref:
+                               (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_masked_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), valid.astype(jnp.int32), table)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_kernel
-from .gather_rows import gather_rows_kernel
+from .gather_rows import gather_rows_kernel, gather_rows_masked_kernel
 from .segment_agg import gather_aggregate_kernel
 
 _LANE = 128  # TPU vector lane width: last-dim tile multiple
@@ -78,6 +78,40 @@ def gather_rows(table: jnp.ndarray, idx: jnp.ndarray, *,
     padded, d = _pad_lanes(table)
     out = _gather_rows_impl(padded, idx, interpret or not _on_tpu())
     return out[:, :d] if padded.shape[1] != d else out
+
+
+# --------------------------------------------- gather_resident_rows
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def gather_resident_rows(table: jnp.ndarray, slots: jnp.ndarray,
+                         miss_pos: jnp.ndarray, miss_rows: jnp.ndarray, *,
+                         use_kernel: bool | None = None,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Assemble a feature block from the HBM-resident cache mirror.
+
+    ``out[i] = table[slots[i]]`` for ``slots[i] >= 0`` (cache hits: an
+    HBM->HBM row gather, no host traffic), 0 otherwise; then
+    ``out[miss_pos] = miss_rows`` scatters in the host-side rows (cache
+    misses + slots demoted by a concurrent admit).  ``table`` may be
+    pre-padded to the lane width; the output takes ``miss_rows``'s
+    feature width, so callers pass ``miss_rows`` with the true dim even
+    when it has zero rows.
+    """
+    d = miss_rows.shape[1]
+    if slots.shape[0] == 0:
+        return jnp.zeros((0, d), table.dtype)
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if not (use or interpret):
+        return ref.gather_resident_rows_ref(table, slots, miss_pos,
+                                            miss_rows)
+    valid = slots >= 0
+    idx = jnp.clip(slots.astype(jnp.int32), 0, table.shape[0] - 1)
+    padded, _ = _pad_lanes(table)
+    out = gather_rows_masked_kernel(padded, idx, valid,
+                                    interpret=interpret or not _on_tpu())
+    out = out[:, :d]
+    if miss_pos.shape[0]:
+        out = out.at[miss_pos].set(miss_rows.astype(out.dtype))
+    return out
 
 
 # -------------------------------------------------- gather_aggregate

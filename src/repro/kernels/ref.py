@@ -14,6 +14,24 @@ def gather_rows_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     return jnp.take(table, idx, axis=0)
 
 
+def gather_resident_rows_ref(table: jnp.ndarray, slots: jnp.ndarray,
+                             miss_pos: jnp.ndarray,
+                             miss_rows: jnp.ndarray) -> jnp.ndarray:
+    """Device-resident gather: cache hits from ``table``, misses scattered.
+
+    out[i] = table[slots[i]]  where slots[i] >= 0, else 0; then
+    out[miss_pos] = miss_rows.  ``table`` may be lane-padded wider than
+    the true feature width — the output is ``miss_rows``'s width.
+    """
+    d = miss_rows.shape[1]
+    valid = (slots >= 0)
+    rows = jnp.take(table, jnp.clip(slots, 0), axis=0)[:, :d]
+    out = rows * valid[:, None].astype(rows.dtype)
+    if miss_pos.shape[0]:
+        out = out.at[miss_pos].set(miss_rows.astype(out.dtype))
+    return out
+
+
 def gather_aggregate_ref(table: jnp.ndarray, nbr_idx: jnp.ndarray,
                          mean: bool = True) -> jnp.ndarray:
     """Fused neighbor gather + masked sum/mean (GNN aggregation).

@@ -16,7 +16,8 @@ import pytest
 from repro.core import AgnesConfig, AgnesEngine
 from repro.gnn import GNN_ARCHS, GNNTrainer, gnn_loss, init_gnn, gnn_apply
 from repro.gnn.models import pad_mfg
-from repro.kernels import gather_aggregate, gather_rows, ref
+from repro.kernels import (gather_aggregate, gather_resident_rows,
+                           gather_rows, ref)
 
 
 @pytest.fixture(scope="module")
@@ -90,6 +91,102 @@ def test_backend_parity_grads(padded_mfgs, arch):
                     jax.tree_util.tree_leaves(gb)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------- device-resident (HBM) gather
+def _resident_case(rng, n, dim, n_slots, kind):
+    """One (table, slots, miss_pos, miss_rows) case of the given kind."""
+    table = jnp.asarray(rng.normal(0, 1, (n_slots, dim)).astype(np.float32))
+    slots = np.full(n, -1, dtype=np.int64)
+    if kind == "all_hit":
+        slots[:] = rng.integers(0, n_slots, size=n)
+    elif kind == "mixed":
+        hit = rng.random(n) < 0.6
+        slots[hit] = rng.integers(0, n_slots, size=int(hit.sum()))
+    miss_pos = np.nonzero(slots < 0)[0]
+    miss_rows = rng.normal(0, 1, (len(miss_pos), dim)).astype(np.float32)
+    return (table, jnp.asarray(slots, jnp.int32),
+            jnp.asarray(miss_pos, jnp.int32), jnp.asarray(miss_rows))
+
+
+@pytest.mark.parametrize("dim", [32, 128, 200])
+@pytest.mark.parametrize("kind", ["all_hit", "all_miss", "mixed"])
+def test_gather_resident_rows_parity(rng, dim, kind):
+    """Masked Pallas kernel == ref == plain jnp on every hit/miss split,
+    including non-lane-aligned widths (32, 200), an empty miss set and
+    an all-miss (cold cache) minibatch."""
+    table, slots, miss_pos, miss_rows = _resident_case(
+        rng, n=37, dim=dim, n_slots=16, kind=kind)
+    kern = gather_resident_rows(table, slots, miss_pos, miss_rows,
+                                use_kernel=True, interpret=True)
+    host = gather_resident_rows(table, slots, miss_pos, miss_rows,
+                                use_kernel=False)
+    expect = ref.gather_resident_rows_ref(table, slots, miss_pos,
+                                          miss_rows)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(expect))
+    np.testing.assert_array_equal(np.asarray(host), np.asarray(expect))
+    # spot-check semantics independently of ref
+    s = np.asarray(slots)
+    out = np.asarray(kern)
+    hits = np.nonzero(s >= 0)[0]
+    np.testing.assert_array_equal(out[hits],
+                                  np.asarray(table)[s[hits], :dim])
+    np.testing.assert_array_equal(out[np.asarray(miss_pos)],
+                                  np.asarray(miss_rows))
+
+
+def test_gather_resident_rows_jit_padding_rows_zero(rng):
+    """Rows past the true minibatch (slot -1, no miss entry) come out
+    exactly zero through the masked kernel — jit padding never leaks
+    clamped-DMA garbage."""
+    n, true_n, dim = 64, 50, 32
+    table = jnp.asarray(rng.normal(0, 1, (8, dim)).astype(np.float32))
+    slots = np.full(n, -1, dtype=np.int64)
+    slots[:true_n] = rng.integers(0, 8, size=true_n)
+    miss_pos = jnp.zeros(0, jnp.int32)
+    miss_rows = jnp.zeros((0, dim), jnp.float32)
+    for kw in ({"use_kernel": True, "interpret": True},
+               {"use_kernel": False}):
+        out = np.asarray(gather_resident_rows(
+            table, jnp.asarray(slots, jnp.int32), miss_pos, miss_rows,
+            **kw))
+        assert (out[true_n:] == 0).all()
+        np.testing.assert_array_equal(
+            out[:true_n], np.asarray(table)[slots[:true_n], :dim])
+
+
+def test_gather_resident_rows_empty_minibatch():
+    table = jnp.zeros((4, 32), jnp.float32)
+    out = gather_resident_rows(table, jnp.zeros(0, jnp.int32),
+                               jnp.zeros(0, jnp.int32),
+                               jnp.zeros((0, 32), jnp.float32))
+    assert out.shape == (0, 32)
+
+
+def test_to_device_table_parity_on_real_minibatches(tiny_ds):
+    """End-to-end: ``to_device(table=...)`` through the masked kernel
+    path reproduces the host-gathered features byte-for-byte on real
+    prepared minibatches, with warm-cache hits actually served from the
+    HBM mirror."""
+    g, f = tiny_ds.reopen_stores()
+    eng = AgnesEngine(g, f, AgnesConfig(
+        block_size=16384, minibatch_size=48, hyperbatch_size=2,
+        fanouts=(4,), graph_buffer_bytes=1 << 20,
+        feature_buffer_bytes=1 << 20, async_io=False,
+        cache_capacity_rows=512, cache_admit_threshold=1))
+    table = eng.device_feature_table()
+    targets = [np.arange(48), np.arange(48, 96)]
+    for _ in range(2):                  # second pass hits the warm cache
+        for p in eng.prepare(targets):
+            n = p.features.shape[0]
+            dv = p.to_device(backend="pallas", table=table)
+            got = np.asarray(dv.features)
+            assert got.shape[0] % 128 == 0      # jit-stable padding
+            np.testing.assert_array_equal(got[:n], p.features)
+            assert (got[n:] == 0).all()
+    assert table.hit_rows_served > 0, "warm pass never hit the mirror"
+    assert table.sync_rows > 0
+    eng.close()
 
 
 def test_trainer_pallas_backend_learns(tiny_ds, padded_mfgs):
