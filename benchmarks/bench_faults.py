@@ -1,0 +1,326 @@
+"""Storage fault domain under load: parity, hedging, degraded throughput.
+
+The fault subsystem (``core/fault.py`` + the classified retry/hedge/
+degrade paths in ``core/io_sched.py`` and the journal replay in
+``core/block_store.py``) exists to keep storage-based training *correct*
+and *fast enough* when the NVMe arrays misbehave.  This benchmark drives
+the real engine through each failure regime and gates on both claims:
+
+* **parity** — an adversarial seeded schedule (transient read errors +
+  latency spikes + a mid-epoch whole-array dropout) against a fault-free
+  twin: gathered features and MFGs must stay byte-identical every
+  minibatch, through retries, hedges, degraded reads and the
+  epoch-boundary evacuation.  Faults may cost time, never bytes;
+* **hedging** — a latency-spike-only schedule with hedged duplicate
+  reads on vs off (identical seeded spikes): capping stragglers at the
+  p99-derived deadline plus a duplicate read must beat eating the full
+  spike (``MIN_HEDGE_GAIN``);
+* **degraded operation** — a 4-array engine that loses one array on its
+  first read, keeps training through the survivors' recovery path and
+  evacuates the stranded quarter at the epoch boundary, vs a fault-free
+  3-array baseline doing the same work: total modeled I/O time within
+  ``1/MIN_DEGRADED_THROUGHPUT``x (1.45x) of the baseline *with the
+  recovery copy I/O fully charged*;
+* **replay drill** — a kill window between the journal seal and the
+  metadata commit rolls *forward* at recovery; an injected torn journal
+  write rolls *back*; both land byte-identical.
+
+Tracked in ``BENCH_faults.json`` and guarded by
+``benchmarks.check_regression`` (degraded throughput floor + hedge
+gain).  Fixed geometry in both tiers: a deterministic A/B at container
+scale, not a scaling measurement.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .common import WORKDIR, emit, quick_val
+
+from repro.core import (AgnesConfig, AgnesEngine, FaultInjector,
+                        FeatureBlockStore, GraphBlockStore, NVMeModel,
+                        StorageTopology, StripePlacement, TornWriteError,
+                        recover_store_metadata)
+
+MIN_DEGRADED_THROUGHPUT = 1 / 1.45   # 3-of-4 arrays vs fault-free 3-array
+MIN_HEDGE_GAIN = 1.0                 # hedging must never lose to stalling
+
+N_NODES = 4_096
+RING_K = 8              # ring neighbors per side (degree 16, uniform)
+G_BLOCK = 2048
+F_DIM = 512             # 2 KiB rows -> one row per feature block
+F_BLOCK = 2048
+MB, N_MB = 64, 4        # minibatch geometry (256 nodes per hyperbatch)
+BUDGET = 4 << 20        # migrate_budget_bytes (evacuation loops past it)
+
+ADVERSARIAL = ("transient:p=0.05;latency:p=0.05,factor=25;"
+               "dropout:array=3,at=200")
+LATENCY_ONLY = "latency:p=0.3,factor=50"
+DROPOUT_NOW = "dropout:array=3,at=0"
+
+
+def _build_workload() -> tuple[str, str]:
+    gpath = os.path.join(WORKDIR, "faults_ring.graph")
+    fpath = os.path.join(WORKDIR, "faults_ring.feat")
+    if not os.path.exists(gpath + ".meta.json"):
+        offs = np.concatenate([np.arange(-RING_K, 0),
+                               np.arange(1, RING_K + 1)])
+        indices = ((np.arange(N_NODES)[:, None] + offs[None, :])
+                   % N_NODES).astype(np.int64).ravel()
+        indptr = (np.arange(N_NODES + 1, dtype=np.int64) * (2 * RING_K))
+        GraphBlockStore.build(gpath, indptr, indices, block_size=G_BLOCK)
+    if not os.path.exists(fpath + ".meta.json"):
+        rng = np.random.default_rng(7)
+        feats = rng.normal(0, 1, (N_NODES, F_DIM)).astype(np.float32)
+        FeatureBlockStore.build(fpath, feats, block_size=F_BLOCK)
+    return gpath, fpath
+
+
+def _engine(gpath: str, fpath: str, n_arrays: int,
+            schedule: str | None = None, hedge_frac: float = 1.5,
+            retries: int = 6) -> AgnesEngine:
+    g = GraphBlockStore.open(gpath, NVMeModel())
+    f = FeatureBlockStore.open(fpath, NVMeModel())
+    cfg = AgnesConfig(block_size=G_BLOCK, minibatch_size=MB,
+                      hyperbatch_size=N_MB, fanouts=(RING_K,),
+                      graph_buffer_bytes=64 << 10,
+                      feature_buffer_bytes=128 << 10,
+                      feature_cache_rows=1, async_io=False,
+                      io_queue_depth=16, placement="stripe",
+                      fault_schedule=schedule, io_retries=retries,
+                      hedge_deadline_frac=hedge_frac,
+                      migrate_budget_bytes=BUDGET)
+    return AgnesEngine(g, f, cfg, topology=StorageTopology.uniform(n_arrays))
+
+
+def _targets(hb: int) -> list[np.ndarray]:
+    """Contiguous tiles marching over the ring's locality order — long
+    sequential runs striped over every array, so each array sees steady
+    traffic (the hedge deadline needs per-array service history)."""
+    lo = (hb * N_MB * MB) % N_NODES
+    return [(lo + np.arange(j * MB, (j + 1) * MB)) % N_NODES
+            for j in range(N_MB)]
+
+
+def _io_time(eng: AgnesEngine) -> float:
+    g, f = eng.graph_store.stats, eng.feature_store.stats
+    return (g.modeled_read_time + g.modeled_write_time
+            + f.modeled_read_time + f.modeled_write_time)
+
+
+def _assert_parity(p1, p0, tag):
+    for a, b in zip(p1, p0):
+        for x, y in zip(a.mfg.nodes, b.mfg.nodes):
+            assert np.array_equal(x, y), f"{tag}: faults changed MFGs"
+        for lx, ly in zip(a.mfg.layers, b.mfg.layers):
+            assert np.array_equal(lx.nbr_idx, ly.nbr_idx)
+            assert np.array_equal(lx.self_idx, ly.self_idx)
+        assert np.array_equal(a.features, b.features), \
+            f"{tag}: faults changed gathered features"
+
+
+# ---------------------------------------------------------------- phases
+def _phase_parity(gpath, fpath) -> dict:
+    """Adversarial schedule vs fault-free twin: byte parity every
+    minibatch, through retries, hedges, dropout and evacuation."""
+    n_epochs = quick_val(3, 2)
+    hb_per_epoch = quick_val(10, 8)
+    clean = _engine(gpath, fpath, 4)
+    faulty = _engine(gpath, fpath, 4, schedule=ADVERSARIAL)
+    n_minibatches = 0
+    for epoch in range(n_epochs):
+        for hb in range(hb_per_epoch):
+            targets = _targets(epoch * hb_per_epoch + hb)
+            p0 = clean.prepare(targets, epoch=epoch)
+            p1 = faulty.prepare(targets, epoch=epoch)
+            _assert_parity(p1, p0, f"parity epoch{epoch}/hb{hb}")
+            n_minibatches += len(targets)
+        clean.end_epoch()
+        faulty.end_epoch()              # evacuates once the array drops
+    faults = faulty.io_stats()["faults"]
+    fired = faults["injected"]["fired"]
+    assert fired["transient"] > 0 and fired["latency"] > 0, \
+        "adversarial schedule never fired — the parity gate tested nothing"
+    assert fired["dropout"] == 1 and faults["io_degraded"] > 0
+    assert faults["offline_arrays"] == [3]
+    for store in (faulty.graph_store, faulty.feature_store):
+        assert not np.any(store.placement.array_of == 3), \
+            "blocks still stranded on the dropped array after evacuation"
+    out = {
+        "minibatches": n_minibatches,
+        "io_errors": faults["io_errors"],
+        "io_retries": faults["io_retries"],
+        "io_degraded": faults["io_degraded"],
+        "bytes_retried": faults["bytes_retried"],
+        "bytes_degraded": faults["bytes_degraded"],
+        "injected": faults["injected"],
+        "byte_identical": True,
+    }
+    clean.close()
+    faulty.close()
+    emit("faults/parity_minibatches", n_minibatches,
+         f"{faults['io_errors']} errors, {faults['io_retries']} retries, "
+         f"{faults['io_degraded']} degraded reads — all byte-identical")
+    return out
+
+
+def _phase_hedge(gpath, fpath) -> dict:
+    """Identical seeded latency spikes, hedging on vs off: the p99
+    deadline + duplicate read must beat the fully exposed straggler."""
+    n_hb = quick_val(24, 14)
+
+    def run(frac):
+        eng = _engine(gpath, fpath, 4, schedule=LATENCY_ONLY,
+                      hedge_frac=frac)
+        for hb in range(n_hb):
+            eng.prepare(_targets(hb), epoch=0)
+        t = _io_time(eng)
+        faults = eng.io_stats()["faults"]
+        eng.close()
+        return t, faults
+
+    hedged_t, hedged = run(1.5)
+    exposed_t, exposed = run(0.0)       # hedging disabled
+    assert hedged["io_hedges"] > 0, \
+        "latency schedule produced no hedges — deadline never armed"
+    assert exposed["io_hedges"] == 0
+    # same seed + deterministic consumer order -> identical spike
+    # sequence, so the ratio isolates the hedge policy
+    assert hedged["injected"]["fired"] == exposed["injected"]["fired"]
+    speedup = exposed_t / max(hedged_t, 1e-12)
+    assert speedup >= MIN_HEDGE_GAIN, \
+        (f"hedged reads regression: {speedup:.3f}x < {MIN_HEDGE_GAIN}x "
+         f"vs exposed stragglers")
+    emit("faults/hedge_speedup", speedup,
+         f"{exposed_t*1e3:.2f}ms stalled -> {hedged_t*1e3:.2f}ms hedged, "
+         f"{hedged['io_hedges']} hedges")
+    return {"speedup": round(speedup, 3),
+            "hedged_io_s": round(hedged_t, 6),
+            "exposed_io_s": round(exposed_t, 6),
+            "io_hedges": hedged["io_hedges"],
+            "bytes_hedged": hedged["bytes_hedged"]}
+
+
+def _phase_degraded(gpath, fpath) -> dict:
+    """3-of-4 arrays (dropout on first read + evacuation) vs a
+    fault-free 3-array baseline on the same work: the survivors'
+    roofline, with all recovery I/O charged."""
+    n_epochs = quick_val(6, 4)
+    hb_per_epoch = quick_val(16, 10)
+    base3 = _engine(gpath, fpath, 3)
+    deg4 = _engine(gpath, fpath, 4, schedule=DROPOUT_NOW)
+    recovery = None
+    for epoch in range(n_epochs):
+        for hb in range(hb_per_epoch):
+            targets = _targets(epoch * hb_per_epoch + hb)
+            p0 = base3.prepare(targets, epoch=epoch)
+            p1 = deg4.prepare(targets, epoch=epoch)
+            _assert_parity(p1, p0, f"degraded epoch{epoch}/hb{hb}")
+        base3.end_epoch()
+        rep = deg4.end_epoch()
+        if rep and "recovery" in rep and recovery is None:
+            recovery = rep["recovery"]
+    assert recovery is not None, "dropout never triggered evacuation"
+    for store in (deg4.graph_store, deg4.feature_store):
+        assert not np.any(store.placement.array_of == 3)
+    base_t, deg_t = _io_time(base3), _io_time(deg4)
+    frac = base_t / max(deg_t, 1e-12)
+    # acceptance gate: degraded 3-of-4 within 1/MIN_DEGRADED_THROUGHPUT
+    # (1.45x) of the fault-free 3-array roofline, recovery I/O included
+    assert frac >= MIN_DEGRADED_THROUGHPUT, \
+        (f"degraded throughput regression: {frac:.3f} < "
+         f"{MIN_DEGRADED_THROUGHPUT:.3f} of the 3-array baseline "
+         f"({base_t*1e3:.2f}ms vs {deg_t*1e3:.2f}ms)")
+    evac_bytes = sum(r["bytes_moved"] for r in recovery.values())
+    emit("faults/degraded_throughput_frac", frac,
+         f"3-of-4 arrays {deg_t*1e3:.2f}ms vs 3-array baseline "
+         f"{base_t*1e3:.2f}ms, {evac_bytes >> 10} KiB evacuated")
+    out = {"throughput_frac": round(frac, 4),
+           "baseline3_io_s": round(base_t, 6),
+           "degraded4_io_s": round(deg_t, 6),
+           "evacuated_bytes": evac_bytes,
+           "recovery": recovery}
+    base3.close()
+    deg4.close()
+    return out
+
+
+def _phase_replay() -> dict:
+    """Kill-window + torn-write recovery drill on a dedicated store."""
+    path = os.path.join(WORKDIR, "faults_replay.feat")
+    if not os.path.exists(path + ".meta.json"):
+        rng = np.random.default_rng(13)
+        FeatureBlockStore.build(
+            path, rng.normal(0, 1, (256, 64)).astype(np.float32),
+            block_size=2048)
+    topo = StorageTopology.uniform(2)
+    f = FeatureBlockStore.open(path, NVMeModel())
+    f.attach_topology(topo, StripePlacement(1).place(f.n_blocks, topo),
+                      persist=True)
+    before = np.array(f.placement.array_of)
+    snapshot = [f.read_block_bytes(b) for b in range(f.n_blocks)]
+    victims = np.nonzero(before == 1)[0][:4].tolist()
+
+    def kill(point):                    # between journal seal and commit
+        if point == "copied":
+            raise RuntimeError("injected kill")
+
+    try:
+        f.migrate_blocks([(b, 0) for b in victims], _fault=kill)
+        raise AssertionError("kill hook never fired")
+    except RuntimeError:
+        pass
+    actions = recover_store_metadata(path)
+    f2 = FeatureBlockStore.open(path, NVMeModel())
+    pl = f2.load_placement(topo)
+    forward = (actions.get(".migrate.log") == "rolled_forward"
+               and all(pl.array_of[b] == 0 for b in victims))
+    byte_ok = all(f2.read_block_bytes(b) == snapshot[b]
+                  for b in range(f2.n_blocks))
+    # torn journal write: the injector truncates the sealed journal on
+    # disk mid-record, so recovery must refuse to roll forward
+    f2.attach_topology(topo, pl, persist=True)
+    f2.attach_fault(FaultInjector.parse("torn:at=0", seed=3))
+    before2 = np.array(pl.array_of)
+    victim2 = int(np.nonzero(before2 == 1)[0][0])
+    torn_raised = False
+    try:
+        f2.migrate_blocks([(victim2, 0)])
+    except TornWriteError:
+        torn_raised = True
+    actions2 = recover_store_metadata(path)
+    f3 = FeatureBlockStore.open(path, NVMeModel())
+    back = (torn_raised
+            and actions2.get(".migrate.log") == "rolled_back"
+            and np.array_equal(f3.load_placement(topo).array_of, before2))
+    byte_ok = byte_ok and all(f3.read_block_bytes(b) == snapshot[b]
+                              for b in range(f3.n_blocks))
+    assert forward, "sealed journal did not roll forward at recovery"
+    assert back, "torn journal did not roll back at recovery"
+    assert byte_ok, "replay drill tore block bytes"
+    emit("faults/replay_drill", 1.0,
+         "sealed journal rolled forward, torn journal rolled back, "
+         "bytes identical")
+    return {"rolled_forward": True, "torn_rolled_back": True,
+            "byte_identical": True}
+
+
+def run() -> dict:
+    gpath, fpath = _build_workload()
+    parity = _phase_parity(gpath, fpath)
+    hedge = _phase_hedge(gpath, fpath)
+    degraded = _phase_degraded(gpath, fpath)
+    replay = _phase_replay()
+    return {
+        "workload": {"n_nodes": N_NODES, "graph_block": G_BLOCK,
+                     "feature_block": F_BLOCK, "dim": F_DIM},
+        "parity": parity,
+        "hedge": hedge,
+        "degraded": degraded,
+        "replay": replay,
+    }
+
+
+if __name__ == "__main__":
+    print(run())

@@ -17,7 +17,7 @@ import json
 import os
 import sys
 
-from . import (bench_cache, bench_io_sched, bench_migration,
+from . import (bench_cache, bench_faults, bench_io_sched, bench_migration,
                bench_plan_fusion, bench_striping)
 
 # file -> [(dotted path into the json payload, floor, description)]
@@ -47,6 +47,14 @@ GUARDS = {
         ("cache.speedup", bench_cache.MIN_SPEEDUP,
          "oracle (Belady MIN) vs clock cache on modeled prepare I/O "
          "at equal capacity (eviction writebacks charged)"),
+    ],
+    "BENCH_faults.json": [
+        ("faults.degraded.throughput_frac",
+         bench_faults.MIN_DEGRADED_THROUGHPUT,
+         "degraded 3-of-4-array training vs fault-free 3-array baseline "
+         "(dropout + evacuation, recovery I/O charged)"),
+        ("faults.hedge.speedup", bench_faults.MIN_HEDGE_GAIN,
+         "hedged duplicate reads vs fully exposed latency stragglers"),
     ],
 }
 

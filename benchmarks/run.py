@@ -19,9 +19,10 @@ import os
 import sys
 import time
 
-from . import (bench_cache, bench_fig2_breakdown, bench_fig4_io_unit,
-               bench_fig6_eq1, bench_fig7_distdgl, bench_fig8_hyperbatch,
-               bench_fig9_sweep, bench_fig10_sensitivity, bench_fig11_bw,
+from . import (bench_cache, bench_faults, bench_fig2_breakdown,
+               bench_fig4_io_unit, bench_fig6_eq1, bench_fig7_distdgl,
+               bench_fig8_hyperbatch, bench_fig9_sweep,
+               bench_fig10_sensitivity, bench_fig11_bw,
                bench_fig12_accuracy, bench_io_sched, bench_migration,
                bench_pipeline_overlap, bench_plan_fusion, bench_striping,
                common)
@@ -42,6 +43,7 @@ ALL = {
     "stripe": bench_striping.run,
     "migrate": bench_migration.run,
     "cache": bench_cache.run,
+    "faults": bench_faults.run,
 }
 
 OUT_PATH = os.environ.get(
@@ -59,6 +61,9 @@ MIGRATE_OUT_PATH = os.environ.get(
 CACHE_OUT_PATH = os.environ.get(
     "REPRO_BENCH_CACHE_OUT",
     os.path.join(os.path.dirname(__file__), "..", "BENCH_cache.json"))
+FAULTS_OUT_PATH = os.environ.get(
+    "REPRO_BENCH_FAULTS_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json"))
 
 
 def main() -> None:
@@ -91,7 +96,8 @@ def main() -> None:
         tracked = [("io", OUT_PATH), ("fusion", FUSION_OUT_PATH),
                    ("stripe", STRIPE_OUT_PATH),
                    ("migrate", MIGRATE_OUT_PATH),
-                   ("cache", CACHE_OUT_PATH)]
+                   ("cache", CACHE_OUT_PATH),
+                   ("faults", FAULTS_OUT_PATH)]
         for name, path in tracked:
             if name not in results:
                 continue

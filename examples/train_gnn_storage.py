@@ -65,6 +65,14 @@ def main():
                          "(needs --n-arrays > 1)")
     ap.add_argument("--migrate-budget-mb", type=int, default=64,
                     help="per-store migration byte budget per epoch")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="seeded storage-fault schedule, e.g. "
+                         "'transient:p=0.01;latency:p=0.005,factor=30;"
+                         "dropout:array=3,at=400' — reads survive via "
+                         "retry/hedge/degraded paths, byte-identical")
+    ap.add_argument("--io-retries", type=int, default=2,
+                    help="bounded retry budget for transient read faults "
+                         "(exhaustion escalates to permanent)")
     args = ap.parse_args()
 
     if args.backend == "pallas":
@@ -85,6 +93,7 @@ def main():
                         feature_placement=args.place_features)
         tr.labels = ds.labels
         io_time = 0.0
+        fault_prev = {}
         pipelined = args.pipeline and hasattr(engine, "plan_epoch")
         executor = (PipelinedExecutor(engine, tr,
                                       adaptive_io=args.adaptive_io)
@@ -125,10 +134,25 @@ def main():
                     migrate = (f" migrated {moved} blocks "
                                f"(hot top-10% share "
                                f"{skew['top_share']:.0%})")
+            faultinfo = ""
+            faults = (engine.io_stats().get("faults")
+                      if hasattr(engine, "io_stats") else None)
+            if faults:
+                delta = {k: faults[k] - fault_prev.get(k, 0)
+                         for k in ("io_errors", "io_retries", "io_hedges",
+                                   "io_degraded")}
+                fault_prev = faults
+                faultinfo = (f" faults[err {delta['io_errors']} "
+                             f"retry {delta['io_retries']} "
+                             f"hedge {delta['io_hedges']} "
+                             f"degraded {delta['io_degraded']}"
+                             + (f" offline {faults['offline_arrays']}"
+                                if faults.get("offline_arrays") else "")
+                             + "]")
             acc = tr.evaluate(engine.prepare(holdout, epoch=900 + epoch))
             print(f"[{name}] epoch {epoch}: loss {np.mean(losses):.4f} "
                   f"acc {acc:.3f} modeled_io {io_time:.3f}s{overlap}"
-                  f"{migrate}", flush=True)
+                  f"{migrate}{faultinfo}", flush=True)
         if executor is not None:
             executor.close()
         return acc, io_time
@@ -142,7 +166,8 @@ def main():
         n_arrays=args.n_arrays, placement=args.placement,
         stripe_width_blocks=args.stripe_width,
         online_placement=args.online_placement,
-        migrate_budget_bytes=args.migrate_budget_mb << 20))
+        migrate_budget_bytes=args.migrate_budget_mb << 20,
+        fault_schedule=args.inject_faults, io_retries=args.io_retries))
     acc_a, io_a = run("agnes", agnes)
     if agnes.topology is not None:
         u = agnes.io_stats()["arrays"]

@@ -7,12 +7,17 @@
 # writes BENCH_io.json (I/O scheduler before/after numbers),
 # BENCH_fusion.json (fused vs barriered staged prepare),
 # BENCH_stripe.json (multi-SSD striping sweep), BENCH_migrate.json
-# (online re-placement vs static, drifting hotspot) and BENCH_cache.json
-# (oracle vs clock/LRU cache policy duel + HBM hit fraction) at repo
-# root, then runs the regression guard: every freshly written
+# (online re-placement vs static, drifting hotspot), BENCH_cache.json
+# (oracle vs clock/LRU cache policy duel + HBM hit fraction) and
+# BENCH_faults.json (fault-domain parity/hedge/degraded/replay drill)
+# at repo root, then runs the regression guard: every freshly written
 # BENCH_*.json speedup is compared against its benchmark's asserted
 # floor and any regression fails the build loudly
 # (benchmarks/check_regression.py).
+# RUN_FAULTS=1 runs just the fault-domain tier: the fault-injection and
+# migration/journal-replay test files, the --quick faults benchmark
+# (writes BENCH_faults.json) and the regression guard over its floors
+# (degraded 3-of-4 throughput, hedge gain).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
@@ -22,5 +27,11 @@ if [[ "${RUN_SLOW:-0}" == "1" ]]; then
 fi
 if [[ "${RUN_BENCH:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.check_regression
+fi
+if [[ "${RUN_FAULTS:-0}" == "1" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_fault_injection.py tests/test_migration.py
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick faults
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.check_regression
 fi

@@ -11,19 +11,24 @@ from .async_io import BlockPrefetcher
 from .baselines import (BaselineConfig, CSRStorage, GinexLike, GNNDriveLike,
                         MariusLike, OutreLike)
 from .block_store import (DEFAULT_BLOCK_SIZE, FeatureBlockStore, GraphBlock,
-                          GraphBlockStore, recover_store_metadata)
+                          GraphBlockStore, recover_store_metadata,
+                          replay_migration_journal)
 from .bucket import Bucket, build_bucket
 from .buffer import BlockBuffer
 from .cache_oracle import (NEVER, OracleSchedule, belady_min_misses,
                            trace_from_plan)
 from .device_model import IOStats, NVMeModel
+from .fault import (ArrayOfflineError, FaultInjector, FaultRule, IOFaultError,
+                    PermanentIOError, TornWriteError, TransientIOError,
+                    classify_error)
 from .feature_cache import CACHE_POLICIES, FeatureCache
 from .gather import (DeviceFeatureTable, FeatureGatherer, GatherPlan,
                      ResidentSplit)
 from .hotness import HotnessTracker
 from .hyperbatch import HopPlan, HyperbatchSampler
 from .io_sched import CoalescedReader, PlanStream, Run, coalesce, plan_cost
-from .migration import BlockMove, MigrationEngine, MigrationReport
+from .migration import (BlockMove, MigrationEngine, MigrationReport,
+                        plan_evacuation)
 from .layout import apply_relabel, bfs_locality_order, degree_order
 from .sampling import (MFG, MFGLayer, assemble_layer, layer_from_frontier,
                        next_frontier, sample_indices)
@@ -52,5 +57,8 @@ __all__ = [
     "StripePlacement", "feature_block_hotness", "graph_block_hotness",
     "make_policy", "topology_plan_cost", "HotnessTracker",
     "BlockMove", "MigrationEngine", "MigrationReport",
-    "recover_store_metadata",
+    "recover_store_metadata", "replay_migration_journal", "plan_evacuation",
+    "FaultInjector", "FaultRule", "IOFaultError", "TransientIOError",
+    "PermanentIOError", "TornWriteError", "ArrayOfflineError",
+    "classify_error",
 ]

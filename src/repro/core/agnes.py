@@ -23,6 +23,7 @@ from .block_store import DEFAULT_BLOCK_SIZE, FeatureBlockStore, GraphBlockStore
 from .io_sched import CoalescedReader, PlanStream
 from .buffer import BlockBuffer
 from .device_model import IOStats, NVMeModel
+from .fault import FaultInjector
 from .feature_cache import FeatureCache
 from .gather import FeatureGatherer
 from .hotness import HotnessTracker
@@ -99,6 +100,20 @@ class AgnesConfig:
     # weight of a feature-cache *hit* in the hotness signal (hits are
     # absorbed storage traffic — forward-looking, not current cost)
     hotness_cache_hit_weight: float = 0.25
+    # --- storage fault domain (core/fault.py) ---
+    # scriptable injected-fault schedule, e.g.
+    # "transient:p=0.01;latency:p=0.005,factor=30;dropout:array=1,at=500"
+    # (None/"" = no injection; real OSErrors are classified regardless)
+    fault_schedule: str | None = None
+    # bounded retry budget for transient read faults (re-issues beyond
+    # the first attempt; an exhausted budget escalates to permanent)
+    io_retries: int = 2
+    # base of the exponential retry backoff, jittered to 0.5-1.5x and
+    # charged as modeled stall time on the retrying array
+    io_retry_backoff_s: float = 1e-3
+    # hedge a run whose service time exceeds this multiple of the
+    # array's p99 run time (duplicate-to-sibling read); <= 0 disables
+    hedge_deadline_frac: float = 1.5
     seed: int = 0
 
     def buffer_blocks(self, nbytes: int) -> int:
@@ -220,6 +235,16 @@ class AgnesEngine:
                     hotness=feature_block_hotness(
                         feature_store, graph_store.approx_degrees())),
                     persist=False)
+        # storage fault domain (core/fault.py): one injector shared by
+        # both stores (engine-wide op counter), consulted by the
+        # coalesced readers per physical read attempt and by
+        # migrate_blocks per journal write
+        self.fault_injector: FaultInjector | None = None
+        if cfg.fault_schedule:
+            self.fault_injector = FaultInjector.parse(cfg.fault_schedule,
+                                                      seed=cfg.seed)
+            graph_store.attach_fault(self.fault_injector)
+            feature_store.attach_fault(self.fault_injector)
         self.graph_buffer = BlockBuffer(
             cfg.buffer_blocks(cfg.graph_buffer_bytes), name="graph")
         self.feature_buffer = BlockBuffer(
@@ -309,11 +334,17 @@ class AgnesEngine:
             self._g_prefetch = CoalescedReader(
                 graph_store, max_coalesce_bytes=cfg.max_coalesce_bytes,
                 queue_depth=cfg.io_queue_depth, workers=workers,
-                stream=g_stream)
+                stream=g_stream, retries=cfg.io_retries,
+                retry_backoff_s=cfg.io_retry_backoff_s,
+                hedge_deadline_frac=cfg.hedge_deadline_frac,
+                seed=cfg.seed)
             self._f_prefetch = CoalescedReader(
                 feature_store, max_coalesce_bytes=cfg.max_coalesce_bytes,
                 queue_depth=cfg.io_queue_depth, workers=workers,
-                stream=f_stream)
+                stream=f_stream, retries=cfg.io_retries,
+                retry_backoff_s=cfg.io_retry_backoff_s,
+                hedge_deadline_frac=cfg.hedge_deadline_frac,
+                seed=cfg.seed + 1)
         elif cfg.async_io:
             # legacy per-block read-ahead thread
             self._g_prefetch = BlockPrefetcher(
@@ -440,16 +471,54 @@ class AgnesEngine:
                     "reader still holds an in-flight plan after reset"
         self.graph_hotness.roll()
         self.feature_hotness.roll()
-        if not self._migrations:
-            return None
         reports = {}
         for name, mig, tracker in self._migrations:
             # charge the copy I/O at the depths currently in force (the
             # adaptive controller may have resized since construction)
             mig.queue_depth = self.io_queue_depths()
             reports[name] = mig.run(tracker.hotness()).summary()
+        # degraded-array recovery runs regardless of online_placement —
+        # evacuation is correctness-driven, not a placement optimization
+        recovery = self._evacuate_offline()
+        if recovery:
+            reports["recovery"] = recovery
+        if not reports:
+            return None
         self.last_migration = reports
         return reports
+
+    def _evacuate_offline(self) -> dict | None:
+        """Drain blocks stranded on offline arrays onto the survivors
+        (``MigrationEngine.evacuate``), restoring the survivors'
+        roofline: every future touch of an evacuated block pays a normal
+        placed read instead of the degraded recovery path."""
+        topo = self.topology
+        if topo is None or not any(not topo.is_online(a)
+                                   for a in range(topo.n_arrays)):
+            return None
+        out = {}
+        engines = {name: mig for name, mig, _ in self._migrations}
+        for name, store, tracker in (
+                ("graph", self.graph_store, self.graph_hotness),
+                ("feature", self.feature_store, self.feature_hotness)):
+            if store.placement is None:
+                continue
+            mig = engines.get(name)
+            if mig is None:
+                # no online-placement engine configured: evacuation still
+                # needs the budgeted durable write path (the policy is
+                # irrelevant — evacuate() plans its own moves)
+                mig = MigrationEngine(
+                    store, make_policy("stripe",
+                                       self.config.stripe_width_blocks),
+                    self.config.migrate_budget_bytes, name=name,
+                    queue_depth=self.io_queue_depths())
+            else:
+                mig.queue_depth = self.io_queue_depths()
+            rep = mig.evacuate(tracker.hotness())
+            if rep is not None:
+                out[name] = rep.summary()
+        return out or None
 
     def set_io_queue_depth(self, queue_depth: int,
                            array: int | None = None) -> int:
@@ -539,6 +608,23 @@ class AgnesEngine:
                 "bytes_migrated": total.bytes_migrated,
                 "last": self.last_migration,
             }
+        if (self.fault_injector is not None or total.io_errors
+                or total.io_degraded):
+            out["faults"] = {
+                "io_errors": total.io_errors,
+                "io_retries": total.io_retries,
+                "io_hedges": total.io_hedges,
+                "io_degraded": total.io_degraded,
+                "bytes_retried": total.bytes_retried,
+                "bytes_hedged": total.bytes_hedged,
+                "bytes_degraded": total.bytes_degraded,
+            }
+            if self.topology is not None:
+                out["faults"]["offline_arrays"] = [
+                    a for a in range(self.topology.n_arrays)
+                    if not self.topology.is_online(a)]
+            if self.fault_injector is not None:
+                out["faults"]["injected"] = self.fault_injector.summary()
         return out
 
     def close(self) -> None:

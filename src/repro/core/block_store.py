@@ -30,42 +30,138 @@ import dataclasses
 import json
 import os
 import threading
+import zlib
 
 import numpy as np
 
 from .device_model import IOStats, NVMeModel
 from .hotness import HotnessTracker
 from .io_sched import Run, coalesce, plan_cost
-from .topology import (BlockPlacement, StorageTopology, fsync_dir,
+from .topology import (BlockPlacement, StorageTopology,
+                       distribute_offline_runs, fsync_dir,
                        topology_plan_cost)
 
 DEFAULT_BLOCK_SIZE = 1 << 20  # 1 MiB (paper default)
 _HDR = 3  # directory words per entry: node_id, count, total_degree
 _MIGRATE_LOG = ".migrate.log"   # block-copy journal (crash consistency)
 _TOPO_TMP = ".topo.json.tmp"    # atomic-save staging file
+_JREC = 5   # int64 header words per journal record:
+#             [block_id, src_array, dst_array, nbytes, crc32(raw)]
+_JSEAL = -1  # block_id of the seal record marking the copy phase complete
+
+
+def _parse_migration_journal(journal: str) -> tuple[list, bool]:
+    """Parse a ``<store>.migrate.log`` into its records.
+
+    Returns ``(records, sealed)`` with ``records = [(block, src, dst,
+    raw_bytes), ...]`` — only records whose header, payload and CRC are
+    fully intact — and ``sealed`` true iff the terminal seal record is
+    present and its count matches (the copy phase provably completed).
+    Any torn tail (truncated header/payload, CRC mismatch, missing
+    seal) yields ``sealed=False``: roll-back territory.
+    """
+    try:
+        with open(journal, "rb") as fh:
+            data = fh.read()
+    except OSError:
+        return [], False
+    recs: list = []
+    off, hdr_bytes = 0, _JREC * 8
+    while off + hdr_bytes <= len(data):
+        hdr = np.frombuffer(data, dtype=np.int64, count=_JREC, offset=off)
+        off += hdr_bytes
+        b, src, dst, n, crc = (int(x) for x in hdr)
+        if b == _JSEAL:
+            return recs, src == len(recs)  # seal carries the record count
+        if n < 0 or off + n > len(data):
+            return recs, False  # payload torn off
+        raw = data[off:off + n]
+        off += n
+        if zlib.crc32(raw) != crc & 0xFFFFFFFF:
+            return recs, False  # payload corrupted mid-record
+        recs.append((b, src, dst, raw))
+    return recs, False  # ran out of bytes before the seal
+
+
+def replay_migration_journal(path: str) -> str:
+    """Replay a leftover ``<path>.migrate.log`` against the committed
+    ``<path>.topo.json``.
+
+    Rolls the interrupted migration *forward* when the copy phase
+    provably completed — the journal is sealed, every record's CRC
+    holds, the committed mapping still has every block at its journaled
+    source, and the journaled bytes match the data file — by re-applying
+    the journaled moves in journal order (identical slot assignment to
+    the uninterrupted ``migrate_blocks``) and committing the mapping
+    atomically.  Rolls *backward* (keeps the committed old mapping)
+    otherwise.  Either way the store is byte-identical — the data file
+    is never touched by migration — and placement-consistent.
+
+    Returns the action taken: ``"rolled_forward"``, ``"rolled_back"``
+    or ``"already_committed"`` (crash landed after the commit rename;
+    the new mapping is already durable).  Does not remove the journal.
+    """
+    recs, sealed = _parse_migration_journal(path + _MIGRATE_LOG)
+    if not recs or not sealed or not os.path.exists(path + ".topo.json"):
+        return "rolled_back"
+    pl = BlockPlacement.load(path)
+    if not all(0 <= b < pl.n_blocks and 0 <= dst < pl.n_arrays
+               for b, _, dst, _ in recs):
+        return "rolled_back"  # journal from a different store shape
+    if all(int(pl.array_of[b]) == dst for b, _, dst, _ in recs):
+        return "already_committed"
+    if not all(int(pl.array_of[b]) == src for b, src, _, _ in recs):
+        return "rolled_back"  # mapping matches neither side of the move
+    # byte-verify the copy against the data file (uniform block records:
+    # block b's bytes start at b * record_length in both store formats)
+    lengths = {len(raw) for _, _, _, raw in recs}
+    if len(lengths) != 1:
+        return "rolled_back"
+    blen = lengths.pop()
+    with open(path, "rb") as fh:
+        for b, _, _, raw in recs:
+            fh.seek(b * blen)
+            if fh.read(blen) != raw:
+                return "rolled_back"
+    for b, _, dst, _ in recs:
+        pl.move_block(b, dst)
+    pl.save(path)  # atomic commit, exactly as migrate_blocks would have
+    return "rolled_forward"
 
 
 def recover_store_metadata(path: str) -> dict:
-    """Discard partial migration/placement state left by a crash.
+    """Recover partial migration/placement state left by a crash.
 
-    The migration protocol (``migrate_blocks``) is: append moved blocks
-    to ``<path>.migrate.log`` + fsync, then atomically commit the new
+    The migration protocol (``migrate_blocks``) is: journal every moved
+    block's bytes (+ source/destination/CRC) to ``<path>.migrate.log``
+    and seal it + fsync, then atomically commit the new
     ``<path>.topo.json`` via temp-file + ``os.replace``, then remove the
     journal.  The committed ``topo.json`` is therefore always a complete
-    old or complete new mapping, and the data file is never touched — so
-    recovery is pure garbage collection: a leftover journal means the
-    crash happened before (old placement wins) or after (new placement
-    already committed) the rename, and a leftover ``.tmp`` means a save
-    died mid-write; both are safe to delete.  Called whenever a store
-    handle opens.
+    old or complete new mapping, and the data file is never touched.
+    Recovery at store open:
+
+    * a leftover ``.topo.json.tmp`` is a save that died mid-write —
+      discarded (the committed file is intact by construction);
+    * a leftover journal is **replayed** (:func:`replay_migration_
+      journal`): rolled forward when the copy provably completed
+      (sealed + CRC + byte-verified against the data file), rolled back
+      otherwise — then removed.
+
+    Returns ``{suffix: action}`` describing what was found
+    (``".topo.json.tmp"`` maps to the discarded temp file's size,
+    ``".migrate.log"`` to the replay outcome).
     """
-    removed = {}
-    for suffix in (_MIGRATE_LOG, _TOPO_TMP):
-        stale = path + suffix
-        if os.path.exists(stale):
-            removed[suffix] = os.path.getsize(stale)
-            os.remove(stale)
-    return removed
+    actions: dict = {}
+    tmp = path + _TOPO_TMP
+    if os.path.exists(tmp):
+        actions[_TOPO_TMP] = os.path.getsize(tmp)
+        os.remove(tmp)
+    journal = path + _MIGRATE_LOG
+    if os.path.exists(journal):
+        actions[_MIGRATE_LOG] = replay_migration_journal(path)
+        os.remove(journal)
+        fsync_dir(journal)
+    return actions
 
 
 @dataclasses.dataclass
@@ -108,6 +204,53 @@ class _BlockReadBatcher:
     topology: StorageTopology | None = None
     placement: BlockPlacement | None = None
     hotness: HotnessTracker | None = None
+    fault = None  # FaultInjector (core/fault.py), None = no injection
+
+    def attach_fault(self, injector) -> None:
+        """Bind a :class:`~repro.core.fault.FaultInjector`: the coalesced
+        reader consults it on every physical read attempt against this
+        store, and ``migrate_blocks`` on every journal write.  One
+        injector may be shared across stores (engine-wide op counter)."""
+        self.fault = injector
+
+    def account_fault_io(self, array: int, nbytes: int, n_blocks: int,
+                         t: float, kind: str) -> None:
+        """Charge fault-path I/O like any other request, tagged by kind.
+
+        ``kind``: ``"retry"`` (transient-fault re-issue — full bytes +
+        modeled backoff), ``"hedge"`` (duplicate straggler read on a
+        sibling array), ``"degraded"`` (offline-array read served by a
+        survivor — *counter only*: its modeled time and bytes were
+        already charged at submission, where ``account_runs`` reroutes
+        offline shares onto the survivor's batched roofline), ``"stall"``
+        (exposed latency with no extra bytes), or ``"error"`` (a failed
+        attempt — counter only).  Retry/hedge bytes land in
+        ``bytes_read`` exactly like prepare traffic, so rooflines and
+        parity checks see the overhead.
+        """
+
+        def charge(st: IOStats) -> None:
+            if kind == "error":
+                st.note_error()
+            elif kind == "stall":
+                st.record_stall(t)
+            elif kind == "degraded":
+                st.note_degraded(n_blocks, nbytes)
+            else:
+                st.record_run_batch(nbytes, n_blocks,
+                                    max(n_blocks - 1, 0), [nbytes], t)
+                if kind == "retry":
+                    st.note_retry(nbytes)
+                elif kind == "hedge":
+                    st.note_hedge(nbytes)
+                else:
+                    raise ValueError(f"unknown fault I/O kind {kind!r}")
+
+        with self._io_lock:
+            charge(self.stats)
+        if self.topology is not None and self.placement is not None:
+            with self.topology.lock:
+                charge(self.topology.array_stats[int(array)])
 
     def attach_hotness(self, tracker: HotnessTracker) -> None:
         """Bind a :class:`HotnessTracker`: every storage touch charged
@@ -191,26 +334,39 @@ class _BlockReadBatcher:
         if self.placement is not None:
             placed = self.placement.split_runs(runs, self.block_size,
                                                max_coalesce_bytes)
+            # degraded mode: shares placed on an offline array are served
+            # (and charged) across *all* survivors — each stranded run is
+            # cut into near-equal pieces riding the surviving rooflines
+            # in parallel until the epoch-boundary evacuation re-places
+            # the blocks for good.  The degraded *counters* tick at read
+            # time (``CoalescedReader._read_degraded``), where service
+            # through the recovery path actually happens
+            served = [(a, own + rec, bool(rec))
+                      for a, own, rec in distribute_offline_runs(
+                          placed, self.topology) if own or rec]
             entries = [(self.topology.devices[a], rs,
                         self.topology.queue_depth_of(queue_depth, a))
-                       for a, rs in placed]
+                       for a, rs, _ in served]
             if stream is not None:
                 total, n_blocks, n_seq, t = stream.charge_split(
                     entries, self.block_size)
             else:
                 total, n_blocks, n_seq, t = topology_plan_cost(
-                    placed, self.block_size, self.topology, queue_depth)
-            sizes = [r.count * self.block_size for _, rs in placed for r in rs]
+                    [(a, rs) for a, rs, _ in served], self.block_size,
+                    self.topology, queue_depth)
+            sizes = [r.count * self.block_size for _, rs, _ in served
+                     for r in rs]
             # per-array utilization accounting: each array's isolated
             # roofline for its share of this submission
             with self.topology.lock:
-                for (a, rs), (dev, _, qd) in zip(placed, entries):
+                for (a, rs, _), (dev, _, qd) in zip(served, entries):
                     nb = sum(r.count for r in rs)
                     busy = dev.batch_time(nb * self.block_size,
                                           n_random=len(rs),
                                           n_sequential=nb - len(rs),
                                           queue_depth=qd)
-                    self.topology.array_stats[a].record_run_batch(
+                    st = self.topology.array_stats[a]
+                    st.record_run_batch(
                         nb * self.block_size, nb, nb - len(rs),
                         [r.count * self.block_size for r in rs], busy)
         else:
@@ -230,8 +386,9 @@ class _BlockReadBatcher:
                 # seed per-array sequential detection: a following
                 # per-block read locally adjacent to a batch's tail must
                 # stream sequential, like _last_block_read does above
+                # (offline arrays excluded — their local lattice is moot)
                 for a, rs in placed:
-                    if rs:
+                    if rs and self.topology.is_online(a):
                         self._last_local_read[a] = rs[-1].stop - 1
 
     def _record_block_read_locked(self, block_id: int) -> None:
@@ -242,6 +399,21 @@ class _BlockReadBatcher:
             self.hotness.touch([block_id])
         if self.placement is not None:
             a = int(self.placement.array_of[block_id])
+            if not self.topology.is_online(a):
+                # degraded: the block's array is offline — serve and
+                # charge the read (random: the survivor has no local
+                # adjacency for foreign blocks) on the least-busy one
+                eff = self.topology.degraded_target()
+                dev = self.topology.devices[eff]
+                t = dev.request_time(self.block_size, sequential=False)
+                self.stats.record_read(self.block_size, t, sequential=False)
+                self.stats.note_degraded(1, self.block_size)
+                self._last_block_read = block_id
+                with self.topology.lock:
+                    st = self.topology.array_stats[eff]
+                    st.record_read(self.block_size, t, sequential=False)
+                    st.note_degraded(1, self.block_size)
+                return
             loc = int(self.placement.local_of[block_id])
             sequential = loc == self._last_local_read[a] + 1
             self._last_local_read[a] = loc
@@ -283,11 +455,14 @@ class _BlockReadBatcher:
            are returned to their arrays' free lists
            (``BlockPlacement.move_block``).
 
-        ``recover_store_metadata`` (run at store open) discards a
-        leftover journal/temp file from a crash between the steps.
+        ``recover_store_metadata`` (run at store open) **replays** a
+        leftover journal from a crash between the steps: forward when
+        the sealed, CRC'd copy byte-verifies against the data file
+        (finishing the interrupted migration), backward otherwise.
         Returns the number of blocks moved.  ``_fault`` is a test hook
         called with ``"copied"`` and ``"committed"`` at the two crash
-        windows.
+        windows; an attached :class:`~repro.core.fault.FaultInjector`
+        additionally sees every journal write (torn-write faults).
         """
         if self.placement is None or self.topology is None:
             raise RuntimeError("migrate_blocks needs an attached topology")
@@ -301,16 +476,28 @@ class _BlockReadBatcher:
             raise ValueError("duplicate block in migration plan")
         ids = np.sort(np.fromiter(dst_of, dtype=np.int64, count=len(dst_of)))
         with self._io_lock:
-            # -------- copy: journal the moved blocks' bytes, then fsync
+            # -------- copy: journal the moved blocks' bytes (with their
+            # source/destination arrays and a CRC), seal, then fsync.
+            # The seal record proves the copy phase completed, so
+            # recovery can tell a replayable journal from a torn one.
             journal = self.path + _MIGRATE_LOG
             with open(journal, "wb") as jf:
                 for b in ids.tolist():
                     raw = self.read_block_bytes(b)
-                    np.asarray([b, len(raw)], dtype=np.int64).tofile(jf)
+                    np.asarray([b, int(pl.array_of[b]), dst_of[b],
+                                len(raw), zlib.crc32(raw)],
+                               dtype=np.int64).tofile(jf)
                     jf.write(raw)
+                np.asarray([_JSEAL, len(ids), 0, 0, 0],
+                           dtype=np.int64).tofile(jf)
                 jf.flush()
                 os.fsync(jf.fileno())
             fsync_dir(journal)  # the journal's existence must survive too
+            if self.fault is not None:
+                # injected torn-write: truncates the journal on disk and
+                # raises — the simulated crash window recovery tests and
+                # bench_faults exercise end to end
+                self.fault.on_journal_write(journal)
             # copy reads are charged against the *source* placement, so
             # this must precede the moves
             self._charge_migration_reads(ids, queue_depth)
@@ -345,19 +532,31 @@ class _BlockReadBatcher:
         the topology lock itself."""
         pl, topo, bs = self.placement, self.topology, self.block_size
         placed = pl.split_runs(coalesce(ids, bs, 8 << 20), bs, 8 << 20)
+        # evacuation: copy reads whose source array is offline come
+        # through the survivors' recovery path, each stranded run spread
+        # across every online array (recovery I/O competes with prepare
+        # traffic, so no single survivor should eat the whole copy)
         read_t = 0.0
         read_blocks = read_seq = 0
+        degraded_blocks = 0
         read_sizes: list[int] = []
         with topo.lock:
-            for a, rs in placed:
+            for a, own, rec in distribute_offline_runs(placed, topo):
+                rs = own + rec
+                if not rs:
+                    continue
                 nb = sum(r.count for r in rs)
                 t = topo.devices[a].batch_time(
                     nb * bs, n_random=len(rs), n_sequential=nb - len(rs),
                     queue_depth=self._migration_qd(queue_depth, a))
                 sizes = [r.count * bs for r in rs]
-                topo.array_stats[a].record_run_batch(
-                    nb * bs, nb, nb - len(rs), sizes, t)
-                topo.array_stats[a].note_migration(nb, nb * bs)
+                st = topo.array_stats[a]
+                st.record_run_batch(nb * bs, nb, nb - len(rs), sizes, t)
+                st.note_migration(nb, nb * bs)
+                rec_nb = sum(r.count for r in rec)
+                if rec_nb:
+                    st.note_degraded(rec_nb, rec_nb * bs)
+                    degraded_blocks += rec_nb
                 read_t = max(read_t, t)
                 read_blocks += nb
                 read_seq += nb - len(rs)
@@ -366,6 +565,8 @@ class _BlockReadBatcher:
         self.stats.record_run_batch(nbytes, read_blocks, read_seq,
                                     read_sizes, read_t)
         self.stats.note_migration(int(len(ids)), nbytes)
+        if degraded_blocks:
+            self.stats.note_degraded(degraded_blocks, degraded_blocks * bs)
 
     def _charge_migration_writes(self, ids: np.ndarray, dst_of: dict,
                                  queue_depth=None) -> None:

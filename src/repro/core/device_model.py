@@ -92,6 +92,19 @@ class IOStats:
     # eviction is also charged as a row-granular write above
     cache_evictions: int = 0
 
+    # storage fault domain (core/fault.py): failed read attempts, bounded
+    # retries, hedged duplicate reads past the p99 deadline, and block
+    # reads served through the degraded (offline-array) path.  The
+    # retry/hedge/degraded I/O is charged through record_run_batch /
+    # record_stall like any other request — these isolate the overhead.
+    io_errors: int = 0
+    io_retries: int = 0
+    io_hedges: int = 0
+    io_degraded: int = 0
+    bytes_retried: int = 0
+    bytes_hedged: int = 0
+    bytes_degraded: int = 0
+
     def record_read(self, nbytes: int, t: float, sequential: bool = False) -> None:
         self.n_reads += 1
         self.n_requests += 1
@@ -138,6 +151,30 @@ class IOStats:
         self.n_migrated_blocks += int(n_blocks)
         self.bytes_migrated += int(nbytes)
 
+    def note_error(self) -> None:
+        """One failed physical read attempt (injected or real)."""
+        self.io_errors += 1
+
+    def note_retry(self, nbytes: int) -> None:
+        """Tag already-charged re-issue I/O as transient-fault retries."""
+        self.io_retries += 1
+        self.bytes_retried += int(nbytes)
+
+    def note_hedge(self, nbytes: int) -> None:
+        """Tag already-charged duplicate I/O as a hedged straggler read."""
+        self.io_hedges += 1
+        self.bytes_hedged += int(nbytes)
+
+    def note_degraded(self, n_reads: int, nbytes: int) -> None:
+        """Tag already-charged I/O as served via the degraded path."""
+        self.io_degraded += int(n_reads)
+        self.bytes_degraded += int(nbytes)
+
+    def record_stall(self, t: float) -> None:
+        """Charge exposed stall time (unhedged latency spike, modeled
+        retry backoff) against the read roofline without moving bytes."""
+        self.modeled_read_time += t
+
     @property
     def n_ios(self) -> int:
         return self.n_reads + self.n_writes
@@ -171,7 +208,9 @@ class IOStats:
                   "bytes_read",
                   "bytes_written", "n_migrated_blocks", "bytes_migrated",
                   "buffer_hits", "buffer_misses",
-                  "cache_hits", "cache_misses", "cache_evictions"):
+                  "cache_hits", "cache_misses", "cache_evictions",
+                  "io_errors", "io_retries", "io_hedges", "io_degraded",
+                  "bytes_retried", "bytes_hedged", "bytes_degraded"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         self.modeled_read_time += other.modeled_read_time
         self.modeled_write_time += other.modeled_write_time
@@ -195,6 +234,13 @@ class IOStats:
             "buffer_hit_ratio": round(self.buffer_hit_ratio, 4),
             "cache_hit_ratio": round(self.cache_hit_ratio, 4),
             "cache_evictions": self.cache_evictions,
+            "io_errors": self.io_errors,
+            "io_retries": self.io_retries,
+            "io_hedges": self.io_hedges,
+            "io_degraded": self.io_degraded,
+            "bytes_retried": self.bytes_retried,
+            "bytes_hedged": self.bytes_hedged,
+            "bytes_degraded": self.bytes_degraded,
         }
 
 

@@ -1,0 +1,304 @@
+"""Storage fault domain: error taxonomy + seeded, scriptable fault injection.
+
+The paper's premise is saturating NVMe arrays with a large number of
+in-flight block I/Os — exactly the regime where real devices throw
+transient read errors, tail-latency spikes, torn writes and whole-array
+dropouts.  This module gives the storage subsystem a vocabulary for
+those failures and a deterministic way to inject them:
+
+* an **error taxonomy** (:class:`TransientIOError`,
+  :class:`PermanentIOError`, :class:`TornWriteError`,
+  :class:`ArrayOfflineError`) plus :func:`classify_error`, which maps
+  arbitrary exceptions — injected or real ``OSError``\\ s — onto the
+  retry/propagate/degrade decision the I/O scheduler takes
+  (``core/io_sched.py``);
+* a :class:`FaultInjector` that wraps the read path's charge points and
+  real file reads (``CoalescedReader`` consults it per physical read
+  attempt) and the migration journal's write path
+  (``block_store.migrate_blocks``) with a seeded, scriptable schedule.
+
+Fault kinds and what the stack does about them:
+
+=========  ==================================  ===========================
+kind       injected as                         handled by
+=========  ==================================  ===========================
+transient  :class:`TransientIOError` per read  bounded retry + exponential
+           attempt (probability or op index)   backoff/jitter in the reader
+latency    service-time multiplier on one run  hedged duplicate read past
+                                               the p99-derived deadline
+torn       journal file truncated mid-record   journal *replay* rolls the
+           + :class:`TornWriteError` (a         interrupted migration back
+           simulated crash window)             (``recover_store_metadata``)
+dropout    :class:`ArrayOfflineError` sticky   degraded mode: topology
+           for one array from op ``at`` on     marks the array offline,
+                                               reads reroute to survivors,
+                                               ``MigrationEngine`` drains
+                                               the stranded blocks
+=========  ==================================  ===========================
+
+Schedules are strings so they travel through configs and CLI flags
+(``AgnesConfig.fault_schedule``, ``--inject-faults``)::
+
+    "transient:p=0.01;latency:p=0.005,factor=30;dropout:array=3,at=400"
+
+Every firing decision is drawn from one seeded ``np.random.default_rng``
+under a lock, so a schedule replays identically at a fixed seed and
+deterministic consumer order (``async_io=False``).
+
+This is the *storage-level* fault domain; host-level failures
+(heartbeats, stragglers, elastic meshes) live in
+``repro.distributed.fault``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import errno
+import os
+import threading
+
+import numpy as np
+
+#: ``OSError`` errnos worth retrying: the kernel-level analogues of a
+#: media retry / aborted command / queue-full push-back.
+TRANSIENT_ERRNOS = frozenset({
+    errno.EAGAIN, errno.EINTR, errno.EBUSY, errno.ETIMEDOUT, errno.EIO})
+
+_FAULT_KINDS = ("transient", "latency", "dropout", "torn")
+
+
+class IOFaultError(OSError):
+    """Base class of storage-fault errors (injected or classified)."""
+
+
+class TransientIOError(IOFaultError):
+    """Retryable read failure — succeeds on a bounded re-issue."""
+
+
+class PermanentIOError(IOFaultError):
+    """Unrecoverable failure: propagate through the error-sentinel path."""
+
+
+class TornWriteError(PermanentIOError):
+    """A journal write tore mid-record (simulated crash window).
+
+    Raised *after* the tear is applied to the on-disk journal, so the
+    file state matches a real kill: recovery at the next store open
+    detects the torn tail and rolls the migration back.
+    """
+
+
+class ArrayOfflineError(PermanentIOError):
+    """A whole array dropped out; carries the failed array's index."""
+
+    def __init__(self, array: int, message: str | None = None):
+        self.array = int(array)
+        super().__init__(errno.EIO,
+                         message or f"storage array {array} offline")
+
+
+def classify_error(exc: BaseException) -> str:
+    """Map an exception to its fault class: the retry/propagate decision.
+
+    Returns ``"transient"`` (bounded retry is worthwhile), ``"offline"``
+    (whole-array dropout — flip to degraded mode), or ``"permanent"``
+    (re-raise through the sentinel path).  Injected faults carry their
+    class; real ``OSError`` s are split on :data:`TRANSIENT_ERRNOS`;
+    everything else — index errors, decode bugs — is permanent: retrying
+    a deterministic failure only hides it.
+    """
+    if isinstance(exc, ArrayOfflineError):
+        return "offline"
+    if isinstance(exc, TransientIOError):
+        return "transient"
+    if isinstance(exc, PermanentIOError):
+        return "permanent"
+    if isinstance(exc, OSError) and exc.errno in TRANSIENT_ERRNOS:
+        return "transient"
+    return "permanent"
+
+
+@dataclasses.dataclass
+class FaultRule:
+    """One scheduled fault: ``kind`` + trigger (probability or op index).
+
+    ``p`` fires on an independent seeded draw per read op (per journal
+    write for ``torn``); ``at`` fires deterministically at that op index
+    (``>= at`` and sticky for ``dropout``, ``== at`` otherwise).
+    ``array`` filters to one array (required for ``dropout``); ``count``
+    caps total firings; ``factor`` is the latency-spike service-time
+    multiplier.
+    """
+
+    kind: str
+    p: float = 0.0
+    at: int | None = None
+    array: int | None = None
+    factor: float = 20.0
+    count: int | None = None
+    fired: int = 0
+
+    def __post_init__(self):
+        if self.kind not in _FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(expected one of {_FAULT_KINDS})")
+        if self.kind == "dropout" and self.array is None:
+            raise ValueError("dropout fault needs array=<index>")
+
+    def _exhausted(self) -> bool:
+        return self.count is not None and self.fired >= self.count
+
+
+class FaultInjector:
+    """Seeded, scriptable fault schedule over a store's physical I/O.
+
+    Attach to a store via ``store.attach_fault(injector)``; the
+    coalesced reader then consults :meth:`on_read` once per physical
+    read attempt (so a retry re-rolls the dice) and
+    ``migrate_blocks`` consults :meth:`on_journal_write` once per
+    journal write.  One injector may be shared by several stores — the
+    op counter then spans all of them, which keeps ``at=`` schedules
+    meaningful for a whole engine.
+    """
+
+    def __init__(self, rules: list[FaultRule], seed: int = 0):
+        self.rules = list(rules)
+        self.seed = int(seed)
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self._op = 0          # read attempts observed
+        self._jop = 0         # journal writes observed
+        self.counters = {k: 0 for k in _FAULT_KINDS}
+
+    # ------------------------------------------------------------ parsing
+    @classmethod
+    def parse(cls, spec: "str | FaultInjector",
+              seed: int = 0) -> "FaultInjector":
+        """Build an injector from a schedule string.
+
+        Grammar: ``kind:key=val,key=val;kind:...`` with keys ``p``
+        (float), ``at`` (int), ``array`` (int), ``factor`` (float),
+        ``count`` (int) — e.g.
+        ``"transient:p=0.02;dropout:array=1,at=500"``.
+        """
+        if isinstance(spec, FaultInjector):
+            return spec
+        rules: list[FaultRule] = []
+        for part in str(spec).split(";"):
+            part = part.strip()
+            if not part:
+                continue
+            kind, _, argstr = part.partition(":")
+            kw: dict = {}
+            for item in argstr.split(","):
+                item = item.strip()
+                if not item:
+                    continue
+                key, _, val = item.partition("=")
+                key, val = key.strip(), val.strip()
+                if key == "p":
+                    kw["p"] = float(val)
+                elif key == "at":
+                    kw["at"] = int(val)
+                elif key == "array":
+                    kw["array"] = int(val)
+                elif key == "factor":
+                    kw["factor"] = float(val)
+                elif key == "count":
+                    kw["count"] = int(val)
+                else:
+                    raise ValueError(
+                        f"unknown fault parameter {key!r} in {part!r}")
+            rules.append(FaultRule(kind=kind.strip(), **kw))
+        if not rules:
+            raise ValueError(f"empty fault schedule {spec!r}")
+        inj = cls(rules, seed=seed)
+        inj.spec = str(spec)
+        return inj
+
+    # ------------------------------------------------------------ hooks
+    def on_read(self, array: int, start: int = 0, count: int = 1) -> float:
+        """One physical read attempt against ``array``.
+
+        Raises :class:`TransientIOError` / :class:`ArrayOfflineError`
+        per the schedule, or returns the service-time multiplier
+        (``1.0`` = no spike) the caller charges the run at.
+        """
+        a = int(array)
+        with self._lock:
+            op = self._op
+            self._op += 1
+            mult = 1.0
+            for r in self.rules:
+                if r.kind == "dropout":
+                    if a != r.array:
+                        continue
+                    if not r.fired and (
+                            (r.at is not None and op >= r.at)
+                            or (r.p > 0 and self._rng.random() < r.p)):
+                        r.fired += 1          # sticky from here on
+                        self.counters["dropout"] += 1
+                    if r.fired:
+                        raise ArrayOfflineError(
+                            r.array, f"injected dropout of array {r.array} "
+                                     f"(op {op})")
+                    continue
+                if r.array is not None and a != r.array:
+                    continue
+                if r._exhausted():
+                    continue
+                hit = ((r.at is not None and op == r.at)
+                       or (r.p > 0 and self._rng.random() < r.p))
+                if not hit:
+                    continue
+                if r.kind == "transient":
+                    r.fired += 1
+                    self.counters["transient"] += 1
+                    raise TransientIOError(
+                        errno.EIO, f"injected transient read error "
+                                   f"(op {op}, array {a}, "
+                                   f"run {start}+{count})")
+                if r.kind == "latency":
+                    r.fired += 1
+                    self.counters["latency"] += 1
+                    mult = max(mult, float(r.factor))
+            return mult
+
+    def on_journal_write(self, path: str) -> None:
+        """One durable journal write.  A scheduled torn-write truncates
+        the just-written file mid-record and raises
+        :class:`TornWriteError` — the moral equivalent of losing power
+        with the tail of the journal still in the drive's write cache.
+        """
+        with self._lock:
+            jop = self._jop
+            self._jop += 1
+            for r in self.rules:
+                if r.kind != "torn" or r._exhausted():
+                    continue
+                if not ((r.at is not None and jop == r.at)
+                        or (r.p > 0 and self._rng.random() < r.p)):
+                    continue
+                r.fired += 1
+                self.counters["torn"] += 1
+                size = os.path.getsize(path)
+                keep = max(int(size * (0.25 + 0.5 * self._rng.random())) - 1,
+                           1) if size > 1 else 0
+                with open(path, "r+b") as fh:
+                    fh.truncate(keep)
+                    fh.flush()
+                    os.fsync(fh.fileno())
+                raise TornWriteError(
+                    errno.EIO, f"injected torn journal write "
+                               f"(write {jop}, kept {keep}/{size} bytes): "
+                               f"{path}")
+
+    # ------------------------------------------------------------ reporting
+    def summary(self) -> dict:
+        with self._lock:
+            return {
+                "schedule": getattr(self, "spec", None),
+                "seed": self.seed,
+                "read_ops": self._op,
+                "journal_writes": self._jop,
+                "fired": dict(self.counters),
+            }

@@ -46,15 +46,31 @@ run queues*, each with an independent queue depth
 :class:`PlanStream` accumulates one open batch per *device object* and
 charges fused submissions the ``max`` over per-array rooflines, so N
 independent arrays genuinely overlap instead of summing.
+
+**Fault domain** (``repro.core.fault``): every physical read attempt
+runs through :meth:`CoalescedReader._guarded_read`, which classifies
+failures with :func:`~repro.core.fault.classify_error` instead of a
+blanket fallback — *transient* faults get bounded retry with
+exponential backoff + jitter (each re-issue charged like any other
+request), latency-spike stragglers past a p99-derived deadline get a
+*hedged* duplicate read on the least-busy sibling array, an array
+*dropout* flips the topology to degraded mode (the run re-reads through
+the survivors' recovery path), and *permanent* errors are stashed per
+block and re-raised from :meth:`CoalescedReader.fetch` so they
+propagate through the producer's error-sentinel seam rather than being
+silently swallowed.
 """
 from __future__ import annotations
 
 import dataclasses
+import errno
 import threading
 import time
 from collections import deque
 
 import numpy as np
+
+from .fault import PermanentIOError, classify_error
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,12 +232,20 @@ class CoalescedReader:
 
     def __init__(self, store, max_coalesce_bytes: int,
                  queue_depth: int = 8, workers: int = 2,
-                 stream: PlanStream | None = None):
+                 stream: PlanStream | None = None, retries: int = 2,
+                 retry_backoff_s: float = 1e-3,
+                 hedge_deadline_frac: float = 1.5, seed: int = 0):
         self.store = store
         self.max_coalesce_bytes = int(max_coalesce_bytes)
         self.queue_depth = max(int(queue_depth), 1)
         self.workers = max(int(workers), 0)
         self.stream = stream
+        # fault-domain policy (core/fault.py): bounded retry for
+        # transient faults, p99-deadline hedging for stragglers
+        self.retries = max(int(retries), 0)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.hedge_deadline_frac = float(hedge_deadline_frac)
+        self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         # runs are keyed by a unique token, not their start block: a fused
@@ -235,6 +259,8 @@ class CoalescedReader:
         self._tok_array: dict[int, int] = {}      # run token -> array
         self._qd: dict[int, int] = {}             # per-array depth overrides
         self._ready_runs: dict[int, int] = {}     # array -> reserved runs
+        self._error_of: dict[int, BaseException] = {}  # block -> stashed error
+        self._svc_times: dict[int, deque] = {}    # array -> nominal run times
         self._run_seq = 0
         self._rr = 0                              # worker round-robin cursor
         self._gen = 0
@@ -314,19 +340,30 @@ class CoalescedReader:
         Blocks until its run is read (planned blocks are never re-read
         elsewhere, so waiting — not falling back — keeps bytes identical
         to the per-block path).  Returns ``None`` for unplanned ids; the
-        caller falls back to a direct ``read_block``.
+        caller falls back to a direct ``read_block``.  A run that failed
+        with a classified *permanent* error (transient faults were
+        already retried in ``_guarded_read``) re-raises that error here,
+        so it propagates through the producer's error-sentinel seam
+        instead of silently degrading to per-block reads.
         """
         b = int(block_id)
         deadline = time.monotonic() + timeout
         with self._cv:
             tok = self._run_of.get(b)
             if tok is None:
+                exc = self._error_of.pop(b, None)
+                if exc is not None:
+                    raise exc
                 return None
             arr = self._tok_array.get(tok, 0)
             if self.workers == 0:
                 q = self._pending.get(arr)
-                while b not in self._ready and q:
-                    self._execute_locked(q.popleft()[1])
+                while b not in self._ready and q and b in self._run_of:
+                    etok, erun = q.popleft()
+                    try:
+                        self._execute_locked(erun, arr)
+                    except Exception as exc:
+                        self._fail_run_locked(etok, erun, exc)
             else:
                 while (b not in self._ready and not self._stop
                        and b in self._run_of):
@@ -346,13 +383,14 @@ class CoalescedReader:
                             self._ready_runs[arr] = \
                                 self._ready_runs.get(arr, 0) + 1  # balanced below
                             try:
-                                self._execute_locked(entry[1])
-                            except Exception:
+                                self._execute_locked(entry[1], arr)
+                            except Exception as exc:
                                 # same fail-fast contract as a worker
-                                # read: unplan the run so this (and
-                                # later) fetches fall back to a direct
-                                # read_block, which raises the real error
-                                self._unplan_locked(tok, entry[1])
+                                # read: _guarded_read already retried
+                                # transients, so anything surfacing here
+                                # is permanent — stash it so this (and
+                                # later) fetches re-raise it
+                                self._fail_run_locked(tok, entry[1], exc)
                             continue
                     # a failed worker read unplans the run, so also wake
                     # on b leaving the plan (fail fast) and on the pool
@@ -367,6 +405,7 @@ class CoalescedReader:
                         break  # timed out
             blk = self._ready.pop(b, None)
             self._run_of.pop(b, None)
+            failure = self._error_of.pop(b, None) if blk is None else None
             # release b's share of the run's queue-depth slot whether or
             # not the block was delivered (timeout/close must not leak
             # slots and wedge the reader pool until the next reset)
@@ -379,6 +418,8 @@ class CoalescedReader:
                 else:
                     self._remaining[tok] = left
             self._cv.notify_all()
+            if failure is not None:
+                raise failure  # classified permanent error, sentinel seam
             return blk  # None -> caller falls back to a direct read
 
     # alias kept for symmetry with BlockPrefetcher's non-blocking API
@@ -410,6 +451,7 @@ class CoalescedReader:
             self._remaining.clear()
             self._tok_array.clear()
             self._ready_runs.clear()
+            self._error_of.clear()
             self._cv.notify_all()
         if self.stream is not None:
             self.stream.drain()
@@ -446,11 +488,24 @@ class CoalescedReader:
         self.close()
 
     # ------------------------------------------------------------ internals
-    def _execute_locked(self, run: Run) -> None:
+    def _execute_locked(self, run: Run, array: int = 0) -> None:
         """Lazy/steal path: read a run on the consumer thread."""
-        blocks = self.store.read_run(run.start, run.count)
+        blocks = self._guarded_read(array, run)
         for i, blk in enumerate(blocks):
             self._ready[run.start + i] = blk
+
+    def _fail_run_locked(self, tok: int, run: Run,
+                         exc: BaseException | None) -> None:
+        """Stash a run's classified-permanent error for every block it
+        still owns, then release its slot.  Waiting consumers wake, find
+        the block unplanned, and re-raise the stashed error from
+        ``fetch`` — the sentinel seam — instead of silently falling back
+        to direct reads."""
+        if exc is not None:
+            for b in range(run.start, run.stop):
+                if self._run_of.get(b) == tok:
+                    self._error_of[b] = exc
+        self._unplan_locked(tok, run)
 
     def _unplan_locked(self, tok: int, run: Run) -> None:
         """Release a failed run's slot and drop the blocks it still owns."""
@@ -461,6 +516,138 @@ class CoalescedReader:
             if self._run_of.get(b) == tok:  # a resubmission may own b now
                 self._run_of.pop(b, None)
                 self._ready.pop(b, None)
+
+    # ------------------------------------------------------------ fault domain
+    def _device_of(self, array: int):
+        topo = getattr(self.store, "topology", None)
+        if topo is not None and self._placement() is not None:
+            return topo.devices[array]
+        return self.store.device
+
+    def _nominal_run_time(self, array: int, run: Run) -> float:
+        return self._device_of(array).request_time(
+            run.count * self.store.block_size)
+
+    def _account_fault(self, array: int, run: Run, t: float,
+                       kind: str) -> None:
+        acct = getattr(self.store, "account_fault_io", None)
+        if acct is not None:  # duck-typed test stores may not account
+            acct(array, run.count * self.store.block_size, run.count,
+                 t, kind)
+
+    def _guarded_read(self, array: int, run: Run):
+        """Execute one run's real read under the classified fault policy.
+
+        * injected or real *transient* errors retry up to ``retries``
+          times with exponential backoff + jitter, each re-issue charged
+          like any other request plus the modeled backoff stall;
+        * a latency-spike straggler past the p99-derived hedge deadline
+          duplicates the read on the least-busy sibling array
+          (``_note_service_time``);
+        * an array *dropout* marks the array offline in the topology and
+          re-reads through the survivors' recovery path
+          (``_read_degraded``) — training continues degraded;
+        * *permanent* errors (index/decode bugs, exhausted retries)
+          propagate to the caller, which stashes them for ``fetch``.
+        """
+        store = self.store
+        topo = getattr(store, "topology", None)
+        has_arrays = topo is not None and self._placement() is not None
+        if has_arrays and not topo.is_online(array):
+            return self._read_degraded(array, run)
+        fault = getattr(store, "fault", None)
+        attempt = 0
+        while True:
+            try:
+                mult = (fault.on_read(array, run.start, run.count)
+                        if fault is not None else 1.0)
+                blocks = store.read_run(run.start, run.count)
+            except Exception as exc:
+                kind = classify_error(exc)
+                self._account_fault(array, run, 0.0, "error")
+                if kind == "offline" and has_arrays:
+                    topo.mark_offline(getattr(exc, "array", array))
+                    return self._read_degraded(array, run)
+                if kind == "transient" and attempt < self.retries:
+                    attempt += 1
+                    self._charge_retry(array, run, attempt)
+                    continue
+                if kind == "transient":
+                    raise PermanentIOError(
+                        errno.EIO,
+                        f"transient fault persisted past {self.retries} "
+                        f"retries on run {run.start}+{run.count}: "
+                        f"{exc}") from exc
+                raise
+            self._note_service_time(array, run, mult)
+            return blocks
+
+    def _charge_retry(self, array: int, run: Run, attempt: int) -> None:
+        """Charge one re-issue: full run bytes again, plus the modeled
+        exponential backoff (jittered to 0.5-1.5x) as stall time."""
+        backoff = self.retry_backoff_s * (2 ** (attempt - 1))
+        backoff *= 0.5 + float(self._rng.random())
+        t = self._nominal_run_time(array, run) + backoff
+        self._account_fault(array, run, t, "retry")
+
+    def _note_service_time(self, array: int, run: Run, mult: float) -> None:
+        """Track per-array nominal run times for the p99 hedge deadline
+        and settle a latency-spiked run: hedge past the deadline, expose
+        the stall otherwise."""
+        nominal = self._nominal_run_time(array, run)
+        dq = self._svc_times.setdefault(array, deque(maxlen=128))
+        deadline = None
+        if len(dq) >= 16 and self.hedge_deadline_frac > 0:
+            deadline = float(np.quantile(np.fromiter(dq, dtype=np.float64),
+                                         0.99)) * self.hedge_deadline_frac
+        dq.append(nominal)
+        if mult <= 1.0:
+            return
+        spiked = nominal * mult
+        if deadline is not None and spiked > deadline + nominal:
+            # hedge: at the deadline, duplicate the read to the
+            # least-busy sibling array (or the same device's direct path
+            # when there is no sibling); completion is whichever copy
+            # finishes first, so the effective extra time over nominal
+            # is min(straggler, deadline + duplicate) - nominal, charged
+            # with the duplicate's bytes on the hedge target
+            target = self._hedge_target(array)
+            effective = min(spiked,
+                            deadline + self._nominal_run_time(target, run))
+            self._account_fault(target, run,
+                                max(effective - nominal, 0.0), "hedge")
+        else:
+            # below the deadline (or no history yet): the spike is fully
+            # exposed as stall time on the straggling array
+            self._account_fault(array, run, max(spiked - nominal, 0.0),
+                                "stall")
+
+    def _hedge_target(self, array: int) -> int:
+        topo = getattr(self.store, "topology", None)
+        if topo is not None and self._placement() is not None:
+            cands = [a for a in range(topo.n_arrays)
+                     if a != array and topo.is_online(a)]
+            if cands:
+                with topo.lock:
+                    return min(cands, key=lambda a:
+                               topo.array_stats[a].modeled_io_time)
+        return array  # single array: direct-path duplicate
+
+    def _read_degraded(self, array: int, run: Run):
+        """Serve a run whose array is offline.  The bytes come through
+        the survivors' recovery path (parity/replica reconstruction in a
+        real array; here the shared memmap, which is why byte parity
+        holds).  The modeled *time* was charged at submission —
+        ``account_runs`` reroutes offline-array runs onto the surviving
+        arrays' batched rooflines — so the read itself adds no time;
+        here we only tick the degraded counters against the survivor
+        that fronts the recovery path, counting reads actually *served*
+        degraded (a run can be submitted healthy and land after the
+        dropout, or vice versa)."""
+        topo = getattr(self.store, "topology", None)
+        target = topo.degraded_target() if topo is not None else array
+        self._account_fault(target, run, 0.0, "degraded")
+        return self.store.read_run(run.start, run.count)
 
     def _pop_eligible_locked(self):
         """Next (tok, run) from any array with pending work and a free
@@ -491,18 +678,23 @@ class CoalescedReader:
                     entry = self._pop_eligible_locked()
                 gen = self._gen
                 tok, run = entry
+                arr = self._tok_array.get(tok, 0)
+            blocks, failure = None, None
             try:
-                blocks = self.store.read_run(run.start, run.count)
-            except Exception:
-                blocks = None  # surfaced below; the worker must survive
+                blocks = self._guarded_read(arr, run)
+            except Exception as exc:
+                # transient faults were already retried (with backoff)
+                # inside _guarded_read; what reaches here is classified
+                # permanent — the worker survives, the error does too
+                failure = exc
             with self._cv:
                 if gen != self._gen or self._stop:
                     continue  # stale: reset() already zeroed the counters
                 if blocks is None:
-                    # failed read: release the slot and unplan the run so
-                    # waiting consumers fail fast and fall back to a
-                    # direct read_block (which raises the real error)
-                    self._unplan_locked(tok, run)
+                    # failed read: stash the error per block, release the
+                    # slot and unplan the run so waiting consumers fail
+                    # fast by re-raising it from fetch()
+                    self._fail_run_locked(tok, run, failure)
                 else:
                     for i, blk in enumerate(blocks):
                         self._ready[run.start + i] = blk

@@ -131,6 +131,13 @@ class MigrationEngine:
                                    hotness=h_eff)
         diff = np.nonzero((target.array_of != cur.array_of)
                           & (h_eff > 0))[0]
+        # degraded mode: the policy does not know about dropouts — never
+        # move blocks *onto* an offline array (blocks stranded on one
+        # are evacuate()'s job, not the optimizer's)
+        offline = [a for a in range(self.topology.n_arrays)
+                   if not self.topology.is_online(a)]
+        if offline:
+            diff = diff[~np.isin(target.array_of[diff], offline)]
         n_wanted = int(diff.size)
         if n_wanted == 0:
             return [], 0
@@ -176,3 +183,116 @@ class MigrationEngine:
         )
         self.last_report = report
         return report
+
+    # ------------------------------------------------------------ recovery
+    def evacuate(self, tracker_or_hotness=None) -> MigrationReport | None:
+        """Drain every block off this store's offline arrays.
+
+        Degraded-array recovery: unlike :meth:`run`, which optimizes an
+        otherwise-valid placement under a per-epoch budget, evacuation
+        is correctness-driven — it loops budgeted passes through the
+        same durable write path until no block remains stranded, so one
+        epoch boundary fully restores the survivors' roofline.  Returns
+        ``None`` when nothing was stranded.
+        """
+        hot = (tracker_or_hotness.hotness()
+               if isinstance(tracker_or_hotness, HotnessTracker)
+               else tracker_or_hotness)
+        st = self.store.stats
+        r0, w0 = st.modeled_read_time, st.modeled_write_time
+        moved = stranded = 0
+        while True:
+            moves = plan_evacuation(self.store, self.budget_bytes, hot)
+            if not moves:
+                break
+            if moved == 0:
+                stranded = int(np.isin(
+                    self.store.placement.array_of,
+                    [a for a in range(self.topology.n_arrays)
+                     if not self.topology.is_online(a)]).sum())
+            moved += self.store.migrate_blocks(
+                [(m.block_id, m.dst) for m in moves],
+                queue_depth=self.queue_depth)
+        if moved == 0:
+            return None
+        report = MigrationReport(
+            store=self.name,
+            n_wanted=stranded,
+            n_moved=moved,
+            bytes_moved=moved * self.store.block_size,
+            budget_bytes=self.budget_bytes,
+            read_s=st.modeled_read_time - r0,
+            write_s=st.modeled_write_time - w0,
+            blocks_per_array=np.bincount(
+                self.store.placement.array_of,
+                minlength=self.topology.n_arrays).tolist(),
+        )
+        self.last_report = report
+        return report
+
+
+def plan_evacuation(store, budget_bytes: int,
+                    hotness: np.ndarray | None = None) -> list[BlockMove]:
+    """Moves for blocks stranded on offline arrays (degraded mode).
+
+    Hottest-first under the byte budget — but always at least one block
+    per pass, so recovery makes progress even under a sub-block budget
+    (a stranded block pays the degraded-read penalty on every touch,
+    which a too-small budget must not make permanent).  Within the
+    pass, destinations come from a *smooth weighted round-robin* over
+    the stranded ids in ascending order, weighted by each survivor's
+    bandwidth-proportional deficit against current block counts.  Two
+    properties matter, and the sweep order delivers both:
+
+    * **balance** — any contiguous block span's stranded share spreads
+      proportionally over every survivor, so no single array's roofline
+      eats the whole recovered quarter on every later gather (assigning
+      whole contiguous chunks per survivor concentrates each span's
+      stranded blocks on one array — a permanent per-span hot spot);
+    * **locality** — the survivors only have tail slots free, and
+      ``migrate_blocks`` allocates them in ascending block order, so
+      each survivor's received ids map to ascending consecutive locals;
+      within any read span a survivor's stranded ids are a contiguous
+      slice of that sequence, and the reader's local-adjacency re-merge
+      turns them into one sequential tail run (assigning in *hotness*
+      order breaks the id/local monotonicity and shreds run detection).
+    """
+    pl, topo = store.placement, store.topology
+    if pl is None or topo is None:
+        return []
+    offline = [a for a in range(topo.n_arrays) if not topo.is_online(a)]
+    if not offline:
+        return []
+    online = topo.online_arrays()
+    if not online:
+        raise RuntimeError("no online array left to evacuate onto")
+    ids = np.nonzero(np.isin(pl.array_of, offline))[0]
+    if ids.size == 0:
+        return []
+    h = (np.asarray(hotness, dtype=np.float64) if hotness is not None
+         else np.zeros(pl.n_blocks, dtype=np.float64))
+    order = ids[np.argsort(-h[ids], kind="stable")]
+    chunk = np.sort(order[:max(int(budget_bytes) // store.block_size, 1)])
+    bw = np.array([topo.devices[a].array_bandwidth for a in online],
+                  dtype=np.float64)
+    load = np.bincount(pl.array_of, minlength=topo.n_arrays)[online] \
+        .astype(np.float64)
+    # bandwidth-proportional deficits over the post-evacuation total,
+    # largest-remainder rounding — deterministic and exactly exhaustive
+    deficit = np.maximum((load.sum() + chunk.size) * bw / bw.sum() - load,
+                         0.0)
+    if deficit.sum() <= 0:
+        deficit = bw.copy()
+    share = deficit / deficit.sum()
+    # smooth weighted round-robin: sweep ids ascending, each step grant
+    # every survivor its fractional share of credit and send the block
+    # to the most-owed one — proportional in every window, deterministic
+    credit = np.zeros(len(online))
+    moves: list[BlockMove] = []
+    for b in chunk.tolist():
+        credit += share
+        i = int(np.argmax(credit))
+        credit[i] -= 1.0
+        moves.append(BlockMove(int(b), int(pl.array_of[b]),
+                               int(online[i]), float(h[b])))
+    return moves

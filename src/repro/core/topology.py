@@ -82,10 +82,43 @@ class StorageTopology:
         # topology; their per-store _io_locks do not protect these
         # shared IOStats — every array_stats mutation takes this lock
         self.lock = threading.Lock()
+        # degraded mode (core/fault.py dropout faults): an offline array
+        # stops serving I/O; reads of its blocks reroute to survivors
+        # and MigrationEngine.evacuate drains its blocks at the next
+        # epoch boundary
+        self._offline = [False] * len(self.devices)
 
     @property
     def n_arrays(self) -> int:
         return len(self.devices)
+
+    # ------------------------------------------------------------ fault domain
+    def mark_offline(self, array: int) -> None:
+        """Take one array out of service (dropout fault / maintenance)."""
+        self._offline[int(array)] = True
+
+    def mark_online(self, array: int) -> None:
+        """Return a repaired/replaced array to service."""
+        self._offline[int(array)] = False
+
+    def is_online(self, array: int) -> bool:
+        return not self._offline[int(array)]
+
+    def online_arrays(self) -> list[int]:
+        return [a for a in range(self.n_arrays) if not self._offline[a]]
+
+    def degraded_target(self) -> int:
+        """Least-busy online array to serve I/O for an offline one.
+
+        Takes ``self.lock`` — callers must not already hold it.
+        """
+        cands = self.online_arrays()
+        if not cands:
+            from .fault import ArrayOfflineError
+            raise ArrayOfflineError(-1, "every storage array is offline")
+        with self.lock:
+            return min(cands,
+                       key=lambda a: self.array_stats[a].modeled_io_time)
 
     @classmethod
     def uniform(cls, n_arrays: int, like: NVMeModel | None = None,
@@ -118,6 +151,7 @@ class StorageTopology:
         for a, (dev, st) in enumerate(zip(self.devices, self.array_stats)):
             arrays.append({
                 "array": a,
+                "online": not self._offline[a],
                 "bandwidth_GBps": round(dev.array_bandwidth / 1e9, 3),
                 "bytes": st.total_bytes,
                 "n_requests": st.n_requests,
@@ -130,6 +164,7 @@ class StorageTopology:
         mx = max(busys) if busys else 0.0
         return {
             "n_arrays": self.n_arrays,
+            "offline": [a for a in range(self.n_arrays) if self._offline[a]],
             "balance": round(min(busys) / mx, 4) if mx > 0 else 1.0,
             "arrays": arrays,
         }
@@ -435,6 +470,39 @@ def make_policy(name: str, stripe_width_blocks: int = 1) -> PlacementPolicy:
 
 
 # ---------------------------------------------------------------- accounting
+def distribute_offline_runs(placed, topology: StorageTopology):
+    """Reroute offline arrays' run shares onto the survivors.
+
+    ``placed`` is a ``[(array, runs)]`` split; the result is
+    ``[(array, own_runs, recovered_runs)]`` over online arrays only.
+    Each stranded run is cut into near-equal contiguous pieces, one per
+    survivor: a submission costs the *max* over per-array rooflines, so
+    handing one victim an offline array's whole share doubles that
+    array's batch while its siblings idle — spreading the pieces serves
+    the recovery traffic at the survivors' aggregate bandwidth for one
+    extra request head each.
+    """
+    out = {a: (list(rs), []) for a, rs in placed if topology.is_online(a)}
+    stranded = [rs for a, rs in placed if not topology.is_online(a)]
+    if not stranded:
+        return [(a, own, rec) for a, (own, rec) in sorted(out.items())]
+    online = topology.online_arrays()
+    if not online:
+        from .fault import ArrayOfflineError
+        raise ArrayOfflineError(-1, "every storage array is offline")
+    for a in online:
+        out.setdefault(a, ([], []))
+    for rs in stranded:
+        for r in rs:
+            k = min(len(online), r.count)
+            for i in range(k):
+                lo = r.start + (r.count * i) // k
+                hi = r.start + (r.count * (i + 1)) // k
+                if hi > lo:
+                    out[online[i]][1].append(type(r)(lo, hi - lo))
+    return [(a, own, rec) for a, (own, rec) in sorted(out.items())]
+
+
 def topology_plan_cost(placed, block_size: int, topology: StorageTopology,
                        queue_depth) -> tuple[int, int, int, float]:
     """(bytes, n_blocks, n_seq, time) of one split submission.

@@ -32,6 +32,34 @@ import numpy as np
 from ..core.agnes import PrepareReport
 
 
+def _chain_errors(errors: list[BaseException]) -> BaseException | None:
+    """Fold multiple drained producer errors into one raisable exception.
+
+    Python 3.10 has no ``ExceptionGroup``, so the first error becomes
+    the head and every later distinct error is linked behind it through
+    ``__context__`` — the traceback then prints the whole cascade
+    ("During handling of ... another exception occurred").  Identity
+    duplicates (the same object drained twice via sentinel + stash) are
+    dropped; existing context chains are preserved by appending at each
+    chain's tail, with a seen-set guarding against cycles.
+    """
+    unique: list[BaseException] = []
+    for exc in errors:
+        if not any(exc is u for u in unique):
+            unique.append(exc)
+    if not unique:
+        return None
+    head = unique[0]
+    for nxt in unique[1:]:
+        node, seen = head, {id(head)}
+        while node.__context__ is not None and id(node.__context__) not in seen:
+            node = node.__context__
+            seen.add(id(node))
+        if id(nxt) not in seen:
+            node.__context__ = nxt
+    return head
+
+
 @dataclasses.dataclass
 class OverlapReport:
     """Measured overlap for one pipelined epoch."""
@@ -382,16 +410,20 @@ class PipelinedExecutor:
         ``("error", exc, None)`` sentinel — and a producer that errored
         after the stop event never gets to enqueue it at all (``_offer``
         gives up) — so error sentinels are captured from the drain and,
-        after the join, from the producer's stash.
+        after the join, from the producer's stash.  *Every* distinct
+        drained error survives a multi-fault drain: the first is
+        returned (and raised by the caller) with the rest chained behind
+        it via ``__context__``, so a storage fault cascade shows all its
+        casualties in the traceback instead of just the first.
         """
         self._stop.set()
-        leaked: BaseException | None = None
+        errors: list[BaseException] = []
         if self._queue is not None:
             try:  # unblock a producer stuck on a full queue
                 while True:
                     kind, payload, _ = self._queue.get_nowait()
-                    if kind == "error" and leaked is None:
-                        leaked = payload
+                    if kind == "error" and payload is not None:
+                        errors.append(payload)
             except queue.Empty:
                 pass
         if self._producer is not None:
@@ -399,10 +431,10 @@ class PipelinedExecutor:
             if self._producer.is_alive():
                 # keep the handle: the next run_epoch must refuse to start
                 # while a wedged prepare call is still mutating the engine
-                return leaked
+                return _chain_errors(errors)
             self._producer = None
         self._queue = None
-        if leaked is None:
-            leaked = self._producer_error
+        if self._producer_error is not None:
+            errors.append(self._producer_error)
         self._producer_error = None
-        return leaked
+        return _chain_errors(errors)

@@ -1,0 +1,330 @@
+"""Storage fault domain (core/fault.py + the reader/journal/degraded paths).
+
+Covers:
+
+* the schedule grammar + error taxonomy (parse/validate/classify);
+* injector mechanics — deterministic ``at=`` firings, ``count`` caps,
+  sticky dropout, latency multipliers, torn journal writes;
+* the reader's classified handling: bounded retry with byte-exact
+  accounting, retry exhaustion propagating as ``PermanentIOError``
+  through the sentinel seam, p99-deadline hedging;
+* degraded-array mode end to end: byte parity while an array is dark,
+  epoch-boundary evacuation, no residual degraded traffic afterwards;
+* a seeded schedule battery (always on; hypothesis widens it when the
+  package is installed): engine vs fault-free twin, per-minibatch
+  feature/MFG parity — no dropped or duplicated rows under arbitrary
+  seeded fault schedules.  ``REPRO_SLOW=1`` raises the battery width.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (AgnesConfig, AgnesEngine, ArrayOfflineError,
+                        CoalescedReader, FaultInjector, FaultRule,
+                        PermanentIOError, StorageTopology, StripePlacement,
+                        TornWriteError, TransientIOError, classify_error,
+                        recover_store_metadata)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SLOW = os.environ.get("REPRO_SLOW", "0") == "1"
+N_SEEDS = 12 if SLOW else 6          # seeded battery width
+HYP_EXAMPLES = 25 if SLOW else 10    # hypothesis example budget
+
+
+# ---------------------------------------------------------------- harness
+def striped_store(ds, topo, persist=False):
+    _, f = ds.reopen_stores()
+    f.attach_topology(topo, StripePlacement(1).place(f.n_blocks, topo),
+                      persist=persist)
+    return f
+
+
+def engine_for(ds, topo, **over):
+    g, f = ds.reopen_stores()
+    cfg = AgnesConfig(block_size=16384, minibatch_size=64,
+                      hyperbatch_size=4, fanouts=(), feature_cache_rows=1,
+                      graph_buffer_bytes=1 << 20,
+                      feature_buffer_bytes=1 << 20, async_io=False,
+                      placement="stripe", **over)
+    return AgnesEngine(g, f, cfg, topology=topo)
+
+
+def assert_parity(faulty, clean):
+    """Per-minibatch byte parity: no dropped, duplicated or torn rows."""
+    assert len(faulty) == len(clean)
+    for a, b in zip(faulty, clean):
+        assert np.array_equal(a.features, b.features)
+        for x, y in zip(a.mfg.nodes, b.mfg.nodes):
+            assert np.array_equal(x, y)
+
+
+# ---------------------------------------------------------------- grammar
+def test_parse_full_schedule():
+    inj = FaultInjector.parse(
+        "transient:p=0.01;latency:p=0.005,factor=30;"
+        "dropout:array=3,at=400;torn:at=0,count=1", seed=7)
+    kinds = [r.kind for r in inj.rules]
+    assert kinds == ["transient", "latency", "dropout", "torn"]
+    assert inj.rules[1].factor == 30.0
+    assert inj.rules[2].array == 3 and inj.rules[2].at == 400
+    assert inj.rules[3].count == 1
+    assert inj.spec.startswith("transient:")
+    # idempotent: an injector passes through parse unchanged
+    assert FaultInjector.parse(inj) is inj
+
+
+@pytest.mark.parametrize("bad", [
+    "meteor:p=0.5",                 # unknown kind
+    "transient:q=0.5",              # unknown parameter
+    "dropout:at=3",                 # dropout needs array=
+    "",                             # empty schedule
+    ";;",                           # empty after splitting
+])
+def test_parse_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        FaultInjector.parse(bad)
+
+
+def test_classify_error_taxonomy():
+    import errno
+    assert classify_error(TransientIOError(errno.EIO, "x")) == "transient"
+    assert classify_error(ArrayOfflineError(2)) == "offline"
+    assert classify_error(PermanentIOError(errno.EIO, "x")) == "permanent"
+    assert classify_error(TornWriteError(errno.EIO, "x")) == "permanent"
+    assert classify_error(OSError(errno.EAGAIN, "again")) == "transient"
+    assert classify_error(OSError(errno.EACCES, "denied")) == "permanent"
+    assert classify_error(IndexError("bug")) == "permanent"
+    assert ArrayOfflineError(5).array == 5
+    with pytest.raises(ValueError):
+        FaultRule(kind="dropout")   # no array
+
+
+# ---------------------------------------------------------------- injector
+def test_transient_fires_at_op_index():
+    inj = FaultInjector.parse("transient:at=2")
+    assert inj.on_read(0) == 1.0          # op 0
+    assert inj.on_read(0) == 1.0          # op 1
+    with pytest.raises(TransientIOError):
+        inj.on_read(0)                    # op 2
+    assert inj.on_read(0) == 1.0          # op 3: one-shot
+    assert inj.counters["transient"] == 1
+
+
+def test_transient_count_caps_firings():
+    inj = FaultInjector.parse("transient:p=1,count=2")
+    for _ in range(2):
+        with pytest.raises(TransientIOError):
+            inj.on_read(0)
+    for _ in range(8):                    # exhausted: clean forever after
+        assert inj.on_read(0) == 1.0
+    assert inj.counters["transient"] == 2
+
+
+def test_dropout_is_sticky_and_array_scoped():
+    inj = FaultInjector.parse("dropout:array=1,at=3")
+    for _ in range(3):                    # ops 0-2: below the trigger
+        assert inj.on_read(1) == 1.0
+    with pytest.raises(ArrayOfflineError) as ei:
+        inj.on_read(1)                    # op 3: the array drops
+    assert ei.value.array == 1
+    with pytest.raises(ArrayOfflineError):
+        inj.on_read(1)                    # sticky from here on
+    assert inj.on_read(0) == 1.0          # other arrays unaffected
+    assert inj.counters["dropout"] == 1   # one dropout event, not per-op
+
+
+def test_latency_multiplier_and_summary():
+    inj = FaultInjector.parse("latency:at=0,factor=30", seed=1)
+    assert inj.on_read(0) == 30.0
+    assert inj.on_read(0) == 1.0
+    s = inj.summary()
+    assert s["read_ops"] == 2 and s["fired"]["latency"] == 1
+    assert s["seed"] == 1 and s["schedule"].startswith("latency:")
+
+
+# ---------------------------------------------------------------- reader
+def test_reader_retries_transient_with_exact_accounting(tiny_ds):
+    _, f = tiny_ds.reopen_stores()
+    f.attach_fault(FaultInjector.parse("transient:at=0", seed=3))
+    with CoalescedReader(f, max_coalesce_bytes=8 << 20, queue_depth=2,
+                         workers=0, retries=2) as rd:
+        rd.plan([0, 1])                   # one 2-block run; first try fails
+        blk = rd.fetch(0, timeout=5.0)
+        assert blk is not None            # retried to success
+        assert np.array_equal(blk, f.read_block(0))
+        assert rd.fetch(1, timeout=5.0) is not None
+    assert f.stats.io_errors == 1
+    assert f.stats.io_retries == 1
+    # the re-issue is charged byte-exact: the full run read a second time
+    assert f.stats.bytes_retried == 2 * f.block_size
+    assert f.stats.modeled_read_time > 0
+
+
+def test_reader_retry_exhaustion_is_permanent(tiny_ds):
+    _, f = tiny_ds.reopen_stores()
+    f.attach_fault(FaultInjector.parse("transient:p=1"))
+    with CoalescedReader(f, max_coalesce_bytes=8 << 20, queue_depth=2,
+                         workers=0, retries=2) as rd:
+        rd.plan([0])
+        with pytest.raises(PermanentIOError, match="persisted past 2"):
+            rd.fetch(0, timeout=5.0)
+    assert f.stats.io_errors == 3         # initial attempt + 2 retries
+    assert f.stats.io_retries == 2
+
+
+def test_reader_hedges_stragglers_past_p99_deadline(tiny_ds):
+    """With hedging on, a latency spike costs ~the deadline plus a
+    duplicate read; with it off the spike is fully exposed as stall."""
+    def run(frac):
+        topo = StorageTopology.uniform(2)
+        f = striped_store(tiny_ds, topo)
+        f.attach_fault(FaultInjector.parse("latency:p=0.5,factor=200",
+                                           seed=5))
+        with CoalescedReader(f, max_coalesce_bytes=0, queue_depth=4,
+                             workers=0, hedge_deadline_frac=frac) as rd:
+            for _ in range(3):            # enough history for the p99
+                for b in range(f.n_blocks):
+                    rd.plan([b])
+                    assert rd.fetch(b, timeout=5.0) is not None
+        return f
+
+    hedged = run(1.5)
+    exposed = run(0.0)                    # hedging disabled
+    assert hedged.stats.io_hedges > 0
+    # single-block runs: every hedge duplicates exactly one block
+    assert hedged.stats.bytes_hedged == \
+        hedged.stats.io_hedges * hedged.block_size
+    assert exposed.stats.io_hedges == 0
+    # identical seeded spikes, so the comparison isolates the hedge:
+    # capping stragglers at the deadline must beat eating them whole
+    assert hedged.stats.modeled_read_time < exposed.stats.modeled_read_time
+
+
+# ---------------------------------------------------------------- journal
+def test_injected_torn_write_rolls_back(tiny_ds):
+    topo = StorageTopology.uniform(2)
+    f = striped_store(tiny_ds, topo, persist=True)
+    before = np.array(f.placement.array_of)
+    snapshot = [f.read_block_bytes(b) for b in range(f.n_blocks)]
+    f.attach_fault(FaultInjector.parse("torn:at=0", seed=11))
+    victim = int(np.nonzero(before == 1)[0][0])
+    with pytest.raises(TornWriteError):
+        f.migrate_blocks([(victim, 0)])
+    journal = f.path + ".migrate.log"
+    assert os.path.exists(journal)        # the torn tail survived the kill
+    removed = recover_store_metadata(f.path)
+    assert removed[".migrate.log"] == "rolled_back"
+    assert not os.path.exists(journal)
+    # in-memory and reloaded placement both still the old mapping
+    assert np.array_equal(f.placement.array_of, before)
+    _, f2 = tiny_ds.reopen_stores()
+    assert np.array_equal(f2.load_placement(topo).array_of, before)
+    for b in range(f2.n_blocks):
+        assert f2.read_block_bytes(b) == snapshot[b]
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_transient_latency_parity_and_counters(tiny_ds, rng):
+    topo_c, topo_f = StorageTopology.uniform(2), StorageTopology.uniform(2)
+    clean = engine_for(tiny_ds, topo_c)
+    faulty = engine_for(
+        tiny_ds, topo_f, io_retries=8,
+        fault_schedule="transient:p=0.2;latency:p=0.2,factor=25")
+    targets = [rng.choice(256, 64, replace=False) for _ in range(4)]
+    assert_parity(faulty.prepare(targets, epoch=0),
+                  clean.prepare(targets, epoch=0))
+    faults = faulty.io_stats()["faults"]
+    assert faults["injected"]["fired"]["transient"] > 0
+    assert faults["io_errors"] > 0 and faults["io_retries"] > 0
+    assert faults["bytes_retried"] > 0
+    assert faults["injected"]["read_ops"] > 0
+    assert "faults" not in clean.io_stats()
+    clean.close()
+    faulty.close()
+
+
+def test_engine_dropout_degraded_then_evacuates(tiny_ds, rng):
+    topo_c, topo_f = StorageTopology.uniform(2), StorageTopology.uniform(2)
+    clean = engine_for(tiny_ds, topo_c)
+    faulty = engine_for(tiny_ds, topo_f,
+                        fault_schedule="dropout:array=1,at=0",
+                        migrate_budget_bytes=64 << 20)
+    targets = [rng.choice(256, 64, replace=False) for _ in range(4)]
+    # the array goes dark on its first read; training continues at byte
+    # parity through the survivors' recovery path
+    assert_parity(faulty.prepare(targets, epoch=0),
+                  clean.prepare(targets, epoch=0))
+    faults = faulty.io_stats()["faults"]
+    assert faults["offline_arrays"] == [1]
+    assert faults["io_degraded"] > 0 and faults["bytes_degraded"] > 0
+    # epoch boundary: evacuation drains every stranded block
+    rep = faulty.end_epoch()
+    assert rep is not None and "recovery" in rep
+    assert rep["recovery"]["feature"]["n_moved"] > 0
+    for store in (faulty.graph_store, faulty.feature_store):
+        assert not np.any(store.placement.array_of == 1), \
+            "blocks still stranded on the offline array after evacuation"
+    # steady degraded state: nothing lives on the dead array any more,
+    # so a second epoch adds no degraded read traffic — and stays exact
+    clean.end_epoch()
+    d0 = faulty.io_stats()["faults"]["io_degraded"]
+    t2 = [rng.choice(256, 64, replace=False) for _ in range(2)]
+    assert_parity(faulty.prepare(t2, epoch=1), clean.prepare(t2, epoch=1))
+    assert faulty.io_stats()["faults"]["io_degraded"] == d0
+    clean.close()
+    faulty.close()
+
+
+# ------------------------------------------------------- property battery
+def _random_schedule(rng):
+    parts = [f"transient:p={rng.uniform(0.02, 0.2):.3f}",
+             f"latency:p={rng.uniform(0.02, 0.3):.3f},"
+             f"factor={int(rng.integers(5, 60))}"]
+    if rng.random() < 0.5:
+        parts.append(f"dropout:array={int(rng.integers(0, 2))},"
+                     f"at={int(rng.integers(0, 40))}")
+    return ";".join(parts)
+
+
+def _assert_schedule_parity(tiny_ds, spec, seed, rng):
+    """Engine under an adversarial schedule vs its fault-free twin:
+    byte parity every minibatch, through recovery, across epochs."""
+    clean = engine_for(tiny_ds, StorageTopology.uniform(2))
+    faulty = engine_for(tiny_ds, StorageTopology.uniform(2),
+                        fault_schedule=spec, io_retries=10, seed=seed,
+                        migrate_budget_bytes=64 << 20)
+    try:
+        for epoch in range(2):
+            targets = [rng.choice(256, 64, replace=False)
+                       for _ in range(3)]
+            assert_parity(faulty.prepare(targets, epoch=epoch),
+                          clean.prepare(targets, epoch=epoch))
+            faulty.end_epoch()            # evacuates after any dropout
+            clean.end_epoch()
+        assert faulty.io_stats()["faults"]["injected"]["read_ops"] > 0
+    finally:
+        clean.close()
+        faulty.close()
+
+
+def test_fault_schedule_battery_seeded(tiny_ds):
+    """Always-on randomized battery (hypothesis-free fallback)."""
+    for seed in range(N_SEEDS):
+        rng = np.random.default_rng(4000 + seed)
+        _assert_schedule_parity(tiny_ds, _random_schedule(rng), seed, rng)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=HYP_EXAMPLES, deadline=None)
+    def test_fault_schedule_parity_hypothesis(tiny_ds, seed):
+        rng = np.random.default_rng(seed)
+        _assert_schedule_parity(tiny_ds, _random_schedule(rng),
+                                seed % 1000, rng)

@@ -187,7 +187,12 @@ def test_coalesced_reader_run_tokens_survive_start_reuse(tiny_ds):
 
 
 def test_coalesced_reader_survives_failing_read(tiny_ds):
-    """A raising read_run must not kill the worker or wedge the pool."""
+    """A raising read_run must not kill the worker or wedge the pool.
+
+    ``IndexError`` classifies as *permanent* (not a transient errno), so
+    the reader must propagate it through ``fetch`` — no silent ``None``,
+    no blind retry — while the worker pool stays alive for later plans.
+    """
     store, _ = tiny_ds.reopen_stores()
 
     class Flaky:
@@ -210,8 +215,13 @@ def test_coalesced_reader_survives_failing_read(tiny_ds):
                          queue_depth=1, workers=1) as rd:
         rd.plan([0, 1])                       # one run; first read fails
         t0 = time.time()
-        assert rd.fetch(0, timeout=10.0) is None   # fail-fast, no 10s stall
+        with pytest.raises(IndexError, match="injected"):
+            rd.fetch(0, timeout=10.0)         # fail-fast, no 10s stall
         assert time.time() - t0 < 5.0
+        # the sibling block of the failed run surfaces the same error
+        # (stashed per block), then the pool is clean for the next plan
+        with pytest.raises(IndexError, match="injected"):
+            rd.fetch(1, timeout=10.0)
         rd.plan([2])                          # pool must still be alive
         blk = rd.fetch(2, timeout=10.0)
         assert blk is not None and blk.block_id == 2

@@ -166,7 +166,10 @@ def test_migrate_blocks_charges_arrays_and_persists(tiny_ds):
 @pytest.mark.parametrize("crash_at", ["copied", "committed"])
 def test_crash_consistency_between_copy_and_commit(tiny_ds, crash_at):
     """A kill at either crash window reloads to a valid, byte-identical
-    state: old placement before the atomic rename, new placement after."""
+    state — and, since the journal replays, to the *new* placement in
+    both windows: a sealed journal proves the copy phase completed, so
+    recovery rolls the placement commit forward instead of discarding
+    finished work."""
     topo = hetero_topo()
     f = striped_feature_store(tiny_ds, topo)
     before = np.array(f.placement.array_of)
@@ -184,21 +187,83 @@ def test_crash_consistency_between_copy_and_commit(tiny_ds, crash_at):
         f.migrate_blocks([(m.block_id, m.dst) for m in moves], _fault=fault)
     # the journal survives the "kill" ...
     assert os.path.exists(f.path + ".migrate.log")
-    # ... and a reopened store garbage-collects it and loads a complete
-    # mapping: the old one before the rename, the new one after
+    # ... and a reopened store replays it (forward: the seal proves the
+    # copies landed), garbage-collects it, and loads the new mapping
     _, f2 = tiny_ds.reopen_stores()
     assert not os.path.exists(f2.path + ".migrate.log")
     reloaded = f2.load_placement(topo)
     moved = np.array([m.block_id for m in moves])
-    if crash_at == "copied":
-        assert np.array_equal(reloaded.array_of, before)
-    else:
-        assert np.array_equal(reloaded.array_of[moved],
-                              [m.dst for m in moves])
+    assert np.array_equal(reloaded.array_of[moved],
+                          [m.dst for m in moves])
+    unmoved = np.setdiff1d(np.arange(f2.n_blocks), moved)
+    assert np.array_equal(reloaded.array_of[unmoved], before[unmoved])
     for a in range(topo.n_arrays):  # either way the mapping is injective
         mine = reloaded.local_of[reloaded.array_of == a]
         assert len(set(mine.tolist())) == len(mine)
     for b in range(f2.n_blocks):  # and the data never tore
+        assert f2.read_block_bytes(b) == snapshot[b]
+
+
+@pytest.mark.parametrize("journal_state", ["sealed", "torn", "missing"])
+def test_torn_tmp_with_journal_states(tiny_ds, journal_state):
+    """A torn ``.topo.json.tmp`` combined with every journal state:
+
+    * ``sealed``  — the copy phase completed before the kill: recovery
+      discards the tmp and rolls the journal *forward*;
+    * ``torn``    — the journal itself tore (no seal): recovery discards
+      both and keeps the old committed placement;
+    * ``missing`` — only the tmp is stale: discard it, nothing replays.
+
+    In every combination the store reloads byte-identical and the
+    placement stays injective."""
+    topo = hetero_topo()
+    f = striped_feature_store(tiny_ds, topo)
+    before = np.array(f.placement.array_of)
+    snapshot = [f.read_block_bytes(b) for b in range(f.n_blocks)]
+    hot = np.zeros(f.n_blocks)
+    hot[1:5] = 5.0
+    moves, _ = MigrationEngine(f, ONLINE_POLICY,
+                               budget_bytes=4 * f.block_size).plan(hot)
+    journal = f.path + ".migrate.log"
+    if journal_state != "missing":
+        def fault(point):   # kill between seal and metadata commit
+            if point == "copied":
+                raise RuntimeError("simulated kill")
+        with pytest.raises(RuntimeError, match="simulated kill"):
+            f.migrate_blocks([(m.block_id, m.dst) for m in moves],
+                             _fault=fault)
+        assert os.path.exists(journal)
+        if journal_state == "torn":
+            # tear inside the seal record: the copy no longer provably
+            # completed, so replay must refuse to roll forward
+            size = os.path.getsize(journal)
+            with open(journal, "r+b") as jf:
+                jf.truncate(size - 8)
+    with open(f.path + ".topo.json.tmp", "w") as tmp:
+        tmp.write('{"policy": "torn garb')   # interrupted save, any state
+    removed = recover_store_metadata(f.path)
+    assert ".topo.json.tmp" in removed
+    if journal_state == "missing":
+        assert ".migrate.log" not in removed
+    else:
+        assert removed[".migrate.log"] == (
+            "rolled_forward" if journal_state == "sealed" else "rolled_back")
+    assert not os.path.exists(journal)
+    assert not os.path.exists(f.path + ".topo.json.tmp")
+    _, f2 = tiny_ds.reopen_stores()
+    reloaded = f2.load_placement(topo)
+    moved = np.array([m.block_id for m in moves])
+    if journal_state == "sealed":
+        assert np.array_equal(reloaded.array_of[moved],
+                              [m.dst for m in moves])
+        unmoved = np.setdiff1d(np.arange(f2.n_blocks), moved)
+        assert np.array_equal(reloaded.array_of[unmoved], before[unmoved])
+    else:
+        assert np.array_equal(reloaded.array_of, before)
+    for a in range(topo.n_arrays):
+        mine = reloaded.local_of[reloaded.array_of == a]
+        assert len(set(mine.tolist())) == len(mine)
+    for b in range(f2.n_blocks):
         assert f2.read_block_bytes(b) == snapshot[b]
 
 
