@@ -1,0 +1,320 @@
+"""Serving tier under mixed tenancy: QoS latency, throughput, migration.
+
+The serving tier (``core/serving.py``) exists so a latency-sensitive
+inference prepare path can share one storage topology with bulk training
+I/O without either destroying the other.  This benchmark drives real
+concurrent tenants through one :class:`AdmissionController` and gates on
+the subsystem's three claims:
+
+* **inference latency** — p50/p99 of ego-net prepares (k-hop sample +
+  gather) served *while bulk training runs*, vs the same requests on an
+  idle system: the QoS path must hold duel p99 within 3x of idle p99
+  (``MIN_P99_HEADROOM``, expressed as ``3 * idle_p99 / duel_p99 >= 1``).
+  A ``fifo`` (uncoordinated) duel is reported alongside for contrast —
+  there inference queues behind the full training backlog;
+* **training throughput** — the bulk tenant must keep >= 0.8x of its
+  solo modeled I/O rate (``MIN_TRAIN_THROUGHPUT``) with admission
+  stalls charged, and **byte parity** must hold exactly for both
+  tenants vs their solo runs (admission reorders issue order, never
+  bytes);
+* **mid-epoch migration** — the migration tenant runs only in queue
+  slack (a drill asserts it refuses while any tenant has queued work),
+  moves hot blocks mid-epoch through the same admission queues, and the
+  oracle cache schedule is rebuilt from the *remaining* trace
+  afterwards, with post-migration prepares byte-identical to an
+  untouched twin.
+
+Tracked in ``BENCH_serving.json`` and guarded by
+``benchmarks.check_regression`` (p99 headroom + training throughput).
+Timing is modeled (``device_model``) over real memmap reads, so the
+latency numbers are deterministic rooflines, not wall-clock noise.
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+import numpy as np
+
+from .common import WORKDIR, emit, quick_val
+
+from repro.core import (AgnesConfig, AgnesEngine, FeatureBlockStore,
+                        GraphBlockStore, NVMeModel, ServingTier,
+                        StorageTopology, trace_from_plan)
+
+MIN_P99_HEADROOM = 1.0       # 3 * idle_p99 / duel_p99 (>= 1 <=> duel <= 3x)
+MIN_TRAIN_THROUGHPUT = 0.8   # duel training io rate vs solo, stalls charged
+
+N_NODES = 4_096
+RING_K = 8                   # ring neighbors per side (degree 16)
+G_BLOCK = 2048
+F_DIM = 512                  # 2 KiB rows -> one row per feature block
+F_BLOCK = 2048
+MB, N_MB = 64, 4             # training minibatch geometry
+N_ARRAYS = 4
+
+
+def _build_workload() -> tuple[str, str]:
+    gpath = os.path.join(WORKDIR, "serving_ring.graph")
+    fpath = os.path.join(WORKDIR, "serving_ring.feat")
+    if not os.path.exists(gpath + ".meta.json"):
+        offs = np.concatenate([np.arange(-RING_K, 0),
+                               np.arange(1, RING_K + 1)])
+        indices = ((np.arange(N_NODES)[:, None] + offs[None, :])
+                   % N_NODES).astype(np.int64).ravel()
+        indptr = (np.arange(N_NODES + 1, dtype=np.int64) * (2 * RING_K))
+        GraphBlockStore.build(gpath, indptr, indices, block_size=G_BLOCK)
+    if not os.path.exists(fpath + ".meta.json"):
+        rng = np.random.default_rng(7)
+        feats = rng.normal(0, 1, (N_NODES, F_DIM)).astype(np.float32)
+        FeatureBlockStore.build(fpath, feats, block_size=F_BLOCK)
+    return gpath, fpath
+
+
+def _engine(gpath: str, fpath: str, **over) -> AgnesEngine:
+    g = GraphBlockStore.open(gpath, NVMeModel())
+    f = FeatureBlockStore.open(fpath, NVMeModel())
+    kw = dict(block_size=G_BLOCK, minibatch_size=MB,
+              hyperbatch_size=N_MB, fanouts=(RING_K,),
+              graph_buffer_bytes=64 << 10, feature_buffer_bytes=128 << 10,
+              feature_cache_rows=1, async_io=False, io_queue_depth=4,
+              max_coalesce_bytes=64 << 10, placement="stripe")
+    kw.update(over)
+    return AgnesEngine(g, f, AgnesConfig(**kw),
+                       topology=StorageTopology.uniform(N_ARRAYS))
+
+
+def _tier(gpath, fpath, policy="priority", **over):
+    eng = _engine(gpath, fpath, **over)
+    tier = ServingTier(eng, policy=policy)
+    tier.open_tenant("inference", fanouts=(RING_K,))
+    return tier, eng
+
+
+def _train_targets(hb: int) -> list[np.ndarray]:
+    lo = (hb * N_MB * MB) % N_NODES
+    return [(lo + np.arange(j * MB, (j + 1) * MB)) % N_NODES
+            for j in range(N_MB)]
+
+
+def _infer_nodes(i: int) -> np.ndarray:
+    """One user's ego-net seed, marching around the ring."""
+    return np.array([(i * 97) % N_NODES], dtype=np.int64)
+
+
+def _tenant_bytes(tier: ServingTier, name: str) -> int:
+    e = tier.engine_of(name)
+    return (e.graph_store.stats.bytes_read
+            + e.feature_store.stats.bytes_read)
+
+
+def _tenant_io_s(tier: ServingTier, name: str) -> float:
+    e = tier.engine_of(name)
+    return (e.graph_store.stats.modeled_io_time
+            + e.feature_store.stats.modeled_io_time)
+
+
+def _drive(tier, n_hb, n_req, errs):
+    """Run training + inference tenants concurrently through ``tier``."""
+
+    def train():
+        try:
+            for hb in range(n_hb):
+                tier.prepare("training", _train_targets(hb), epoch=0)
+        except BaseException as e:
+            errs.append(e)
+
+    def infer():
+        try:
+            for i in range(n_req):
+                tier.prepare("inference", [_infer_nodes(i)], epoch=1000 + i)
+        except BaseException as e:
+            errs.append(e)
+
+    ts = [threading.Thread(target=train), threading.Thread(target=infer)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=300)
+
+
+# ---------------------------------------------------------------- phases
+def _phase_latency_duel(gpath, fpath) -> dict:
+    n_hb = quick_val(16, 6)
+    n_req = quick_val(96, 48)
+    errs: list[BaseException] = []
+
+    # idle system: the same inference request sequence, nothing else
+    tier_idle, e_idle = _tier(gpath, fpath)
+    for i in range(n_req):
+        tier_idle.prepare("inference", [_infer_nodes(i)], epoch=1000 + i)
+    idle = tier_idle.latency_summary("inference")
+    solo_infer_bytes = _tenant_bytes(tier_idle, "inference")
+
+    # solo training: the bulk job with the topology to itself
+    tier_solo, e_solo = _tier(gpath, fpath)
+    for hb in range(n_hb):
+        tier_solo.prepare("training", _train_targets(hb), epoch=0)
+    solo_train_bytes = _tenant_bytes(tier_solo, "training")
+    solo_train_io = _tenant_io_s(tier_solo, "training")
+
+    # the duel: both tenants concurrently, QoS admission on
+    tier_duel, e_duel = _tier(gpath, fpath)
+    _drive(tier_duel, n_hb, n_req, errs)
+    assert not errs, errs
+    duel = tier_duel.latency_summary("inference")
+    duel_train_io = _tenant_io_s(tier_duel, "training")
+    stall = tier_duel.controller.summary()["tenants"]["training"]["stall_s"]
+
+    # byte parity: admission changed nothing about *what* was read
+    assert _tenant_bytes(tier_duel, "training") == solo_train_bytes, \
+        "training tenant byte parity broken under concurrency"
+    assert _tenant_bytes(tier_duel, "inference") == solo_infer_bytes, \
+        "inference tenant byte parity broken under concurrency"
+
+    headroom = 3.0 * idle["p99_s"] / max(duel["p99_s"], 1e-12)
+    assert headroom >= MIN_P99_HEADROOM, \
+        (f"inference p99 regression: {duel['p99_s']*1e3:.3f}ms under load "
+         f"vs {idle['p99_s']*1e3:.3f}ms idle (> 3x)")
+    frac = solo_train_io / max(duel_train_io + stall, 1e-12)
+    assert frac >= MIN_TRAIN_THROUGHPUT, \
+        (f"training throughput regression: {frac:.3f} < "
+         f"{MIN_TRAIN_THROUGHPUT} of solo with admission stalls charged")
+
+    # contrast: an uncoordinated (fifo) duel — inference queues behind
+    # the whole bulk backlog.  Reported, not floor-gated: the *measured*
+    # backlog at each arrival depends on thread interleaving.
+    tier_fifo, e_fifo = _tier(gpath, fpath, policy="fifo")
+    _drive(tier_fifo, n_hb, n_req, errs)
+    assert not errs, errs
+    fifo = tier_fifo.latency_summary("inference")
+
+    emit("serving/inference_p99_headroom", headroom,
+         f"duel p99 {duel['p99_s']*1e6:.0f}us vs idle "
+         f"{idle['p99_s']*1e6:.0f}us (fifo contrast "
+         f"{fifo['p99_s']*1e6:.0f}us)")
+    emit("serving/training_throughput_frac", frac,
+         f"duel io {duel_train_io*1e3:.2f}ms + stall {stall*1e3:.2f}ms "
+         f"vs solo {solo_train_io*1e3:.2f}ms")
+    out = {
+        "inference": {"idle": idle, "duel": duel, "fifo": fifo,
+                      "p99_headroom": round(headroom, 4),
+                      "bytes": solo_infer_bytes, "byte_parity": True},
+        "training": {"solo_io_s": round(solo_train_io, 6),
+                     "duel_io_s": round(duel_train_io, 6),
+                     "stall_s": round(stall, 6),
+                     "throughput_frac": round(frac, 4),
+                     "bytes": solo_train_bytes, "byte_parity": True},
+        "rooflines": tier_duel.summary(),
+    }
+    for tier, eng in ((tier_idle, e_idle), (tier_solo, e_solo),
+                      (tier_duel, e_duel), (tier_fifo, e_fifo)):
+        tier.close()
+        eng.close()
+    return out
+
+
+def _phase_migration_drill(gpath, fpath) -> dict:
+    """Mid-epoch migration: refuses without slack, runs in slack, moves
+    hot blocks, and rebuilds the oracle schedule from the remaining
+    trace — post-refresh prepares byte-identical to an untouched twin."""
+    n_steps = quick_val(12, 8)
+    consumed = n_steps // 2
+    cfg = dict(fanouts=(), online_placement=True,
+               migrate_budget_bytes=8 << 20, cache_policy="oracle",
+               feature_cache_rows=64)
+    eng = _engine(gpath, fpath, **cfg)
+    tier = ServingTier(eng)
+    # skewed plan: a hot tile hammered every step plus a cold walker —
+    # measured hotness concentrates, so re-placement has real moves
+    hot = np.arange(256)
+    plan = [[hot, np.arange(1024 + i * MB, 1024 + (i + 1) * MB) % N_NODES]
+            for i in range(n_steps)]
+    eng.install_cache_oracle(trace_from_plan(plan))
+    n_total = eng.feature_cache.oracle.n_steps
+
+    # no slack -> the migration tenant must refuse to run
+    tier.controller.note_submit("training", {0: (4, 8192)})
+    blocked = tier.maybe_migrate()
+    assert blocked is None and tier.migrations_blocked == 1, \
+        "migration ran against a tenant's queued backlog"
+    tier.controller.cancel_pending("training")
+
+    for i in range(consumed):
+        tier.prepare("training", plan[i], epoch=0)
+    rep = tier.maybe_migrate()
+    assert rep is not None and tier.migrations_run == 1, \
+        "migration refused to run in queue slack"
+    moved = sum(r["n_moved"] for k, r in rep.items()
+                if isinstance(r, dict) and "n_moved" in r)
+    assert moved > 0, "skewed traffic produced no mid-epoch moves"
+    remaining = n_total - consumed
+    fresh = eng.feature_cache.oracle
+    assert fresh.n_steps == remaining, \
+        "oracle schedule not rebuilt from the remaining trace"
+
+    twin = _engine(gpath, fpath, fanouts=())   # untouched placement, no oracle
+    for i in range(consumed, n_steps):
+        a = tier.prepare("training", plan[i], epoch=0).prepared
+        b = twin.prepare(plan[i], epoch=0)
+        for x, y in zip(a, b):
+            assert np.array_equal(x.features, y.features), \
+                "mid-epoch migration changed served bytes"
+    emit("serving/migration_drill", moved,
+         f"{moved} blocks moved mid-epoch in queue slack, oracle "
+         f"rebuilt for {remaining} remaining steps "
+         f"(blocked {tier.migrations_blocked}x without slack)")
+    out = {"moved_blocks": moved, "blocked_without_slack":
+           tier.migrations_blocked, "oracle_steps_total": n_total,
+           "oracle_steps_remaining": remaining, "post_parity": True,
+           "reports": rep}
+    twin.close()
+    tier.close()
+    eng.close()
+    return out
+
+
+def _phase_inference_server(gpath, fpath) -> dict:
+    """The full embed path: ego-net prepare + jitted forward."""
+    from repro.gnn import GNNTrainer
+
+    eng = _engine(gpath, fpath)
+    tier = ServingTier(eng)
+    tr = GNNTrainer(arch="gcn", in_dim=F_DIM, hidden=16, n_classes=8,
+                    n_layers=1, seed=0, backend="jnp")
+    tr.labels = np.zeros(N_NODES, dtype=np.int32)
+    from repro.core import InferenceServer
+    srv = InferenceServer(tier, tr)
+    n_req = quick_val(12, 6)
+    for i in range(n_req):
+        out = srv.embed(_infer_nodes(i), epoch=i)
+        assert out.shape == (1, 8)
+    again = srv.embed(_infer_nodes(0), epoch=0)
+    first = srv.embed(_infer_nodes(0), epoch=0)
+    assert np.allclose(again, first), "fixed-epoch embed not deterministic"
+    lat = srv.latency_summary()
+    emit("serving/embed_requests", lat["n"],
+         f"p50 {lat['p50_s']*1e6:.0f}us p99 {lat['p99_s']*1e6:.0f}us "
+         f"modeled prepare latency per embed")
+    tier.close()
+    eng.close()
+    return {"requests": lat["n"], "latency": lat}
+
+
+def run() -> dict:
+    gpath, fpath = _build_workload()
+    duel = _phase_latency_duel(gpath, fpath)
+    migration = _phase_migration_drill(gpath, fpath)
+    embed = _phase_inference_server(gpath, fpath)
+    return {
+        "workload": {"n_nodes": N_NODES, "graph_block": G_BLOCK,
+                     "feature_block": F_BLOCK, "dim": F_DIM,
+                     "n_arrays": N_ARRAYS},
+        "duel": duel,
+        "migration": migration,
+        "embed": embed,
+    }
+
+
+if __name__ == "__main__":
+    print(run())

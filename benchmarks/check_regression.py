@@ -18,7 +18,7 @@ import os
 import sys
 
 from . import (bench_cache, bench_faults, bench_io_sched, bench_migration,
-               bench_plan_fusion, bench_striping)
+               bench_plan_fusion, bench_serving, bench_striping)
 
 # file -> [(dotted path into the json payload, floor, description)]
 GUARDS = {
@@ -55,6 +55,16 @@ GUARDS = {
          "(dropout + evacuation, recovery I/O charged)"),
         ("faults.hedge.speedup", bench_faults.MIN_HEDGE_GAIN,
          "hedged duplicate reads vs fully exposed latency stragglers"),
+    ],
+    "BENCH_serving.json": [
+        ("serving.duel.inference.p99_headroom",
+         bench_serving.MIN_P99_HEADROOM,
+         "inference prepare p99 under concurrent bulk training within "
+         "3x of the idle-system p99 (QoS admission)"),
+        ("serving.duel.training.throughput_frac",
+         bench_serving.MIN_TRAIN_THROUGHPUT,
+         "bulk training modeled I/O rate vs solo with admission stalls "
+         "charged, inference tenant live"),
     ],
 }
 

@@ -73,6 +73,17 @@ def main():
     ap.add_argument("--io-retries", type=int, default=2,
                     help="bounded retry budget for transient read faults "
                          "(exhaustion escalates to permanent)")
+    ap.add_argument("--serve-qps", type=int, default=0,
+                    help="serve this many inference embed requests per "
+                         "epoch concurrently with training, through the "
+                         "QoS-aware serving tier (AGNES engine only); "
+                         "prints per-epoch p50/p99 prepare latency")
+    ap.add_argument("--inference-priority", default="high",
+                    choices=["high", "fifo"],
+                    help="admission policy for serve traffic: 'high' = "
+                         "inference preempts bulk training I/O at run "
+                         "granularity, 'fifo' = uncoordinated (inference "
+                         "queues behind the training backlog)")
     args = ap.parse_args()
 
     if args.backend == "pallas":
@@ -94,12 +105,35 @@ def main():
         tr.labels = ds.labels
         io_time = 0.0
         fault_prev = {}
+        tier = srv = None
+        served = 0
+        if args.serve_qps and hasattr(engine, "open_session"):
+            from repro.core import InferenceServer, ServingTier
+            tier = ServingTier(engine, policy=(
+                "priority" if args.inference_priority == "high" else "fifo"))
+            srv = InferenceServer(tier, tr)
+
+        def serve_epoch(epoch, errs):
+            # an embedding service hitting the same storage mid-training
+            rng = np.random.default_rng(100 + epoch)
+            try:
+                srv.params = tr.params  # serve the freshest model
+                for _ in range(args.serve_qps):
+                    srv.embed(rng.integers(0, len(train_nodes), size=1))
+            except BaseException as e:   # surface, don't swallow
+                errs.append(e)
         pipelined = args.pipeline and hasattr(engine, "plan_epoch")
         executor = (PipelinedExecutor(engine, tr,
                                       adaptive_io=args.adaptive_io)
                     if pipelined else None)
         for epoch in range(args.epochs):
             overlap = ""
+            serve_thread, serve_errs = None, []
+            if srv is not None:
+                import threading
+                serve_thread = threading.Thread(
+                    target=serve_epoch, args=(epoch, serve_errs))
+                serve_thread.start()
             if pipelined:
                 # shuffle=False so both engines see identical minibatches
                 # (the sample-equivalence property then makes accuracy exact)
@@ -121,6 +155,16 @@ def main():
                     io_time += engine.last_report.modeled_io_s
                     for p in prepared:
                         losses.append(tr.train_minibatch(p))
+            serveinfo = ""
+            if serve_thread is not None:
+                serve_thread.join()
+                if serve_errs:
+                    raise serve_errs[0]
+                s = srv.latency_summary(since=served)
+                served += s["n"]
+                serveinfo = (f" serve[{s['n']} req "
+                             f"p50 {s['p50_s'] * 1e6:.0f}us "
+                             f"p99 {s['p99_s'] * 1e6:.0f}us]")
             migrate = ""
             if getattr(getattr(engine, "config", None),
                        "online_placement", False):
@@ -152,9 +196,11 @@ def main():
             acc = tr.evaluate(engine.prepare(holdout, epoch=900 + epoch))
             print(f"[{name}] epoch {epoch}: loss {np.mean(losses):.4f} "
                   f"acc {acc:.3f} modeled_io {io_time:.3f}s{overlap}"
-                  f"{migrate}{faultinfo}", flush=True)
+                  f"{serveinfo}{migrate}{faultinfo}", flush=True)
         if executor is not None:
             executor.close()
+        if tier is not None:
+            tier.close()
         return acc, io_time
 
     agnes = AgnesEngine(*ds.reopen_stores(NVMeModel()), AgnesConfig(

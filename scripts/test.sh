@@ -18,6 +18,11 @@
 # migration/journal-replay test files, the --quick faults benchmark
 # (writes BENCH_faults.json) and the regression guard over its floors
 # (degraded 3-of-4 throughput, hedge gain).
+# RUN_SERVING=1 runs just the serving tier: the QoS admission /
+# multi-tenant test file, the --quick serving benchmark (writes
+# BENCH_serving.json) and the regression guard over its floors
+# (inference p99 headroom under concurrent training, bulk training
+# throughput fraction with admission stalls charged).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
@@ -33,5 +38,11 @@ if [[ "${RUN_FAULTS:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q tests/test_fault_injection.py tests/test_migration.py
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick faults
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.check_regression
+fi
+if [[ "${RUN_SERVING:-0}" == "1" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_serving.py
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick serving
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.check_regression
 fi

@@ -16,7 +16,7 @@ from .block_store import (DEFAULT_BLOCK_SIZE, FeatureBlockStore, GraphBlock,
 from .bucket import Bucket, build_bucket
 from .buffer import BlockBuffer
 from .cache_oracle import (NEVER, OracleSchedule, belady_min_misses,
-                           trace_from_plan)
+                           first_use_table, trace_from_plan)
 from .device_model import IOStats, NVMeModel
 from .fault import (ArrayOfflineError, FaultInjector, FaultRule, IOFaultError,
                     PermanentIOError, TornWriteError, TransientIOError,
@@ -32,6 +32,8 @@ from .migration import (BlockMove, MigrationEngine, MigrationReport,
 from .layout import apply_relabel, bfs_locality_order, degree_order
 from .sampling import (MFG, MFGLayer, assemble_layer, layer_from_frontier,
                        next_frontier, sample_indices)
+from .serving import (ALL_ARRAYS, DEFAULT_QOS, AdmissionController,
+                      InferenceServer, QoSClass, ServedPrepare, ServingTier)
 from .session import IOPlan, PrepareSession
 from .topology import (BlockPlacement, ContiguousPlacement,
                        HotnessAwarePlacement, PlacementPolicy,
@@ -60,5 +62,7 @@ __all__ = [
     "recover_store_metadata", "replay_migration_journal", "plan_evacuation",
     "FaultInjector", "FaultRule", "IOFaultError", "TransientIOError",
     "PermanentIOError", "TornWriteError", "ArrayOfflineError",
-    "classify_error",
+    "classify_error", "first_use_table",
+    "ALL_ARRAYS", "DEFAULT_QOS", "AdmissionController", "InferenceServer",
+    "QoSClass", "ServedPrepare", "ServingTier",
 ]

@@ -114,6 +114,11 @@ class AgnesConfig:
     # hedge a run whose service time exceeds this multiple of the
     # array's p99 run time (duplicate-to-sibling read); <= 0 disables
     hedge_deadline_frac: float = 1.5
+    # --- serving tier (core/serving.py) ---
+    # per-fetch deadline of the coalesced readers (previously a
+    # hardcoded 30 s in CoalescedReader.fetch); a serving tenant's QoS
+    # class overrides it per reader at enrollment
+    io_fetch_timeout_s: float = 30.0
     seed: int = 0
 
     def buffer_blocks(self, nbytes: int) -> int:
@@ -265,8 +270,11 @@ class AgnesEngine:
                 feature_store.device, feature_store.stats,
                 queue_depth=cfg.io_queue_depth)
         # recorded feature-access trace (one entry per gather cycle);
-        # install_cache_oracle() replays it as a Belady MIN schedule
+        # install_cache_oracle() replays it as a Belady MIN schedule.
+        # _oracle_trace keeps the installed schedule's source trace so
+        # refresh_cache_oracle() can rebuild from the remaining steps.
         self.feature_trace: list[np.ndarray] = []
+        self._oracle_trace: list[np.ndarray] | None = None
         # hotness telemetry (core/hotness.py): every storage touch from
         # the prepare path lands in per-store trackers; the feature
         # cache reports its hits at a discount.  Always on — the
@@ -337,14 +345,15 @@ class AgnesEngine:
                 stream=g_stream, retries=cfg.io_retries,
                 retry_backoff_s=cfg.io_retry_backoff_s,
                 hedge_deadline_frac=cfg.hedge_deadline_frac,
-                seed=cfg.seed)
+                seed=cfg.seed, fetch_timeout_s=cfg.io_fetch_timeout_s)
             self._f_prefetch = CoalescedReader(
                 feature_store, max_coalesce_bytes=cfg.max_coalesce_bytes,
                 queue_depth=cfg.io_queue_depth, workers=workers,
                 stream=f_stream, retries=cfg.io_retries,
                 retry_backoff_s=cfg.io_retry_backoff_s,
                 hedge_deadline_frac=cfg.hedge_deadline_frac,
-                seed=cfg.seed + 1)
+                seed=cfg.seed + 1,
+                fetch_timeout_s=cfg.io_fetch_timeout_s)
         elif cfg.async_io:
             # legacy per-block read-ahead thread
             self._g_prefetch = BlockPrefetcher(
@@ -398,6 +407,24 @@ class AgnesEngine:
         io_after = self._io_snapshot()
         self.last_report = self._report(t0, t1, t2, io_before, io_after)
         return out
+
+    def open_session(self, targets_per_mb: list[np.ndarray],
+                     epoch: int = 0,
+                     tenant: str | None = None) -> PrepareSession:
+        """Open (but do not run) a staged prepare session.
+
+        The serving tier (``core/serving.py``) drives one engine per
+        tenant through this: the session carries the tenant label, and
+        the caller decides when ``run()`` happens relative to other
+        tenants' sessions.  Requires the hyperbatch path — a staged
+        session *is* the hyperbatch-wide plan.
+        """
+        if not self.config.hyperbatch_enabled:
+            raise RuntimeError("open_session requires hyperbatch_enabled")
+        for p in (self._g_prefetch, self._f_prefetch):
+            if p is not None:
+                p.reset()  # defensive: drop any stale plan from an aborted run
+        return PrepareSession(self, targets_per_mb, epoch, tenant=tenant)
 
     def plan_epoch(self, all_targets: np.ndarray, epoch: int = 0,
                    shuffle: bool = True) -> list[list[np.ndarray]]:
@@ -566,11 +593,43 @@ class AgnesEngine:
         schedule = OracleSchedule.from_trace(
             trace, self.feature_store.n_nodes)
         self.feature_cache.set_oracle(schedule)
+        # stash the normalized trace so a mid-epoch migration can
+        # rebuild the schedule from the steps not yet consumed
+        self._oracle_trace = [np.asarray(t, dtype=np.int64).ravel()
+                              for t in trace]
         if clear:
             self.feature_cache.clear()
         else:
             schedule.reset()
         return schedule
+
+    def refresh_cache_oracle(self):
+        """Mid-epoch oracle refresh (the serving tier's post-migration
+        hook): rebuild the installed Belady schedule from the *remaining*
+        trace — the gather cycles the current schedule has not yet
+        consumed — and re-install it without clearing the cache.
+
+        The fresh schedule's ``next_use`` table is primed with the
+        remaining trace's first-use times, so currently-resident rows
+        keep their true priorities instead of all reading NEVER until
+        their step comes around.  Returns the new schedule, or ``None``
+        when no oracle schedule is installed.
+        """
+        from .cache_oracle import OracleSchedule, first_use_table
+
+        trace = getattr(self, "_oracle_trace", None)
+        sched = getattr(self.feature_cache, "oracle", None)
+        if trace is None or sched is None:
+            return None
+        done = min(sched.step + 1, len(trace))
+        remaining = trace[done:]
+        fresh = OracleSchedule.from_trace(remaining,
+                                          self.feature_store.n_nodes)
+        fresh.next_use[:] = first_use_table(remaining,
+                                            self.feature_store.n_nodes)
+        self.feature_cache.set_oracle(fresh)
+        self._oracle_trace = remaining
+        return fresh
 
     def device_feature_table(self, lane_multiple: int = 128):
         """Pin the feature cache's rows in an HBM-resident mirror.

@@ -137,6 +137,24 @@ def trace_from_plan(plan: list[list[np.ndarray]]) -> list[np.ndarray]:
             for mbs in plan]
 
 
+def first_use_table(trace: list[np.ndarray], n_nodes: int) -> np.ndarray:
+    """Per-node step index of each node's *first* appearance in ``trace``
+    (``NEVER`` for absent nodes).
+
+    This primes a freshly rebuilt schedule's ``next_use`` table for the
+    mid-epoch oracle refresh (``AgnesEngine.refresh_cache_oracle``): a
+    schedule installed mid-epoch starts at ``step=-1`` with an all-NEVER
+    table, which would mark every currently-resident row as
+    never-needed and let arbitrary traffic evict the lot before the
+    first ``advance``.  Seeding true first-use times keeps resident-row
+    priorities exact from the first post-refresh access on.
+    """
+    table = np.full(n_nodes, NEVER, dtype=np.int64)
+    for t in range(len(trace) - 1, -1, -1):   # reverse: earliest use wins
+        table[np.asarray(trace[t], dtype=np.int64)] = t
+    return table
+
+
 # ------------------------------------------------- brute-force reference
 def belady_min_misses(trace: list[np.ndarray], capacity: int) -> int:
     """Independent O(T^2) Belady MIN reference for small traces.

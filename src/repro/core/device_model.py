@@ -105,6 +105,12 @@ class IOStats:
     bytes_hedged: int = 0
     bytes_degraded: int = 0
 
+    # serving tier (core/serving.py): modeled service granted ahead of
+    # this tenant by the admission layer, and how often the aging bound
+    # overrode the priority order to force a grant.
+    admission_wait_s: float = 0.0
+    admission_forced_grants: int = 0
+
     def record_read(self, nbytes: int, t: float, sequential: bool = False) -> None:
         self.n_reads += 1
         self.n_requests += 1
@@ -170,6 +176,14 @@ class IOStats:
         self.io_degraded += int(n_reads)
         self.bytes_degraded += int(nbytes)
 
+    def note_admission_wait(self, t: float, forced: bool = False) -> None:
+        """Account admission-queue delay (modeled service granted ahead
+        of this tenant) without moving bytes; ``forced`` marks a grant
+        the aging bound pushed past the priority order."""
+        self.admission_wait_s += float(t)
+        if forced:
+            self.admission_forced_grants += 1
+
     def record_stall(self, t: float) -> None:
         """Charge exposed stall time (unhedged latency spike, modeled
         retry backoff) against the read roofline without moving bytes."""
@@ -210,10 +224,12 @@ class IOStats:
                   "buffer_hits", "buffer_misses",
                   "cache_hits", "cache_misses", "cache_evictions",
                   "io_errors", "io_retries", "io_hedges", "io_degraded",
-                  "bytes_retried", "bytes_hedged", "bytes_degraded"):
+                  "bytes_retried", "bytes_hedged", "bytes_degraded",
+                  "admission_forced_grants"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         self.modeled_read_time += other.modeled_read_time
         self.modeled_write_time += other.modeled_write_time
+        self.admission_wait_s += other.admission_wait_s
         self.size_histogram.update(other.size_histogram)
         return self
 
@@ -241,6 +257,8 @@ class IOStats:
             "bytes_retried": self.bytes_retried,
             "bytes_hedged": self.bytes_hedged,
             "bytes_degraded": self.bytes_degraded,
+            "admission_wait_s": round(self.admission_wait_s, 6),
+            "admission_forced_grants": self.admission_forced_grants,
         }
 
 

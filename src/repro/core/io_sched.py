@@ -234,12 +234,23 @@ class CoalescedReader:
                  queue_depth: int = 8, workers: int = 2,
                  stream: PlanStream | None = None, retries: int = 2,
                  retry_backoff_s: float = 1e-3,
-                 hedge_deadline_frac: float = 1.5, seed: int = 0):
+                 hedge_deadline_frac: float = 1.5, seed: int = 0,
+                 fetch_timeout_s: float = 30.0):
         self.store = store
         self.max_coalesce_bytes = int(max_coalesce_bytes)
         self.queue_depth = max(int(queue_depth), 1)
         self.workers = max(int(workers), 0)
         self.stream = stream
+        # per-fetch deadline (AgnesConfig.io_fetch_timeout_s; a serving
+        # tenant's QoS class overrides it via bind_admission)
+        self.fetch_timeout_s = float(fetch_timeout_s)
+        # serving tier (core/serving.py): when bound, every run issue
+        # routes through the shared AdmissionController first.  The
+        # reader itself stays single-tenant — per-tenant engines own
+        # per-tenant readers, which is also what scopes the permanent-
+        # error stash (_error_of) per tenant.
+        self.admission = None
+        self.tenant = "default"
         # fault-domain policy (core/fault.py): bounded retry for
         # transient faults, p99-deadline hedging for stragglers
         self.retries = max(int(retries), 0)
@@ -271,6 +282,48 @@ class CoalescedReader:
             for i in range(self.workers)]
         for t in self._threads:
             t.start()
+
+    # ------------------------------------------------------------ admission
+    def bind_admission(self, controller, tenant: str,
+                       fetch_timeout_s: float | None = None) -> None:
+        """Enroll this reader as ``tenant`` of a serving-tier
+        :class:`~repro.core.serving.AdmissionController`: submissions
+        register their per-array backlog and every run issue blocks in
+        ``controller.acquire`` until admitted.  ``fetch_timeout_s``
+        installs the tenant's QoS-derived per-fetch deadline."""
+        self.admission = controller
+        self.tenant = tenant
+        if fetch_timeout_s is not None:
+            self.fetch_timeout_s = float(fetch_timeout_s)
+
+    def _issue_read(self, array: int, run: Run):
+        """One admitted run read — called *outside* ``_cv``.  Without a
+        bound controller this is exactly ``_guarded_read``."""
+        adm = self.admission
+        if adm is None:
+            return self._guarded_read(array, run)
+        nbytes = run.count * self.store.block_size
+        adm.acquire(self.tenant, array, nbytes)
+        try:
+            return self._guarded_read(array, run)
+        finally:
+            adm.complete(self.tenant, array, nbytes)
+
+    def _issue_outside_lock(self, array: int, run: Run):
+        """Drop ``_cv``, issue one run (admission + guarded read),
+        re-take ``_cv``.  Returns ``(blocks, failure)``; the caller must
+        re-validate generation/plan state after the re-acquire — a
+        concurrent ``reset()`` may have raced the read."""
+        self._cv.release()
+        blocks, failure = None, None
+        try:
+            try:
+                blocks = self._issue_read(array, run)
+            except Exception as exc:
+                failure = exc
+        finally:
+            self._cv.acquire()
+        return blocks, failure
 
     # ------------------------------------------------------------ topology
     def _placement(self):
@@ -306,21 +359,44 @@ class CoalescedReader:
                          else block_ids, dtype=np.int64)
         if ids.size == 0:
             return
-        with self._cv:
-            if self._run_of:
-                keep = np.fromiter((int(b) not in self._run_of for b in ids),
-                                   dtype=bool, count=ids.size)
-                ids = ids[keep]
-        if ids.size == 0:
-            return
-        runs = coalesce(ids, self.store.block_size, self.max_coalesce_bytes)
-        self.store.account_runs(runs, self.queue_depths(), stream=self.stream,
-                                max_coalesce_bytes=self.max_coalesce_bytes)
-        pl = self._placement()
-        with self._cv:
+        adm = self.admission
+        if adm is not None:
+            # placement-swap gate: no plan may be split against a
+            # mapping that a migration tenant is mid-swap on
+            adm.submit_begin(self.tenant)
+        try:
+            with self._cv:
+                if self._run_of:
+                    keep = np.fromiter((int(b) not in self._run_of
+                                        for b in ids),
+                                       dtype=bool, count=ids.size)
+                    ids = ids[keep]
+            if ids.size == 0:
+                return
+            runs = coalesce(ids, self.store.block_size,
+                            self.max_coalesce_bytes)
+            self.store.account_runs(runs, self.queue_depths(),
+                                    stream=self.stream,
+                                    max_coalesce_bytes=self.max_coalesce_bytes)
+            pl = self._placement()
+            staged: list[tuple[int, Run]] = []
+            per_array: dict[int, list] = {}
             for r in runs:
                 segments = pl.shard_run(r) if pl is not None else [(0, r)]
                 for a, seg in segments:
+                    staged.append((a, seg))
+                    pa = per_array.setdefault(a, [0, 0])
+                    pa[0] += 1
+                    pa[1] += seg.count * self.store.block_size
+            if adm is not None:
+                # backlog must register *before* any entry is poppable,
+                # or a worker could be granted a run the controller has
+                # not yet seen as pending
+                adm.note_submit(self.tenant,
+                                {a: (p[0], p[1])
+                                 for a, p in per_array.items()})
+            with self._cv:
+                for a, seg in staged:
                     tok = self._run_seq
                     self._run_seq += 1
                     self._pending.setdefault(a, deque()).append((tok, seg))
@@ -328,13 +404,16 @@ class CoalescedReader:
                     self._tok_array[tok] = a
                     for b in range(seg.start, seg.stop):
                         self._run_of[b] = tok
-            self._cv.notify_all()
+                self._cv.notify_all()
+        finally:
+            if adm is not None:
+                adm.submit_end(self.tenant)
 
     # protocol alias shared with BlockPrefetcher (one submission per hop)
     plan = submit
 
     # ------------------------------------------------------------ consume
-    def fetch(self, block_id: int, timeout: float = 30.0):
+    def fetch(self, block_id: int, timeout: float | None = None):
         """Return the decoded block if it is part of the current plan.
 
         Blocks until its run is read (planned blocks are never re-read
@@ -345,8 +424,14 @@ class CoalescedReader:
         already retried in ``_guarded_read``) re-raises that error here,
         so it propagates through the producer's error-sentinel seam
         instead of silently degrading to per-block reads.
+
+        ``timeout=None`` uses the reader's configured deadline
+        (``fetch_timeout_s`` — the ``AgnesConfig.io_fetch_timeout_s``
+        knob, or the tenant's QoS class under a serving tier).
         """
         b = int(block_id)
+        if timeout is None:
+            timeout = self.fetch_timeout_s
         deadline = time.monotonic() + timeout
         with self._cv:
             tok = self._run_of.get(b)
@@ -357,13 +442,20 @@ class CoalescedReader:
                 return None
             arr = self._tok_array.get(tok, 0)
             if self.workers == 0:
-                q = self._pending.get(arr)
-                while b not in self._ready and q and b in self._run_of:
+                while b not in self._ready and b in self._run_of:
+                    q = self._pending.get(arr)
+                    if not q:
+                        break
                     etok, erun = q.popleft()
-                    try:
-                        self._execute_locked(erun, arr)
-                    except Exception as exc:
-                        self._fail_run_locked(etok, erun, exc)
+                    gen = self._gen
+                    blocks, failure = self._issue_outside_lock(arr, erun)
+                    if gen != self._gen:
+                        break  # reset() raced the read: plan state is gone
+                    if failure is not None:
+                        self._fail_run_locked(etok, erun, failure)
+                    elif blocks is not None:
+                        for i, blk in enumerate(blocks):
+                            self._ready[erun.start + i] = blk
             else:
                 while (b not in self._ready and not self._stop
                        and b in self._run_of):
@@ -373,24 +465,30 @@ class CoalescedReader:
                         # while b's run is still queued behind them;
                         # waiting would deadlock the consumer against its
                         # own slots.  Steal the queued run and execute it
-                        # inline — every worker on this array is blocked
-                        # on slot backpressure anyway, so holding the
-                        # lock is free.
+                        # inline, dropping the lock for the read (an
+                        # admission-bound acquire may block, and holding
+                        # ``_cv`` across it would wedge the pool).
                         q = self._pending.get(arr, ())
                         entry = next((e for e in q if e[0] == tok), None)
                         if entry is not None:
                             self._pending[arr].remove(entry)
                             self._ready_runs[arr] = \
                                 self._ready_runs.get(arr, 0) + 1  # balanced below
-                            try:
-                                self._execute_locked(entry[1], arr)
-                            except Exception as exc:
+                            gen = self._gen
+                            blocks, failure = self._issue_outside_lock(
+                                arr, entry[1])
+                            if gen != self._gen:
+                                break  # reset() raced: don't publish
+                            if failure is not None:
                                 # same fail-fast contract as a worker
                                 # read: _guarded_read already retried
                                 # transients, so anything surfacing here
                                 # is permanent — stash it so this (and
                                 # later) fetches re-raise it
-                                self._fail_run_locked(tok, entry[1], exc)
+                                self._fail_run_locked(tok, entry[1], failure)
+                            elif blocks is not None:
+                                for i, blk in enumerate(blocks):
+                                    self._ready[entry[1].start + i] = blk
                             continue
                     # a failed worker read unplans the run, so also wake
                     # on b leaving the plan (fail fast) and on the pool
@@ -453,6 +551,10 @@ class CoalescedReader:
             self._ready_runs.clear()
             self._error_of.clear()
             self._cv.notify_all()
+        if self.admission is not None:
+            # queued-but-never-granted backlog leaves the admission
+            # books; granted in-flight runs complete normally
+            self.admission.cancel_pending(self.tenant)
         if self.stream is not None:
             self.stream.drain()
 
@@ -488,12 +590,6 @@ class CoalescedReader:
         self.close()
 
     # ------------------------------------------------------------ internals
-    def _execute_locked(self, run: Run, array: int = 0) -> None:
-        """Lazy/steal path: read a run on the consumer thread."""
-        blocks = self._guarded_read(array, run)
-        for i, blk in enumerate(blocks):
-            self._ready[run.start + i] = blk
-
     def _fail_run_locked(self, tok: int, run: Run,
                          exc: BaseException | None) -> None:
         """Stash a run's classified-permanent error for every block it
@@ -681,7 +777,7 @@ class CoalescedReader:
                 arr = self._tok_array.get(tok, 0)
             blocks, failure = None, None
             try:
-                blocks = self._guarded_read(arr, run)
+                blocks = self._issue_read(arr, run)
             except Exception as exc:
                 # transient faults were already retried (with backoff)
                 # inside _guarded_read; what reaches here is classified

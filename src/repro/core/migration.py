@@ -106,6 +106,30 @@ class MigrationEngine:
         # wobble) — pure write traffic with negligible roofline value
         self.min_score_fraction = float(min_score_fraction)
         self.last_report: MigrationReport | None = None
+        # serving tier (core/serving.py): when bound, every copy pass is
+        # admitted as the lowest-priority tenant (bulk all-array grants)
+        self.admission = None
+        self.tenant = "migration"
+
+    def bind_admission(self, controller, tenant: str = "migration") -> None:
+        """Enroll this engine's copy traffic as a serving-tier tenant."""
+        self.admission = controller
+        self.tenant = tenant
+
+    def _migrate_admitted(self, moves_list, queue_depth) -> int:
+        """``store.migrate_blocks`` behind the admission layer: the copy
+        pass is one bulk grant across every array (reads from sources,
+        writes to destinations), completed when the pass returns."""
+        if self.admission is None:
+            return self.store.migrate_blocks(moves_list,
+                                             queue_depth=queue_depth)
+        nbytes = len(moves_list) * self.store.block_size
+        self.admission.acquire(self.tenant, None, nbytes)
+        try:
+            return self.store.migrate_blocks(moves_list,
+                                             queue_depth=queue_depth)
+        finally:
+            self.admission.complete(self.tenant, None, nbytes)
 
     @property
     def topology(self) -> StorageTopology:
@@ -166,9 +190,8 @@ class MigrationEngine:
         r0, w0 = st.modeled_read_time, st.modeled_write_time
         moved = 0
         if moves:
-            moved = self.store.migrate_blocks(
-                [(m.block_id, m.dst) for m in moves],
-                queue_depth=self.queue_depth)
+            moved = self._migrate_admitted(
+                [(m.block_id, m.dst) for m in moves], self.queue_depth)
         report = MigrationReport(
             store=self.name,
             n_wanted=n_wanted,
@@ -210,9 +233,8 @@ class MigrationEngine:
                     self.store.placement.array_of,
                     [a for a in range(self.topology.n_arrays)
                      if not self.topology.is_online(a)]).sum())
-            moved += self.store.migrate_blocks(
-                [(m.block_id, m.dst) for m in moves],
-                queue_depth=self.queue_depth)
+            moved += self._migrate_admitted(
+                [(m.block_id, m.dst) for m in moves], self.queue_depth)
         if moved == 0:
             return None
         report = MigrationReport(

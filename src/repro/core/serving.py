@@ -1,0 +1,698 @@
+"""Serving tier: concurrent prepare sessions with QoS-aware I/O admission.
+
+The prepare stack below this module optimizes *one* bulk training job.
+The production shape (ROADMAP north star; "Reducing Memory Contention
+and I/O Congestion for Disk-based GNN Training" shows why it cannot be
+left uncoordinated) is N concurrent tenants over one storage topology:
+
+* ``inference`` — latency-sensitive ego-net prepares (sample a user's
+  k-hop neighborhood, gather through the oracle cache, run the jitted
+  forward) that must jump ahead of queued bulk I/O;
+* ``training``  — the throughput tenant, the existing hyperbatch path;
+* ``migration`` — the background re-placement engine, now a real tenant
+  competing in the same queues, which is what makes **mid-epoch
+  migration** possible at all.
+
+Architecture (the saxml servable pattern, one level down the stack)::
+
+    tenant session ──▶ AdmissionController.acquire(tenant, array, bytes)
+                          │   priority class + token-bucket byte credit
+                          │   + aging (skip bound / wall bound) so bulk
+                          ▼   tenants are delayed, never starved
+    per-array run issue (CoalescedReader) ──▶ per-tenant IOStats roofline
+
+Every tenant runs its own :class:`~repro.core.agnes.AgnesEngine` over
+*reopened* store handles sharing one :class:`StorageTopology` and one
+:class:`~repro.core.topology.BlockPlacement` object (``move_block``
+mutates in place, so a migration pass is visible to every tenant
+atomically).  Per-tenant engines keep byte parity trivially exact —
+admission reorders *when* a run is issued, never what is read — and
+give each tenant its own fault domain: a ``PermanentIOError`` stashed
+in one tenant's reader (``_error_of``) cannot poison another tenant's
+fetch path, because the stash lives per reader and readers are never
+shared across tenants.
+
+Latency model: physical reads are real (memmap) but timing is modeled
+(``device_model``), so a prepare's *served* latency is its own modeled
+I/O plus the modeled queueing delay sampled at arrival —
+:meth:`AdmissionController.queueing_delay_s` charges the in-flight runs
+of every tenant plus the queued backlog admission would let ahead of
+this tenant (priority policy: higher-priority + own backlog; the
+``fifo`` contrast policy: everyone's backlog, which is exactly the
+uncoordinated system the bench compares against).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from .agnes import AgnesEngine
+from .block_store import FeatureBlockStore, GraphBlockStore
+from .device_model import IOStats
+
+# pseudo-array key for bulk grants (migration copy passes) that occupy
+# every array's queue at once rather than one array's
+ALL_ARRAYS = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSClass:
+    """One tenant's admission contract.
+
+    ``priority`` orders eligibility (lower = more urgent).  ``share`` is
+    the token-bucket refill rate: every byte granted to *another* tenant
+    credits this one ``share`` bytes (capped at ``burst_bytes``), so a
+    backlogged low-priority tenant accumulates the right to issue its
+    next run even under sustained high-priority load — the minimum-share
+    guarantee.  ``aging_grants`` / ``aging_wait_s`` bound starvation
+    outright: after that many foreign grants (or that much wall time)
+    with demand posted, the next request is force-granted regardless of
+    priority.  ``fetch_timeout_s`` is the tenant's per-fetch deadline,
+    installed on its readers at enrollment (satellite: the old hardcoded
+    ``fetch(timeout=30.0)`` becomes a QoS-derived knob).
+    """
+
+    name: str
+    priority: int
+    share: float = 0.3
+    burst_bytes: int = 16 << 20
+    fetch_timeout_s: float = 30.0
+    aging_grants: int = 32
+    aging_wait_s: float = 0.5
+
+
+DEFAULT_QOS = {
+    "inference": QoSClass("inference", priority=0, share=0.25,
+                          burst_bytes=4 << 20, fetch_timeout_s=5.0,
+                          aging_grants=16, aging_wait_s=0.25),
+    "training": QoSClass("training", priority=1, share=0.65,
+                         burst_bytes=32 << 20, fetch_timeout_s=30.0,
+                         aging_grants=32, aging_wait_s=0.5),
+    "migration": QoSClass("migration", priority=2, share=0.10,
+                          burst_bytes=8 << 20, fetch_timeout_s=30.0,
+                          aging_grants=64, aging_wait_s=1.0),
+}
+
+
+class _TenantState:
+    """Controller-internal per-tenant accounting."""
+
+    def __init__(self, qos: QoSClass):
+        self.qos = qos
+        self.credit = float(qos.burst_bytes)   # start with a full bucket
+        self.skips = 0            # foreign grants since our last grant
+        self.grants = 0
+        self.forced_grants = 0    # aging overrides of the priority order
+        self.granted_bytes = 0
+        self.granted_runs = 0
+        self.wait_s = 0.0         # wall time spent blocked in acquire
+        self.stall_s = 0.0        # modeled service granted ahead of us
+        self.pending: dict[int, list] = {}    # array -> [runs, bytes]
+        self.inflight: dict[int, list] = {}   # array -> [runs, bytes]
+        self.waiting: dict[int, int] = {}     # array -> blocked acquires
+
+    def _demand_on(self, array: int) -> bool:
+        for a in (array, ALL_ARRAYS) if array != ALL_ARRAYS else \
+                list(self.pending) + list(self.waiting):
+            p = self.pending.get(a)
+            if p is not None and p[0] > 0:
+                return True
+            if self.waiting.get(a, 0) > 0:
+                return True
+        return False
+
+    def summary(self) -> dict:
+        return {
+            "priority": self.qos.priority,
+            "grants": self.grants,
+            "forced_grants": self.forced_grants,
+            "granted_runs": self.granted_runs,
+            "granted_bytes": self.granted_bytes,
+            "wait_s": round(self.wait_s, 6),
+            "stall_s": round(self.stall_s, 6),
+            "credit_bytes": int(self.credit),
+            "pending_runs": sum(p[0] for p in self.pending.values()),
+            "inflight_runs": sum(f[0] for f in self.inflight.values()),
+        }
+
+
+class AdmissionController:
+    """Priority + token-bucket admission over shared per-array queues.
+
+    One controller per :class:`ServingTier`; every tenant reader routes
+    each run issue through :meth:`acquire` (see
+    ``CoalescedReader.bind_admission``).  ``policy="priority"`` is the
+    QoS path; ``policy="fifo"`` grants everything immediately and models
+    queueing delay behind the *full* backlog — the uncoordinated
+    baseline the bench contrasts against.
+    """
+
+    def __init__(self, devices, policy: str = "priority"):
+        if policy not in ("priority", "fifo"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        self.policy = policy
+        self._devices = list(devices)
+        self._cv = threading.Condition()
+        self._tenants: dict[str, _TenantState] = {}
+        self._exclusive_holder: str | None = None
+        self._n_submitting = 0
+        self._granted_service_s = 0.0   # modeled service of all grants
+
+    # ------------------------------------------------------------ enrollment
+    def register(self, tenant: str, qos: QoSClass) -> _TenantState:
+        with self._cv:
+            st = self._tenants.get(tenant)
+            if st is None:
+                st = self._tenants[tenant] = _TenantState(qos)
+            return st
+
+    # ------------------------------------------------------------ demand
+    def note_submit(self, tenant: str, per_array: dict) -> None:
+        """Register a submitted plan's per-array backlog *before* its
+        runs start issuing: ``{array: (n_runs, n_bytes)}``.  Eligibility
+        of lower-priority tenants and the queueing-delay model both read
+        this backlog."""
+        with self._cv:
+            st = self._tenants[tenant]
+            for a, (runs, nbytes) in per_array.items():
+                p = st.pending.setdefault(int(a), [0, 0])
+                p[0] += int(runs)
+                p[1] += int(nbytes)
+            self._cv.notify_all()
+
+    def cancel_pending(self, tenant: str) -> None:
+        """Drop a tenant's queued (not yet granted) backlog — the
+        reader's ``reset()`` hook.  Granted in-flight runs complete
+        normally through :meth:`complete`."""
+        with self._cv:
+            st = self._tenants.get(tenant)
+            if st is not None:
+                st.pending.clear()
+            self._cv.notify_all()
+
+    # ------------------------------------------------------------ grants
+    def acquire(self, tenant: str, array: int | None, nbytes: int) -> float:
+        """Block until ``tenant`` may issue one run of ``nbytes`` on
+        ``array`` (``None`` = a bulk grant on every array).  Returns the
+        wall time spent waiting.  Never blocks forever: the QoS class's
+        aging bounds (grant count and wall clock) force a grant past
+        sustained higher-priority load — except while another tenant
+        holds the exclusive gate, which is itself bounded (a migration
+        pass runs synchronously and releases it)."""
+        a = ALL_ARRAYS if array is None else int(array)
+        with self._cv:
+            st = self._tenants[tenant]
+            st.waiting[a] = st.waiting.get(a, 0) + 1
+            t0 = time.monotonic()
+            svc0 = self._granted_service_s
+            forced = False
+            try:
+                while not self._eligible_locked(tenant, st, a, nbytes):
+                    if self._exclusive_holder is None and (
+                            st.skips >= st.qos.aging_grants
+                            or time.monotonic() - t0 >= st.qos.aging_wait_s):
+                        forced = True
+                        break
+                    self._cv.wait(timeout=max(
+                        st.qos.aging_wait_s - (time.monotonic() - t0),
+                        1e-3))
+            finally:
+                st.waiting[a] -= 1
+            waited = time.monotonic() - t0
+            st.wait_s += waited
+            st.stall_s += self._granted_service_s - svc0
+            if forced:
+                st.forced_grants += 1
+            self._grant_locked(st, a, nbytes)
+            self._cv.notify_all()
+            return waited
+
+    def try_acquire(self, tenant: str, array: int | None,
+                    nbytes: int) -> bool:
+        """Non-blocking :meth:`acquire` (deterministic unit testing):
+        grant iff eligible right now (or the skip-count aging bound has
+        been reached)."""
+        a = ALL_ARRAYS if array is None else int(array)
+        with self._cv:
+            st = self._tenants[tenant]
+            aged = (self._exclusive_holder is None
+                    and st.skips >= st.qos.aging_grants)
+            if not self._eligible_locked(tenant, st, a, nbytes) and not aged:
+                return False
+            if aged and not self._eligible_locked(tenant, st, a, nbytes):
+                st.forced_grants += 1
+            self._grant_locked(st, a, nbytes)
+            self._cv.notify_all()
+            return True
+
+    def complete(self, tenant: str, array: int | None, nbytes: int) -> None:
+        a = ALL_ARRAYS if array is None else int(array)
+        with self._cv:
+            st = self._tenants.get(tenant)
+            if st is not None:
+                fl = st.inflight.get(a)
+                if fl is not None:
+                    fl[0] = max(fl[0] - 1, 0)
+                    fl[1] = max(fl[1] - int(nbytes), 0)
+            self._cv.notify_all()
+
+    def _eligible_locked(self, tenant: str, st: _TenantState, array: int,
+                         nbytes: int) -> bool:
+        if self._exclusive_holder is not None:
+            return tenant == self._exclusive_holder
+        if self.policy == "fifo":
+            return True
+        higher = any(
+            u.qos.priority < st.qos.priority and u._demand_on(array)
+            for name, u in self._tenants.items() if name != tenant)
+        if not higher:
+            return True               # work-conserving: nobody urgent waits
+        return st.credit >= nbytes    # minimum-share token bucket
+
+    def _grant_locked(self, st: _TenantState, array: int,
+                      nbytes: int) -> None:
+        nbytes = int(nbytes)
+        st.grants += 1
+        st.granted_runs += 1
+        st.granted_bytes += nbytes
+        st.skips = 0
+        st.credit = max(st.credit - nbytes, -float(st.qos.burst_bytes))
+        self._granted_service_s += self._service_s(array, 1, nbytes)
+        for u in self._tenants.values():
+            if u is st or not any(
+                    p[0] > 0 for p in u.pending.values()) \
+                    and not any(w > 0 for w in u.waiting.values()):
+                continue
+            u.credit = min(u.credit + u.qos.share * nbytes,
+                           float(u.qos.burst_bytes))
+            u.skips += 1
+        # pending -> inflight
+        p = st.pending.get(array)
+        if p is not None and p[0] > 0:
+            p[0] -= 1
+            p[1] = max(p[1] - nbytes, 0)
+        fl = st.inflight.setdefault(array, [0, 0])
+        fl[0] += 1
+        fl[1] += nbytes
+
+    # ------------------------------------------------------------ delay model
+    def _service_s(self, array: int, runs: int, nbytes: int) -> float:
+        if runs <= 0 and nbytes <= 0:
+            return 0.0
+        dev = self._devices[0] if array == ALL_ARRAYS else \
+            self._devices[min(array, len(self._devices) - 1)]
+        return dev.batch_time(nbytes, n_random=runs)
+
+    def queueing_delay_s(self, tenant: str) -> float:
+        """Modeled delay a request arriving *now* waits before its own
+        first run issues: the max over arrays of the service of (a)
+        every tenant's in-flight runs plus (b) the queued backlog this
+        policy would grant ahead of ``tenant`` — higher-priority + its
+        own backlog under ``priority``, everyone's under ``fifo``."""
+        with self._cv:
+            st = self._tenants[tenant]
+            delay = 0.0
+            for a in range(len(self._devices)):
+                runs = nbytes = 0
+                for name, u in self._tenants.items():
+                    for key in (a, ALL_ARRAYS):
+                        fl = u.inflight.get(key)
+                        if fl is not None:
+                            runs += fl[0]
+                            nbytes += fl[1]
+                    ahead = (self.policy == "fifo" or name == tenant
+                             or u.qos.priority < st.qos.priority)
+                    if ahead:
+                        for key in (a, ALL_ARRAYS):
+                            p = u.pending.get(key)
+                            if p is not None:
+                                runs += p[0]
+                                nbytes += p[1]
+                delay = max(delay, self._service_s(a, runs, nbytes))
+            return delay
+
+    # ------------------------------------------------------------ exclusive
+    def submit_begin(self, tenant: str) -> None:
+        """Plan-submission gate: blocks while the exclusive (placement
+        swap) gate is held by someone else, so no plan is split against
+        a mapping that is mid-swap."""
+        with self._cv:
+            while (self._exclusive_holder is not None
+                   and tenant != self._exclusive_holder):
+                self._cv.wait(timeout=0.05)
+            self._n_submitting += 1
+
+    def submit_end(self, tenant: str) -> None:
+        with self._cv:
+            self._n_submitting = max(self._n_submitting - 1, 0)
+            self._cv.notify_all()
+
+    def queue_slack(self) -> bool:
+        """True when no tenant has queued, in-flight or mid-submit work."""
+        with self._cv:
+            return self._slack_locked()
+
+    def _slack_locked(self) -> bool:
+        if self._n_submitting:
+            return False
+        for u in self._tenants.values():
+            if any(p[0] > 0 for p in u.pending.values()):
+                return False
+            if any(f[0] > 0 for f in u.inflight.values()):
+                return False
+        return True
+
+    def try_exclusive(self, holder: str) -> bool:
+        """Claim the exclusive gate iff the queues have slack *right
+        now* — the mid-epoch migration precondition.  Non-blocking by
+        design: migration must only run in slack, never create it."""
+        with self._cv:
+            if self._exclusive_holder is not None or not self._slack_locked():
+                return False
+            self._exclusive_holder = holder
+            return True
+
+    def end_exclusive(self) -> None:
+        with self._cv:
+            self._exclusive_holder = None
+            self._cv.notify_all()
+
+    def summary(self) -> dict:
+        with self._cv:
+            return {
+                "policy": self.policy,
+                "tenants": {name: st.summary()
+                            for name, st in self._tenants.items()},
+            }
+
+
+@dataclasses.dataclass
+class ServedPrepare:
+    """One tenant prepare, with its served-latency decomposition."""
+
+    prepared: list                # PreparedMinibatch list
+    latency_s: float              # queue_delay_s + io_s
+    queue_delay_s: float          # modeled admission delay at arrival
+    io_s: float                   # the session's own modeled I/O delta
+
+
+class ServingTier:
+    """N tenants over one engine's storage topology.
+
+    The constructor enrolls ``engine`` as the ``training`` tenant (its
+    readers route through the shared :class:`AdmissionController`);
+    :meth:`open_tenant` reopens the on-disk stores against the *same*
+    topology + placement objects and enrolls a new engine per tenant.
+    :meth:`prepare` serves one session and records its modeled latency
+    in the tenant's reservoir (p50/p99 via :meth:`latency_summary`).
+
+    With the engine's ``online_placement`` on, the migration engines are
+    re-registered as the lowest-priority tenant and
+    :meth:`maybe_migrate` runs a **mid-epoch** pass whenever the queues
+    have slack — followed by a mid-epoch oracle refresh
+    (``AgnesEngine.refresh_cache_oracle``) on every enrolled engine.
+    """
+
+    def __init__(self, engine: AgnesEngine, qos: dict | None = None,
+                 policy: str = "priority", tenant: str = "training"):
+        self.engine = engine
+        self.qos = dict(DEFAULT_QOS)
+        if qos:
+            self.qos.update(qos)
+        if engine.topology is not None:
+            devices = list(engine.topology.devices)
+        else:
+            devices = [engine.graph_store.device]
+        self.controller = AdmissionController(devices, policy=policy)
+        self._handles: dict[str, dict] = {}
+        self._lat_lock = threading.Lock()
+        self.migration_attempts = 0
+        self.migrations_blocked = 0
+        self.migrations_run = 0
+        self._enroll(tenant, engine, own=False)
+        if engine._migrations:
+            self.register_migration()
+
+    # ------------------------------------------------------------ tenants
+    def _qos_of(self, name: str) -> QoSClass:
+        q = self.qos.get(name)
+        if q is None:
+            q = dataclasses.replace(self.qos["training"], name=name)
+            self.qos[name] = q
+        return q
+
+    def _enroll(self, name: str, eng: AgnesEngine, own: bool) -> None:
+        q = self._qos_of(name)
+        self.controller.register(name, q)
+        for rd in (eng._g_prefetch, eng._f_prefetch):
+            if rd is not None and hasattr(rd, "bind_admission"):
+                rd.bind_admission(self.controller, name,
+                                  fetch_timeout_s=q.fetch_timeout_s)
+        self._handles[name] = {"engine": eng, "own": own, "latencies": []}
+
+    def open_tenant(self, name: str, qos: QoSClass | None = None,
+                    **config_overrides) -> AgnesEngine:
+        """Enroll a new tenant: reopen the stores over the shared
+        topology/placement and build it an engine.
+
+        ``config_overrides`` patch the primary engine's
+        :class:`AgnesConfig` (e.g. ``fanouts=(8, 8)`` for a 2-hop
+        ego-net path).  Tenants never drive placement themselves
+        (``online_placement`` off) and default to a clean fault domain
+        (``fault_schedule=None``) — pass either explicitly to override.
+        """
+        if name in self._handles:
+            return self._handles[name]["engine"]
+        if qos is not None:
+            self.qos[name] = qos
+        base = self.engine
+        safe = {"online_placement": False, "fault_schedule": None,
+                "record_feature_trace": False}
+        safe.update(config_overrides)
+        cfg = dataclasses.replace(base.config, **safe)
+        g = GraphBlockStore.open(base.graph_store.path,
+                                 base.graph_store.device)
+        f = FeatureBlockStore.open(base.feature_store.path,
+                                   base.feature_store.device)
+        if base.topology is not None:
+            # the placement *objects* are shared: move_block mutates the
+            # arrays in place, so a migration pass lands on every tenant
+            g.attach_topology(base.topology, base.graph_store.placement,
+                              persist=False)
+            f.attach_topology(base.topology, base.feature_store.placement,
+                              persist=False)
+        eng = AgnesEngine(g, f, cfg, topology=base.topology)
+        self._enroll(name, eng, own=True)
+        return eng
+
+    def engine_of(self, name: str) -> AgnesEngine:
+        return self._handles[name]["engine"]
+
+    @property
+    def tenants(self) -> list[str]:
+        return list(self._handles)
+
+    # ------------------------------------------------------------ serve
+    def prepare(self, tenant: str, targets_per_mb: list,
+                epoch: int = 0) -> ServedPrepare:
+        """Serve one prepare session for ``tenant``.
+
+        Latency = the modeled queueing delay sampled at arrival (the
+        backlog admission puts ahead of this tenant) + the session's own
+        modeled I/O delta.  Bytes are unaffected by admission — only
+        issue *order* changes — so per-tenant byte parity against a solo
+        run holds exactly (``tests/test_serving.py``).
+        """
+        h = self._handles[tenant]
+        eng = h["engine"]
+        queue_delay = self.controller.queueing_delay_s(tenant)
+        io0 = _modeled_io_s(eng)
+        prepared = eng.open_session(targets_per_mb, epoch=epoch,
+                                    tenant=tenant).run()
+        io_s = _modeled_io_s(eng) - io0
+        served = ServedPrepare(prepared, queue_delay + io_s,
+                               queue_delay, io_s)
+        with self._lat_lock:
+            h["latencies"].append(served.latency_s)
+        return served
+
+    def latency_summary(self, tenant: str, since: int = 0) -> dict:
+        """Quantiles over the tenant's served latencies; ``since`` slices
+        off already-reported requests (per-epoch windows)."""
+        with self._lat_lock:
+            lat = np.asarray(self._handles[tenant]["latencies"][since:],
+                             dtype=np.float64)
+        if lat.size == 0:
+            return {"n": 0, "p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
+        return {
+            "n": int(lat.size),
+            "p50_s": float(np.quantile(lat, 0.5)),
+            "p99_s": float(np.quantile(lat, 0.99)),
+            "mean_s": float(lat.mean()),
+        }
+
+    def tenant_roofline(self, tenant: str) -> dict:
+        """Per-tenant roofline: the tenant engine's merged
+        :class:`IOStats` with the admission counters folded in."""
+        eng = self._handles[tenant]["engine"]
+        merged = IOStats().merge(eng.graph_store.stats) \
+                          .merge(eng.feature_store.stats)
+        adm = self.controller.summary()["tenants"].get(tenant, {})
+        merged.note_admission_wait(adm.get("stall_s", 0.0),
+                                   forced=0)
+        merged.admission_forced_grants = adm.get("forced_grants", 0)
+        return {"io": merged.summary(), "admission": adm,
+                "latency": self.latency_summary(tenant)}
+
+    def summary(self) -> dict:
+        return {
+            "policy": self.controller.policy,
+            "tenants": {name: self.tenant_roofline(name)
+                        for name in self._handles},
+            "migration": {"attempts": self.migration_attempts,
+                          "blocked": self.migrations_blocked,
+                          "run": self.migrations_run},
+        }
+
+    # ------------------------------------------------------------ migration
+    def register_migration(self) -> None:
+        """Re-register the primary engine's migration engines as the
+        lowest-priority tenant: their copy grants flow through the same
+        admission queues (bulk ``ALL_ARRAYS`` grants), so migration
+        competes rather than preempts."""
+        self.controller.register("migration", self._qos_of("migration"))
+        for _name, mig, _tracker in self.engine._migrations:
+            mig.bind_admission(self.controller, "migration")
+
+    def maybe_migrate(self) -> dict | None:
+        """Mid-epoch migration: run one budgeted re-placement pass *iff*
+        the queues have slack right now, then refresh every tenant's
+        oracle schedule from the remaining trace.
+
+        Returns the per-store migration summaries, or ``None`` when the
+        pass was skipped (no slack, a session open, or no migration
+        engines configured).  The slack check is the whole point — the
+        acceptance drill asserts migration proceeds *only* in queue
+        slack, never under a tenant's open I/O plan.
+        """
+        eng = self.engine
+        if not eng._migrations:
+            return None
+        self.migration_attempts += 1
+        if not self.controller.try_exclusive("migration"):
+            self.migrations_blocked += 1
+            return None
+        try:
+            for h in self._handles.values():
+                e = h["engine"]
+                if e._in_session or not all(
+                        getattr(rd, "idle", True)
+                        for rd in (e._g_prefetch, e._f_prefetch)
+                        if rd is not None):
+                    self.migrations_blocked += 1
+                    return None
+            reports = {}
+            for name, mig, tracker in eng._migrations:
+                mig.queue_depth = eng.io_queue_depths()
+                reports[name] = mig.run(tracker.hotness()).summary()
+        finally:
+            self.controller.end_exclusive()
+        self.migrations_run += 1
+        # mid-epoch oracle refresh (ROADMAP PR-6 follow-on): rebuild each
+        # installed Belady schedule from the steps not yet consumed
+        refreshed = {}
+        for name, h in self._handles.items():
+            sched = h["engine"].refresh_cache_oracle()
+            if sched is not None:
+                refreshed[name] = sched.n_steps
+        if refreshed:
+            reports["oracle_refresh_steps"] = refreshed
+        return reports
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        """Close every tenant engine this tier opened (the primary
+        engine stays the caller's to close)."""
+        for h in self._handles.values():
+            if h["own"]:
+                h["engine"].close()
+
+
+class InferenceServer:
+    """Low-latency embedding facade over a :class:`ServingTier`.
+
+    ``embed(node_ids)`` = one ego-net prepare through the ``inference``
+    tenant (k-hop sample + oracle-cache gather) followed by the jitted
+    GNN forward — the path a production embedding service runs per user
+    request.  Model parameters come from a
+    :class:`~repro.gnn.training.GNNTrainer` (the co-trained model) or
+    explicit ``params``/``arch``/``backend``.
+
+    The tenant's engine is opened with ``fanouts`` matching the model's
+    layer count (an L-layer GNN consumes an L-hop MFG).
+    """
+
+    def __init__(self, tier: ServingTier, trainer=None, *, params=None,
+                 arch: str = "gcn", backend: str = "jnp", labels=None,
+                 fanouts=None, tenant: str = "inference",
+                 **tenant_overrides):
+        if trainer is not None:
+            params = trainer.params
+            arch = trainer.arch
+            backend = trainer.backend
+            if labels is None:
+                labels = getattr(trainer, "labels", None)
+            if fanouts is None:
+                fanouts = tuple([8] * trainer.n_layers)
+        if params is None:
+            raise ValueError("need a trainer or explicit params")
+        self.tier = tier
+        self.tenant = tenant
+        self.params = params
+        self.arch = arch
+        self.backend = backend
+        if fanouts is None:
+            fanouts = tier.engine.config.fanouts
+        self.engine = tier.open_tenant(tenant, fanouts=tuple(fanouts),
+                                       **tenant_overrides)
+        n_nodes = self.engine.graph_store.n_nodes
+        self._labels = (np.asarray(labels) if labels is not None
+                        else np.zeros(n_nodes, dtype=np.int32))
+        self._fwd = None   # jitted forward, built on first embed
+        self._n_requests = 0
+
+    def embed(self, node_ids, epoch: int | None = None) -> np.ndarray:
+        """Embeddings (model outputs) for ``node_ids``, row-aligned with
+        the input order.  ``epoch`` seeds the neighbor sampler — fix it
+        for reproducible sampling, or leave ``None`` for a fresh
+        per-request seed."""
+        import jax
+
+        from ..gnn.models import gnn_apply, pad_mfg
+
+        if self._fwd is None:
+            self._fwd = jax.jit(gnn_apply,
+                                static_argnames=("arch", "backend"))
+        nodes = np.asarray(node_ids, dtype=np.int64).ravel()
+        if epoch is None:
+            epoch = 1_000_000 + self._n_requests
+        self._n_requests += 1
+        served = self.tier.prepare(self.tenant, [nodes], epoch=epoch)
+        p = served.prepared[0]
+        mfg = pad_mfg(p.mfg, p.features, self._labels)
+        out = np.asarray(self._fwd(self.params, mfg, self.arch,
+                                   self.backend))
+        # session frontiers are sorted-unique; map back to input order
+        uniq = p.targets
+        return out[:len(uniq)][np.searchsorted(uniq, nodes)]
+
+    def latency_summary(self, since: int = 0) -> dict:
+        return self.tier.latency_summary(self.tenant, since=since)
+
+
+def _modeled_io_s(eng: AgnesEngine) -> float:
+    return (eng.graph_store.stats.modeled_io_time
+            + eng.feature_store.stats.modeled_io_time)

@@ -76,9 +76,12 @@ class PrepareSession:
     """
 
     def __init__(self, engine, targets_per_mb: list[np.ndarray],
-                 epoch: int = 0):
+                 epoch: int = 0, tenant: str | None = None):
         self.engine = engine
         self.epoch = epoch
+        # serving-tier label (core/serving.py): which tenant this
+        # session's I/O is admitted as; None outside a serving tier
+        self.tenant = tenant
         self.frontiers = [np.unique(np.asarray(t, dtype=np.int64))
                           for t in targets_per_mb]
         self.mfgs = [MFG(nodes=[f], layers=[]) for f in self.frontiers]

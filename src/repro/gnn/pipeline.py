@@ -189,12 +189,17 @@ class PipelinedExecutor:
     def __init__(self, engine, trainer, depth: int = 2,
                  adaptive_io: bool = False,
                  io_queue_depth_bounds: tuple[int, int] = (2, 32),
-                 check_cache_invariants: bool = False):
+                 check_cache_invariants: bool = False,
+                 tenant: str = "training"):
         if depth < 1:
             raise ValueError("depth must be >= 1")
         self.engine = engine
         self.trainer = trainer
         self.depth = depth
+        # serving-tier fault isolation: producer errors are tagged with
+        # this label, so a fault surfacing from one tenant's pipeline is
+        # attributable (and testably scoped) to that tenant
+        self.tenant = tenant
         self.adaptive_io = adaptive_io
         self.io_queue_depth_bounds = io_queue_depth_bounds
         # debug/stress knob: assert the feature cache's slot_of/node_at
@@ -255,12 +260,19 @@ class PipelinedExecutor:
             except BaseException as exc:  # propagate into the consumer
                 # also stash it: a stopped consumer never drains the queue,
                 # and the sentinel may not even get in (_offer gives up on
-                # stop) — _shutdown surfaces it either way
+                # stop) — _shutdown surfaces it either way.  Tag the
+                # error with this executor's tenant so a serving tier
+                # can attribute (and scope) the failure.
+                try:
+                    exc.tenant = self.tenant
+                except Exception:
+                    pass  # exotic exception types may reject attributes
                 self._producer_error = exc
                 self._offer(q, stop, ("error", exc, None))
 
-        self._producer = threading.Thread(target=produce, daemon=True,
-                                          name="agnes-prepare-pipeline")
+        self._producer = threading.Thread(
+            target=produce, daemon=True,
+            name=f"agnes-prepare-{self.tenant}")
         losses: list[float] = []
         reports: list[PrepareReport] = []
         queue_depths: list = []  # scalar per hyperbatch, or {array: depth}
