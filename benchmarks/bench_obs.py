@@ -1,0 +1,152 @@
+"""Telemetry overhead + Fig.2 breakdown fidelity gate (``obs``).
+
+Two floor-guarded measurements over the ``bench_io`` sparse-touch
+workload (``benchmarks/check_regression.py`` re-asserts both from
+``BENCH_obs.json``):
+
+* **overhead** — the same hyperbatch prepare, wall-clocked with tracing
+  off vs tracing on, fresh engine per repeat (warm buffers would skip
+  the I/O and flatter the instrumented path).  Wall clocks on a shared
+  1-core container carry ±30% run-to-run noise — far above the ~0.5%
+  the instrumentation actually costs — so the gated ratio is the max of
+  the best-of-N wall ratio and a *deterministic decomposed estimate*:
+  ``off / (off + n_events × per_event_cost)`` with the per-event
+  recording cost measured in a tight loop on the same recorder class.
+  Either a per-event cost blow-up (expensive formatting on the hot
+  path) or an event-count explosion on this fixed workload trips it.
+* **breakdown** — a traced pipelined epoch; the Fig.2 decomposition
+  reconstructed from the trace (``fig2_breakdown``) must agree with the
+  :class:`~repro.gnn.pipeline.OverlapReport` wall times the executor
+  measured directly.  The spans reuse the report's own ``perf_counter``
+  readings, so agreement is structural, not a lucky race.  The exported
+  Chrome object is schema-validated in the same pass.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import TraceRecorder, fig2_breakdown, validate_chrome_trace
+from repro.gnn import GNNTrainer, PipelinedExecutor
+
+from .common import emit, get_dataset, make_agnes, quick_val, targets_for
+
+# wall-clock floor: prepare with tracing on may cost at most ~5% over
+# tracing off (disabled telemetry is one branch and is covered for free)
+MIN_OFF_ON_RATIO = 0.952
+# trace-derived Fig.2 bars vs OverlapReport wall times (min of the
+# prepare and train agreements, each min/max of the two readings)
+MIN_BREAKDOWN_AGREEMENT = 0.98
+
+
+def _prepare_wall(ds, targets, kw, *, trace: bool):
+    eng = make_agnes(ds, trace=trace, **kw)
+    t0 = time.perf_counter()
+    eng.prepare(targets, epoch=0)
+    dt = time.perf_counter() - t0
+    n_ev = eng.telemetry.trace.n_emitted if trace else 0
+    eng.close()
+    return dt, n_ev
+
+
+def _agreement(a: float, b: float) -> float:
+    return min(a, b) / max(max(a, b), 1e-12)
+
+
+def _event_cost_s(n: int = 20_000) -> float:
+    """Measured cost of recording one span (ring write + tuple build)."""
+    rec = TraceRecorder(capacity=1024)
+    ta = rec.now()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        rec.complete("x", "io.run", "array:0", ta, ta, args={"n": 1})
+    return (time.perf_counter() - t0) / n
+
+
+def run() -> dict:
+    # bench_io geometry: many more blocks than a hyperbatch touches, so
+    # the prepare is I/O-plan heavy — the worst case for per-run spans
+    n_nodes = quick_val(120_000, 6_000)
+    block = quick_val(16384, 2048)
+    mb = quick_val(48, 24)
+    ds = get_dataset("iosparse", dim=32, block_size=block,
+                     n_nodes=n_nodes, avg_degree=8)
+    targets = targets_for(ds, n_mb=2, mb_size=mb)
+    kw = dict(block_size=block, fanouts=(3, 3), minibatch=mb,
+              hyperbatch_size=2, setting_bytes=32 << 20)
+
+    # ---------------------------------------------------------- overhead
+    reps = quick_val(7, 5)
+    for arm in (False, True):            # warmup: page cache, imports
+        _prepare_wall(ds, targets, kw, trace=arm)
+    off = on = float("inf")
+    n_events = 0
+    for _ in range(reps):                # interleaved arms, best-of-N
+        dt, _ = _prepare_wall(ds, targets, kw, trace=False)
+        off = min(off, dt)
+        dt, n_ev = _prepare_wall(ds, targets, kw, trace=True)
+        on = min(on, dt)
+        n_events = max(n_events, n_ev)
+    wall_ratio = off / max(on, 1e-12)
+    ev_cost = _event_cost_s()
+    est_ratio = off / (off + n_events * ev_cost)
+    ratio = max(wall_ratio, est_ratio)   # wall when quiet, bound when noisy
+    emit("obs/untraced_ms", off * 1e3)
+    emit("obs/traced_ms", on * 1e3, f"events={n_events}")
+    emit("obs/event_cost_us", ev_cost * 1e6)
+    emit("obs/off_on_ratio", ratio,
+         f"wall={wall_ratio:.3f} est={est_ratio:.3f}")
+    assert ratio >= MIN_OFF_ON_RATIO, \
+        f"tracing overhead regression: off/on {ratio:.3f} < " \
+        f"{MIN_OFF_ON_RATIO} (tracing costs more than ~5%: " \
+        f"{n_events} events at {ev_cost * 1e6:.2f}us on a " \
+        f"{off * 1e3:.1f}ms prepare)"
+
+    # --------------------------------------------------------- breakdown
+    eng = make_agnes(ds, trace=True, **kw)
+    trainer = GNNTrainer(arch="gcn", in_dim=32, hidden=32, n_classes=16,
+                         n_layers=2, seed=7)
+    trainer.labels = ds.labels
+    with PipelinedExecutor(eng, trainer, depth=2) as ex:
+        report = ex.run_epoch(np.concatenate(targets), epoch=0)
+    rec = eng.telemetry.trace
+    errs = validate_chrome_trace(rec.to_chrome())
+    assert not errs, f"exported trace fails schema: {errs[:3]}"
+    fb = fig2_breakdown(rec)
+    agreement = min(_agreement(fb["prepare_s"], report.prepare_wall_s),
+                    _agreement(fb["train_s"], report.train_wall_s))
+    emit("obs/fig2_prepare_ms", fb["prepare_s"] * 1e3,
+         f"report={report.prepare_wall_s * 1e3:.3f}ms")
+    emit("obs/fig2_train_ms", fb["train_s"] * 1e3,
+         f"report={report.train_wall_s * 1e3:.3f}ms")
+    emit("obs/fig2_agreement", agreement,
+         f"dropped={fb['dropped_events']}")
+    assert agreement >= MIN_BREAKDOWN_AGREEMENT, \
+        f"fig2 breakdown drifted from OverlapReport: {agreement:.4f} < " \
+        f"{MIN_BREAKDOWN_AGREEMENT}"
+    eng.close()
+
+    return {
+        "workload": {"n_nodes": ds.n_nodes, "block_size": block,
+                     "minibatch": mb, "reps": reps},
+        "overhead": {"untraced_wall_s": round(off, 6),
+                     "traced_wall_s": round(on, 6),
+                     "off_on_ratio": round(ratio, 4),
+                     "wall_ratio": round(wall_ratio, 4),
+                     "estimated_ratio": round(est_ratio, 4),
+                     "event_cost_us": round(ev_cost * 1e6, 3),
+                     "trace_events": int(n_events)},
+        "breakdown": {"agreement": round(agreement, 4),
+                      "trace_prepare_s": round(fb["prepare_s"], 6),
+                      "report_prepare_s": round(report.prepare_wall_s, 6),
+                      "trace_train_s": round(fb["train_s"], 6),
+                      "report_train_s": round(report.train_wall_s, 6),
+                      "transfer_s": round(fb["transfer_s"], 6),
+                      "dropped_events": int(fb["dropped_events"]),
+                      "chrome_schema_errors": 0},
+    }
+
+
+if __name__ == "__main__":
+    print(run())

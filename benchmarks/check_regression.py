@@ -18,7 +18,7 @@ import os
 import sys
 
 from . import (bench_cache, bench_faults, bench_io_sched, bench_migration,
-               bench_plan_fusion, bench_serving, bench_striping)
+               bench_obs, bench_plan_fusion, bench_serving, bench_striping)
 
 # file -> [(dotted path into the json payload, floor, description)]
 GUARDS = {
@@ -65,6 +65,14 @@ GUARDS = {
          bench_serving.MIN_TRAIN_THROUGHPUT,
          "bulk training modeled I/O rate vs solo with admission stalls "
          "charged, inference tenant live"),
+    ],
+    "BENCH_obs.json": [
+        ("obs.overhead.off_on_ratio", bench_obs.MIN_OFF_ON_RATIO,
+         "prepare wall with tracing off vs on — tracing overhead must "
+         "stay within ~5%"),
+        ("obs.breakdown.agreement", bench_obs.MIN_BREAKDOWN_AGREEMENT,
+         "trace-derived Fig.2 prepare/train bars vs OverlapReport wall "
+         "times on a traced pipelined epoch"),
     ],
 }
 

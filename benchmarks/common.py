@@ -67,6 +67,7 @@ def make_agnes(ds, *, setting_bytes: int = 64 << 20, block_size: int = 1 << 20,
                io_workers: int | None = None,
                n_arrays: int | None = None,
                placement: str | None = None,
+               trace: bool = False,
                topology=None) -> AgnesEngine:
     dev = NVMeModel(n_ssd=n_ssd)
     g, f = ds.reopen_stores(device=dev)
@@ -87,7 +88,7 @@ def make_agnes(ds, *, setting_bytes: int = 64 << 20, block_size: int = 1 << 20,
                       feature_buffer_bytes=setting_bytes // 2,
                       feature_cache_rows=cache_rows,
                       hyperbatch_enabled=hyperbatch, async_io=async_io,
-                      **extra)
+                      trace=trace, **extra)
     return AgnesEngine(g, f, cfg, topology=topology)
 
 

@@ -24,8 +24,8 @@ from . import (bench_cache, bench_faults, bench_fig2_breakdown,
                bench_fig8_hyperbatch, bench_fig9_sweep,
                bench_fig10_sensitivity, bench_fig11_bw,
                bench_fig12_accuracy, bench_io_sched, bench_migration,
-               bench_pipeline_overlap, bench_plan_fusion, bench_serving,
-               bench_striping, common)
+               bench_obs, bench_pipeline_overlap, bench_plan_fusion,
+               bench_serving, bench_striping, common)
 
 ALL = {
     "fig2": bench_fig2_breakdown.run,
@@ -45,6 +45,7 @@ ALL = {
     "cache": bench_cache.run,
     "faults": bench_faults.run,
     "serving": bench_serving.run,
+    "obs": bench_obs.run,
 }
 
 OUT_PATH = os.environ.get(
@@ -68,6 +69,9 @@ FAULTS_OUT_PATH = os.environ.get(
 SERVING_OUT_PATH = os.environ.get(
     "REPRO_BENCH_SERVING_OUT",
     os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json"))
+OBS_OUT_PATH = os.environ.get(
+    "REPRO_BENCH_OBS_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_obs.json"))
 
 
 def main() -> None:
@@ -102,7 +106,8 @@ def main() -> None:
                    ("migrate", MIGRATE_OUT_PATH),
                    ("cache", CACHE_OUT_PATH),
                    ("faults", FAULTS_OUT_PATH),
-                   ("serving", SERVING_OUT_PATH)]
+                   ("serving", SERVING_OUT_PATH),
+                   ("obs", OBS_OUT_PATH)]
         for name, path in tracked:
             if name not in results:
                 continue

@@ -15,7 +15,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core import (AgnesConfig, AgnesEngine, BaselineConfig, GinexLike,
-                        NVMeModel)
+                        NVMeModel, fig2_breakdown, format_metrics)
 from repro.data import build_dataset
 from repro.gnn import GNNTrainer, PipelinedExecutor
 
@@ -84,6 +84,14 @@ def main():
                          "inference preempts bulk training I/O at run "
                          "granularity, 'fifo' = uncoordinated (inference "
                          "queues behind the training backlog)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a timeline of the AGNES run and export "
+                         "it as Chrome trace-event JSON (load the file "
+                         "in https://ui.perfetto.dev); also prints the "
+                         "trace-derived Fig.2 breakdown")
+    ap.add_argument("--metrics-dump", action="store_true",
+                    help="print the AGNES metrics registry as Prometheus "
+                         "text exposition after the run")
     args = ap.parse_args()
 
     if args.backend == "pallas":
@@ -104,9 +112,8 @@ def main():
                         feature_placement=args.place_features)
         tr.labels = ds.labels
         io_time = 0.0
-        fault_prev = {}
         tier = srv = None
-        served = 0
+        prev_snap: dict = {}
         if args.serve_qps and hasattr(engine, "open_session"):
             from repro.core import InferenceServer, ServingTier
             tier = ServingTier(engine, policy=(
@@ -155,48 +162,34 @@ def main():
                     io_time += engine.last_report.modeled_io_s
                     for p in prepared:
                         losses.append(tr.train_minibatch(p))
-            serveinfo = ""
             if serve_thread is not None:
                 serve_thread.join()
                 if serve_errs:
                     raise serve_errs[0]
-                s = srv.latency_summary(since=served)
-                served += s["n"]
-                serveinfo = (f" serve[{s['n']} req "
-                             f"p50 {s['p50_s'] * 1e6:.0f}us "
-                             f"p99 {s['p99_s'] * 1e6:.0f}us]")
-            migrate = ""
             if getattr(getattr(engine, "config", None),
-                       "online_placement", False):
+                       "online_placement", False) and not pipelined:
                 # pipelined epochs already migrated inside run_epoch;
-                # the serial path runs its boundary pass here
-                reports = (rep.migration if pipelined
-                           else engine.end_epoch())
-                if reports:
-                    moved = sum(r["n_moved"] for r in reports.values())
-                    skew = engine.feature_hotness.skew_summary()
-                    migrate = (f" migrated {moved} blocks "
-                               f"(hot top-10% share "
-                               f"{skew['top_share']:.0%})")
-            faultinfo = ""
-            faults = (engine.io_stats().get("faults")
-                      if hasattr(engine, "io_stats") else None)
-            if faults:
-                delta = {k: faults[k] - fault_prev.get(k, 0)
-                         for k in ("io_errors", "io_retries", "io_hedges",
-                                   "io_degraded")}
-                fault_prev = faults
-                faultinfo = (f" faults[err {delta['io_errors']} "
-                             f"retry {delta['io_retries']} "
-                             f"hedge {delta['io_hedges']} "
-                             f"degraded {delta['io_degraded']}"
-                             + (f" offline {faults['offline_arrays']}"
-                                if faults.get("offline_arrays") else "")
-                             + "]")
+                # the serial path runs its boundary pass here (what it
+                # moved shows up as migration.* counters below)
+                engine.end_epoch()
             acc = tr.evaluate(engine.prepare(holdout, epoch=900 + epoch))
+            # one metrics-delta line replaces the old serve/migrate/fault
+            # print blocks: everything the epoch did, from one snapshot
+            obs = ""
+            tel = getattr(engine, "telemetry", None)
+            if tel is not None:
+                if tier is not None:
+                    tier.update_metrics()
+                line = format_metrics(
+                    tel.metrics.delta(prev_snap),
+                    include=("io.", "cache.", "migration.", "serving.",
+                             "admission.", "pipeline."))
+                prev_snap = engine.metrics_snapshot()
+                if line:
+                    obs = f"\n[{name}]   {line}"
             print(f"[{name}] epoch {epoch}: loss {np.mean(losses):.4f} "
-                  f"acc {acc:.3f} modeled_io {io_time:.3f}s{overlap}"
-                  f"{serveinfo}{migrate}{faultinfo}", flush=True)
+                  f"acc {acc:.3f} modeled_io {io_time:.3f}s{overlap}{obs}",
+                  flush=True)
         if executor is not None:
             executor.close()
         if tier is not None:
@@ -213,8 +206,22 @@ def main():
         stripe_width_blocks=args.stripe_width,
         online_placement=args.online_placement,
         migrate_budget_bytes=args.migrate_budget_mb << 20,
-        fault_schedule=args.inject_faults, io_retries=args.io_retries))
+        fault_schedule=args.inject_faults, io_retries=args.io_retries,
+        trace=bool(args.trace)))
     acc_a, io_a = run("agnes", agnes)
+    if args.metrics_dump:
+        print("\n# AGNES metrics (Prometheus text exposition)")
+        print(agnes.telemetry.metrics.render_prometheus())
+    if args.trace:
+        rec = agnes.telemetry.trace
+        path = rec.export_chrome(args.trace)
+        fb = fig2_breakdown(rec)
+        print(f"[agnes] trace: {rec.n_retained} events -> {path} "
+              f"(dropped {rec.n_dropped}); load in https://ui.perfetto.dev")
+        print(f"[agnes] fig2 breakdown: prepare {fb['prepare_s']:.3f}s "
+              f"({fb['prepare_fraction']:.0%}) train {fb['train_s']:.3f}s "
+              f"({fb['train_fraction']:.0%}) of which transfer "
+              f"{fb['transfer_s']:.3f}s")
     if agnes.topology is not None:
         u = agnes.io_stats()["arrays"]
         print(f"[agnes] storage topology: {u['n_arrays']} arrays "

@@ -23,6 +23,10 @@
 # BENCH_serving.json) and the regression guard over its floors
 # (inference p99 headroom under concurrent training, bulk training
 # throughput fraction with admission stalls charged).
+# RUN_OBS=1 runs just the observability tier: the telemetry test file,
+# the --quick obs benchmark (writes BENCH_obs.json) and the regression
+# guard over its floors (tracing overhead <= ~5%, Fig.2 breakdown
+# agreement with OverlapReport).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
@@ -44,5 +48,11 @@ if [[ "${RUN_SERVING:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q tests/test_serving.py
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick serving
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.check_regression
+fi
+if [[ "${RUN_OBS:-0}" == "1" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_telemetry.py
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick obs
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.check_regression
 fi

@@ -35,6 +35,9 @@ from .sampling import (MFG, MFGLayer, assemble_layer, layer_from_frontier,
 from .serving import (ALL_ARRAYS, DEFAULT_QOS, AdmissionController,
                       InferenceServer, QoSClass, ServedPrepare, ServingTier)
 from .session import IOPlan, PrepareSession
+from .telemetry import (MetricsRegistry, Telemetry, TraceRecorder,
+                        fig2_breakdown, format_metrics, maybe_span,
+                        validate_chrome_trace)
 from .topology import (BlockPlacement, ContiguousPlacement,
                        HotnessAwarePlacement, PlacementPolicy,
                        StorageTopology, StripePlacement,
@@ -65,4 +68,6 @@ __all__ = [
     "classify_error", "first_use_table",
     "ALL_ARRAYS", "DEFAULT_QOS", "AdmissionController", "InferenceServer",
     "QoSClass", "ServedPrepare", "ServingTier",
+    "MetricsRegistry", "Telemetry", "TraceRecorder", "fig2_breakdown",
+    "format_metrics", "maybe_span", "validate_chrome_trace",
 ]

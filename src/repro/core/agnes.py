@@ -31,6 +31,7 @@ from .hyperbatch import HyperbatchSampler
 from .migration import MigrationEngine
 from .sampling import MFG
 from .session import PrepareSession
+from .telemetry import Telemetry
 from .topology import (HotnessAwarePlacement, StorageTopology,
                        feature_block_hotness, graph_block_hotness,
                        make_policy)
@@ -119,6 +120,13 @@ class AgnesConfig:
     # hardcoded 30 s in CoalescedReader.fetch); a serving tenant's QoS
     # class overrides it per reader at enrollment
     io_fetch_timeout_s: float = 30.0
+    # --- telemetry (core/telemetry.py) ---
+    # record structured trace spans (prepare stages, per-array I/O runs,
+    # faults, admission waits, migration windows, cache churn) into a
+    # ring buffer exportable as Chrome trace JSON; off = the metrics
+    # registry stays live but span recording costs one branch
+    trace: bool = False
+    trace_buffer_events: int = 65536
     seed: int = 0
 
     def buffer_blocks(self, nbytes: int) -> int:
@@ -372,6 +380,15 @@ class AgnesEngine:
             self.gatherer.trace_sink = self.feature_trace
         self.last_report: PrepareReport | None = None
         self.last_session: PrepareSession | None = None
+        # unified telemetry (core/telemetry.py): metrics registry always
+        # live, trace recorder only when cfg.trace.  set_telemetry binds
+        # the bundle into the readers / cache / migration engines; a
+        # serving tier re-calls it with the primary engine's bundle so
+        # every tenant records into one trace.
+        self._tel_label = "train"
+        self.telemetry = Telemetry(trace=cfg.trace,
+                                   capacity=cfg.trace_buffer_events)
+        self.set_telemetry(self.telemetry)
 
     # ------------------------------------------------------------ API
     def prepare(self, targets_per_mb: list[np.ndarray],
@@ -406,7 +423,56 @@ class AgnesEngine:
             t2 = time.perf_counter()
         io_after = self._io_snapshot()
         self.last_report = self._report(t0, t1, t2, io_before, io_after)
+        tr = self.telemetry.trace
+        if tr is not None:
+            # reuse this method's own t0/t2 readings so the trace-derived
+            # Fig.2 prepare bar agrees with wall-clock accumulators that
+            # bracket this call (OverlapReport.prepare_wall_s) to within
+            # function-call overhead
+            tr.complete("prepare:hb", "prepare",
+                        f"prepare:{self._tel_label}", t0, t2,
+                        args={"epoch": epoch,
+                              "n_minibatches": len(targets_per_mb),
+                              "modeled_io_s": round(
+                                  self.last_report.modeled_io_s, 6)})
         return out
+
+    def set_telemetry(self, telemetry: Telemetry,
+                      tenant: str | None = None) -> Telemetry:
+        """Install (or share) a :class:`Telemetry` bundle.
+
+        Rebinds the coalesced readers, feature cache, and migration
+        engines so their spans/counters land in ``telemetry``.  A
+        serving tier calls this on every tenant engine with the primary
+        engine's bundle (and the tenant name) so all tenants record
+        into one trace with per-tenant tracks.
+        """
+        self.telemetry = telemetry
+        if tenant:
+            self._tel_label = tenant
+        for rd, label in ((self._g_prefetch, "graph"),
+                          (self._f_prefetch, "feature")):
+            if rd is not None and hasattr(rd, "bind_telemetry"):
+                rd.bind_telemetry(telemetry, store=label,
+                                  tenant=self._tel_label)
+        self.feature_cache.attach_telemetry(telemetry)
+        for _name, mig, _tracker in self._migrations:
+            mig.telemetry = telemetry
+        return telemetry
+
+    def metrics_snapshot(self, refresh: bool = True) -> dict:
+        """Atomic snapshot of the unified metrics namespace.
+
+        ``refresh=True`` first folds the engine's scattered summary
+        dicts (:meth:`io_stats`) into gauges under ``agnes.*`` so the
+        snapshot is the one queryable place holding live counters
+        (``io.*``, ``cache.*``, ``migration.*``, ``admission.*``) *and*
+        the derived summaries — the roofline substrate the ROADMAP's
+        model-based controller consumes.
+        """
+        if refresh:
+            self.telemetry.metrics.set_gauges("agnes", self.io_stats())
+        return self.telemetry.metrics.snapshot()
 
     def open_session(self, targets_per_mb: list[np.ndarray],
                      epoch: int = 0,

@@ -62,6 +62,16 @@ class NVMeModel:
         return max(bw_bound, iops_bound)
 
 
+# summary() keys that *rename* raw IOStats fields.  The
+# field-completeness test walks every dataclass field and requires it to
+# appear in summary() either under its own name or under the rename
+# listed here — adding a field without surfacing it fails the test.
+SUMMARY_FIELD_MAP = {
+    "modeled_read_time": "modeled_read_time_s",
+    "modeled_write_time": "modeled_write_time_s",
+}
+
+
 @dataclasses.dataclass
 class IOStats:
     """Exact I/O accounting + modeled device time."""
@@ -218,19 +228,21 @@ class IOStats:
         return self.bytes_read / self.modeled_read_time
 
     def merge(self, other: "IOStats") -> "IOStats":
-        for f in ("n_reads", "n_requests", "n_writes", "n_sequential_reads",
-                  "bytes_read",
-                  "bytes_written", "n_migrated_blocks", "bytes_migrated",
-                  "buffer_hits", "buffer_misses",
-                  "cache_hits", "cache_misses", "cache_evictions",
-                  "io_errors", "io_retries", "io_hedges", "io_degraded",
-                  "bytes_retried", "bytes_hedged", "bytes_degraded",
-                  "admission_forced_grants"):
-            setattr(self, f, getattr(self, f) + getattr(other, f))
-        self.modeled_read_time += other.modeled_read_time
-        self.modeled_write_time += other.modeled_write_time
-        self.admission_wait_s += other.admission_wait_s
-        self.size_histogram.update(other.size_histogram)
+        """Field-complete fold of ``other`` into ``self``.
+
+        Driven by ``dataclasses.fields`` rather than a hand-maintained
+        name list, so a counter added to the dataclass can never be
+        silently dropped from per-array merges again (PRs 7-8 each grew
+        this struct; the completeness test in ``tests/test_telemetry.py``
+        locks both merge and summary coverage).
+        """
+        for f in dataclasses.fields(self):
+            mine = getattr(self, f.name)
+            theirs = getattr(other, f.name)
+            if isinstance(mine, Counter):
+                mine.update(theirs)
+            else:
+                setattr(self, f.name, mine + theirs)
         return self
 
     def summary(self) -> dict:
@@ -246,8 +258,14 @@ class IOStats:
             "n_migrated_blocks": self.n_migrated_blocks,
             "bytes_migrated": self.bytes_migrated,
             "modeled_io_time_s": round(self.modeled_io_time, 6),
+            "modeled_read_time_s": round(self.modeled_read_time, 6),
+            "modeled_write_time_s": round(self.modeled_write_time, 6),
             "achieved_bw_GBps": round(self.achieved_bandwidth() / 1e9, 3),
+            "buffer_hits": self.buffer_hits,
+            "buffer_misses": self.buffer_misses,
             "buffer_hit_ratio": round(self.buffer_hit_ratio, 4),
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
             "cache_hit_ratio": round(self.cache_hit_ratio, 4),
             "cache_evictions": self.cache_evictions,
             "io_errors": self.io_errors,
@@ -259,6 +277,8 @@ class IOStats:
             "bytes_degraded": self.bytes_degraded,
             "admission_wait_s": round(self.admission_wait_s, 6),
             "admission_forced_grants": self.admission_forced_grants,
+            "size_histogram": {int(k): int(v) for k, v
+                               in sorted(self.size_histogram.items())},
         }
 
 

@@ -92,6 +92,10 @@ class FeatureCache:
         self._hotness = None
         self._hot_rows_per_block = 1
         self._hot_hit_weight = 0.0
+        # unified telemetry (core/telemetry.py): admit/evict instants +
+        # churn counters; bound by the owning engine (attach_telemetry)
+        self.telemetry = None
+        self._m_admitted = self._m_evicted = self._m_wb_bytes = None
 
     def attach_hotness(self, tracker, rows_per_block: int,
                        hit_weight: float = 0.25) -> None:
@@ -117,6 +121,23 @@ class FeatureCache:
         self._wb_device = device
         self._wb_stats = stats if stats is not None else self.stats
         self._wb_queue_depth = max(int(queue_depth), 1)
+
+    def attach_telemetry(self, telemetry) -> None:
+        """Bind a :class:`~repro.core.telemetry.Telemetry` bundle:
+        admit/evict instants on the ``cache`` track plus churn counters
+        (pre-resolved so the admit path pays one locked inc each).
+        ``telemetry=None`` unbinds."""
+        self.telemetry = telemetry
+        if telemetry is None:
+            self._m_admitted = self._m_evicted = self._m_wb_bytes = None
+            return
+        m = telemetry.metrics
+        self._m_admitted = m.counter("cache.rows_admitted",
+                                     "feature rows installed in the cache")
+        self._m_evicted = m.counter("cache.rows_evicted",
+                                    "feature rows displaced under pressure")
+        self._m_wb_bytes = m.counter("cache.writeback_bytes",
+                                     "modeled eviction writeback traffic")
 
     def set_oracle(self, schedule) -> None:
         """Install a precomputed MIN schedule (switches admit to it)."""
@@ -291,6 +312,13 @@ class FeatureCache:
         self._tick += 1
         self._last_used[slots] = self._tick
         self._n_resident += len(slots)
+        tel = self.telemetry
+        if tel is not None:
+            self._m_admitted.inc(int(len(slots)))
+            tr = tel.trace
+            if tr is not None:
+                tr.instant("admit", "cache", "cache",
+                           args={"rows": int(len(slots))})
 
     def _evict_arrays(self, slots: np.ndarray, nodes: np.ndarray) -> None:
         """Common eviction bookkeeping + modeled writeback charge."""
@@ -298,12 +326,22 @@ class FeatureCache:
         self._n_resident -= len(slots)
         k = int(len(slots))
         self.stats.cache_evictions += k
+        wb_bytes = 0
         if self._wb_device is not None and k:
-            nbytes = k * self.row_bytes
+            wb_bytes = k * self.row_bytes
             t = self._wb_device.batch_time(
-                nbytes, n_random=k, queue_depth=self._wb_queue_depth)
+                wb_bytes, n_random=k, queue_depth=self._wb_queue_depth)
             self._wb_stats.record_write(
-                nbytes, t, request_sizes=[self.row_bytes] * k)
+                wb_bytes, t, request_sizes=[self.row_bytes] * k)
+        tel = self.telemetry
+        if tel is not None and k:
+            self._m_evicted.inc(k)
+            if wb_bytes:
+                self._m_wb_bytes.inc(wb_bytes)
+            tr = tel.trace
+            if tr is not None:
+                tr.instant("evict", "cache", "cache",
+                           args={"rows": k, "writeback_bytes": wb_bytes})
 
     # ------------------------------------------------------------ device
     def drain_dirty(self) -> np.ndarray:

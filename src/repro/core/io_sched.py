@@ -251,6 +251,13 @@ class CoalescedReader:
         # error stash (_error_of) per tenant.
         self.admission = None
         self.tenant = "default"
+        # unified telemetry (core/telemetry.py): bound by the owning
+        # engine via bind_telemetry; None = one branch per hot path
+        self.telemetry = None
+        self._tel_store = "store"
+        self._tel_tenant = "default"
+        self._m_runs = self._m_bytes = self._m_submits = None
+        self._m_fault: dict = {}
         # fault-domain policy (core/fault.py): bounded retry for
         # transient faults, p99-deadline hedging for stragglers
         self.retries = max(int(retries), 0)
@@ -293,21 +300,70 @@ class CoalescedReader:
         installs the tenant's QoS-derived per-fetch deadline."""
         self.admission = controller
         self.tenant = tenant
+        self._tel_tenant = tenant
         if fetch_timeout_s is not None:
             self.fetch_timeout_s = float(fetch_timeout_s)
 
+    # ------------------------------------------------------------ telemetry
+    def bind_telemetry(self, telemetry, store: str = "store",
+                       tenant: str | None = None) -> None:
+        """Bind a :class:`~repro.core.telemetry.Telemetry` bundle:
+        per-run I/O spans land on ``array:<a>`` tracks, submissions on
+        the tenant's prepare track, fault instants on the faulting
+        array's track.  Counters are pre-resolved here so the per-run
+        cost with tracing off is one locked increment, no registry
+        lookup.  ``telemetry=None`` unbinds."""
+        self.telemetry = telemetry
+        self._tel_store = store
+        self._tel_tenant = tenant or self.tenant
+        if telemetry is None:
+            self._m_runs = self._m_bytes = self._m_submits = None
+            self._m_fault = {}
+            return
+        m = telemetry.metrics
+        self._m_runs = m.counter(f"io.{store}.runs",
+                                 "coalesced run reads issued")
+        self._m_bytes = m.counter(f"io.{store}.bytes_read",
+                                  "bytes moved by coalesced run reads")
+        self._m_submits = m.counter(f"io.{store}.submitted_runs",
+                                    "run segments staged by submit()")
+        self._m_fault = {k: m.counter(f"io.{store}.fault.{k}")
+                         for k in ("error", "retry", "hedge", "stall",
+                                   "degraded")}
+
     def _issue_read(self, array: int, run: Run):
         """One admitted run read — called *outside* ``_cv``.  Without a
-        bound controller this is exactly ``_guarded_read``."""
+        bound controller this is exactly the (telemetry-timed) guarded
+        read."""
         adm = self.admission
         if adm is None:
-            return self._guarded_read(array, run)
+            return self._timed_read(array, run)
         nbytes = run.count * self.store.block_size
         adm.acquire(self.tenant, array, nbytes)
         try:
-            return self._guarded_read(array, run)
+            return self._timed_read(array, run)
         finally:
             adm.complete(self.tenant, array, nbytes)
+
+    def _timed_read(self, array: int, run: Run):
+        """``_guarded_read`` plus one ``io.run`` span / counter pair
+        when telemetry is bound (one branch when it is not)."""
+        tel = self.telemetry
+        if tel is None:
+            return self._guarded_read(array, run)
+        t0 = time.perf_counter()
+        blocks = self._guarded_read(array, run)
+        nbytes = run.count * self.store.block_size
+        self._m_runs.inc()
+        self._m_bytes.inc(nbytes)
+        tr = tel.trace
+        if tr is not None:
+            tr.complete(f"{self._tel_store}.run", "io.run",
+                        f"array:{array}", t0,
+                        args={"start": run.start, "count": run.count,
+                              "bytes": nbytes,
+                              "tenant": self._tel_tenant})
+        return blocks
 
     def _issue_outside_lock(self, array: int, run: Run):
         """Drop ``_cv``, issue one run (admission + guarded read),
@@ -360,6 +416,8 @@ class CoalescedReader:
         if ids.size == 0:
             return
         adm = self.admission
+        tel = self.telemetry
+        t_sub = time.perf_counter() if tel is not None else 0.0
         if adm is not None:
             # placement-swap gate: no plan may be split against a
             # mapping that a migration tenant is mid-swap on
@@ -405,6 +463,15 @@ class CoalescedReader:
                     for b in range(seg.start, seg.stop):
                         self._run_of[b] = tok
                 self._cv.notify_all()
+            if tel is not None and staged:
+                self._m_submits.inc(len(staged))
+                tr = tel.trace
+                if tr is not None:
+                    tr.complete(f"{self._tel_store}.submit", "io.submit",
+                                f"prepare:{self._tel_tenant}", t_sub,
+                                args={"n_runs": len(staged),
+                                      "bytes": int(sum(
+                                          p[1] for p in per_array.values()))})
         finally:
             if adm is not None:
                 adm.submit_end(self.tenant)
@@ -630,6 +697,18 @@ class CoalescedReader:
         if acct is not None:  # duck-typed test stores may not account
             acct(array, run.count * self.store.block_size, run.count,
                  t, kind)
+        tel = self.telemetry
+        if tel is not None:
+            m = self._m_fault.get(kind)
+            if m is not None:
+                m.inc()
+            tr = tel.trace
+            if tr is not None:
+                tr.instant(f"{self._tel_store}.{kind}", "io.fault",
+                           f"array:{array}",
+                           args={"start": run.start, "count": run.count,
+                                 "modeled_s": round(t, 9),
+                                 "tenant": self._tel_tenant})
 
     def _guarded_read(self, array: int, run: Run):
         """Execute one run's real read under the classified fault policy.

@@ -33,6 +33,7 @@ pure write traffic.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -110,6 +111,9 @@ class MigrationEngine:
         # admitted as the lowest-priority tenant (bulk all-array grants)
         self.admission = None
         self.tenant = "migration"
+        # unified telemetry (core/telemetry.py): migration/evacuation
+        # window spans + moved-block counters; set by the owning engine
+        self.telemetry = None
 
     def bind_admission(self, controller, tenant: str = "migration") -> None:
         """Enroll this engine's copy traffic as a serving-tier tenant."""
@@ -130,6 +134,22 @@ class MigrationEngine:
                                              queue_depth=queue_depth)
         finally:
             self.admission.complete(self.tenant, None, nbytes)
+
+    def _note_telemetry(self, name: str, moved: int, wanted: int,
+                        t0: float) -> None:
+        """One migration-window span + moved-block counters (no-op
+        without a bound Telemetry)."""
+        tel = self.telemetry
+        if tel is None:
+            return
+        nbytes = moved * self.store.block_size
+        tel.metrics.counter("migration.blocks_moved").inc(moved)
+        tel.metrics.counter("migration.bytes_moved").inc(nbytes)
+        tr = tel.trace
+        if tr is not None:
+            tr.complete(name, "migration", "migration", t0,
+                        args={"n_moved": moved, "n_wanted": wanted,
+                              "bytes": nbytes})
 
     @property
     def topology(self) -> StorageTopology:
@@ -185,6 +205,7 @@ class MigrationEngine:
         hot = (tracker_or_hotness.hotness()
                if isinstance(tracker_or_hotness, HotnessTracker)
                else tracker_or_hotness)
+        t0 = time.perf_counter()
         moves, n_wanted = self.plan(hot)
         st = self.store.stats
         r0, w0 = st.modeled_read_time, st.modeled_write_time
@@ -192,6 +213,7 @@ class MigrationEngine:
         if moves:
             moved = self._migrate_admitted(
                 [(m.block_id, m.dst) for m in moves], self.queue_depth)
+        self._note_telemetry(f"migrate:{self.name}", moved, n_wanted, t0)
         report = MigrationReport(
             store=self.name,
             n_wanted=n_wanted,
@@ -224,6 +246,7 @@ class MigrationEngine:
         st = self.store.stats
         r0, w0 = st.modeled_read_time, st.modeled_write_time
         moved = stranded = 0
+        t0 = time.perf_counter()
         while True:
             moves = plan_evacuation(self.store, self.budget_bytes, hot)
             if not moves:
@@ -237,6 +260,7 @@ class MigrationEngine:
                 [(m.block_id, m.dst) for m in moves], self.queue_depth)
         if moved == 0:
             return None
+        self._note_telemetry(f"evacuate:{self.name}", moved, stranded, t0)
         report = MigrationReport(
             store=self.name,
             n_wanted=stranded,

@@ -160,6 +160,10 @@ class AdmissionController:
         self._exclusive_holder: str | None = None
         self._n_submitting = 0
         self._granted_service_s = 0.0   # modeled service of all grants
+        # unified telemetry (core/telemetry.py): wait histograms +
+        # blocked-acquire spans; shared with the tier's primary engine
+        self.telemetry = None
+        self._excl_t0 = 0.0
 
     # ------------------------------------------------------------ enrollment
     def register(self, tenant: str, qos: QoSClass) -> _TenantState:
@@ -203,6 +207,8 @@ class AdmissionController:
         holds the exclusive gate, which is itself bounded (a migration
         pass runs synchronously and releases it)."""
         a = ALL_ARRAYS if array is None else int(array)
+        tel = self.telemetry
+        t_tr = time.perf_counter() if tel is not None else 0.0
         with self._cv:
             st = self._tenants[tenant]
             st.waiting[a] = st.waiting.get(a, 0) + 1
@@ -228,6 +234,23 @@ class AdmissionController:
                 st.forced_grants += 1
             self._grant_locked(st, a, nbytes)
             self._cv.notify_all()
+            if tel is not None:
+                tel.metrics.histogram(f"admission.{tenant}.wait_s").observe(
+                    waited)
+                if forced:
+                    tel.metrics.counter(
+                        f"admission.{tenant}.forced_grants").inc()
+                tr = tel.trace
+                if tr is not None and (forced or waited > 1e-4):
+                    # only blocked acquires make the timeline — unblocked
+                    # grants would bury the trace in zero-width spans
+                    tr.complete("wait", "admission",
+                                f"admission:{tenant}", t_tr,
+                                t_tr + waited,
+                                args={"array": ("all" if a == ALL_ARRAYS
+                                                else a),
+                                      "bytes": int(nbytes),
+                                      "forced": forced})
             return waited
 
     def try_acquire(self, tenant: str, array: int | None,
@@ -373,12 +396,19 @@ class AdmissionController:
             if self._exclusive_holder is not None or not self._slack_locked():
                 return False
             self._exclusive_holder = holder
+            self._excl_t0 = time.perf_counter()
             return True
 
     def end_exclusive(self) -> None:
         with self._cv:
-            self._exclusive_holder = None
+            holder, self._exclusive_holder = self._exclusive_holder, None
             self._cv.notify_all()
+            tel = self.telemetry
+            if tel is not None and holder is not None:
+                tr = tel.trace
+                if tr is not None:
+                    tr.complete("exclusive", "serving", "migration",
+                                self._excl_t0, args={"holder": holder})
 
     def summary(self) -> dict:
         with self._cv:
@@ -427,6 +457,10 @@ class ServingTier:
         else:
             devices = [engine.graph_store.device]
         self.controller = AdmissionController(devices, policy=policy)
+        # one Telemetry bundle for the whole tier: tenant engines share
+        # the primary engine's, so admission waits, per-tenant prepare
+        # spans and every tenant's I/O land in one trace
+        self.controller.telemetry = getattr(engine, "telemetry", None)
         self._handles: dict[str, dict] = {}
         self._lat_lock = threading.Lock()
         self.migration_attempts = 0
@@ -451,6 +485,11 @@ class ServingTier:
             if rd is not None and hasattr(rd, "bind_admission"):
                 rd.bind_admission(self.controller, name,
                                   fetch_timeout_s=q.fetch_timeout_s)
+        if hasattr(eng, "set_telemetry") and \
+                getattr(self.engine, "telemetry", None) is not None:
+            # after bind_admission, so the readers' telemetry tenant
+            # label matches their admission tenant
+            eng.set_telemetry(self.engine.telemetry, tenant=name)
         self._handles[name] = {"engine": eng, "own": own, "latencies": []}
 
     def open_tenant(self, name: str, qos: QoSClass | None = None,
@@ -469,8 +508,10 @@ class ServingTier:
         if qos is not None:
             self.qos[name] = qos
         base = self.engine
+        # trace=False: the tenant engine's own recorder would be dead
+        # weight — _enroll immediately shares the primary's bundle
         safe = {"online_placement": False, "fault_schedule": None,
-                "record_feature_trace": False}
+                "record_feature_trace": False, "trace": False}
         safe.update(config_overrides)
         cfg = dataclasses.replace(base.config, **safe)
         g = GraphBlockStore.open(base.graph_store.path,
@@ -508,6 +549,8 @@ class ServingTier:
         """
         h = self._handles[tenant]
         eng = h["engine"]
+        tel = getattr(self.engine, "telemetry", None)
+        t0 = time.perf_counter() if tel is not None else 0.0
         queue_delay = self.controller.queueing_delay_s(tenant)
         io0 = _modeled_io_s(eng)
         prepared = eng.open_session(targets_per_mb, epoch=epoch,
@@ -517,6 +560,18 @@ class ServingTier:
                                queue_delay, io_s)
         with self._lat_lock:
             h["latencies"].append(served.latency_s)
+        if tel is not None:
+            tel.metrics.histogram(f"serving.{tenant}.latency_s").observe(
+                served.latency_s)
+            tel.metrics.counter(f"serving.{tenant}.requests").inc()
+            tr = tel.trace
+            if tr is not None:
+                tr.complete(f"serve:{tenant}", "serving",
+                            f"serving:{tenant}", t0,
+                            args={"latency_s": round(served.latency_s, 9),
+                                  "queue_delay_s": round(queue_delay, 9),
+                                  "io_s": round(io_s, 9),
+                                  "epoch": epoch})
         return served
 
     def latency_summary(self, tenant: str, since: int = 0) -> dict:
@@ -556,6 +611,22 @@ class ServingTier:
                           "blocked": self.migrations_blocked,
                           "run": self.migrations_run},
         }
+
+    def update_metrics(self):
+        """Fold the tier's summary dicts (per-tenant latency quantiles,
+        admission state) into the shared metrics registry as
+        ``serving.*`` / ``admission.*`` gauges.  Returns the registry,
+        or ``None`` when the primary engine carries no telemetry."""
+        tel = getattr(self.engine, "telemetry", None)
+        if tel is None:
+            return None
+        m = tel.metrics
+        for name in self._handles:
+            m.set_gauges(f"serving.{name}", self.latency_summary(name))
+        # "admission.state." prefix: the per-tenant summary dict reuses
+        # key names (wait_s) that live as histograms under "admission."
+        m.set_gauges("admission.state", self.controller.summary()["tenants"])
+        return m
 
     # ------------------------------------------------------------ migration
     def register_migration(self) -> None:

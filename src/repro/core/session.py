@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from contextlib import nullcontext
 
 import numpy as np
 
@@ -136,15 +137,29 @@ class PrepareSession:
         g_bs = eng.graph_store.block_size
         f_bs = eng.feature_store.block_size
         n_hops = len(sampler.fanouts)
+        # stage spans (core/telemetry.py): cat "prepare.stage" nests
+        # under the engine-level "prepare" span on the tenant's track
+        # and never double counts into the Fig.2 prepare bar
+        tel = getattr(eng, "telemetry", None)
+        tr = tel.trace if tel is not None else None
+        track = f"prepare:{self.tenant or getattr(eng, '_tel_label', 'train')}"
+
+        def _stage(name):
+            if tr is None:
+                return nullcontext()
+            return tr.span(name, "prepare.stage", track)
+
         t0 = time.perf_counter()
         try:
             frontiers = self.frontiers
             gp = fplan = None
-            hp = sampler.plan_hop(frontiers, 0) if n_hops else None
-            if hp is not None:
-                plan = self._emit("sample:hop0", "graph",
-                                  eng.graph_buffer.absent(hp.row_blocks), g_bs)
-                self._submit(plan, g_reader)
+            with _stage("plan:hop0"):
+                hp = sampler.plan_hop(frontiers, 0) if n_hops else None
+                if hp is not None:
+                    plan = self._emit(
+                        "sample:hop0", "graph",
+                        eng.graph_buffer.absent(hp.row_blocks), g_bs)
+                    self._submit(plan, g_reader)
             for hop in range(n_hops):
                 tail_cb = None
                 if self.fused and hop + 1 < n_hops:
@@ -156,7 +171,8 @@ class PrepareSession:
                             f"sample:hop{_h + 1}:early", "graph",
                             eng.graph_buffer.absent(blocks), g_bs)
                         self._submit(early, g_reader)
-                sampler.consume_hop(hp, self.epoch, tail_cb=tail_cb)
+                with _stage(f"consume:hop{hop}"):
+                    sampler.consume_hop(hp, self.epoch, tail_cb=tail_cb)
                 for p in self.plans:  # the hop's main + early plans
                     if p.store == "graph" and p.state == "submitted" \
                             and p.stage.split(":")[1] == f"hop{hop}":
@@ -166,23 +182,26 @@ class PrepareSession:
                 nxt = sampler.advance_frontiers(hp)
                 nxt_hp = None
                 if hop + 1 < n_hops:
-                    nxt_hp = sampler.plan_hop(nxt, hop + 1)
-                    plan = self._emit(
-                        f"sample:hop{hop + 1}", "graph",
-                        eng.graph_buffer.absent(nxt_hp.row_blocks), g_bs)
-                    self._submit(plan, g_reader)
+                    with _stage(f"plan:hop{hop + 1}"):
+                        nxt_hp = sampler.plan_hop(nxt, hop + 1)
+                        plan = self._emit(
+                            f"sample:hop{hop + 1}", "graph",
+                            eng.graph_buffer.absent(nxt_hp.row_blocks), g_bs)
+                        self._submit(plan, g_reader)
                 else:
                     # gather plan as soon as the final frontier exists —
                     # before the MFG layer index maps are built
                     self.sample_wall_s = time.perf_counter() - t0
-                    gp = gatherer.plan_gather(nxt)
-                    fplan = self._emit(
-                        "gather", "feature",
-                        eng.feature_buffer.absent(gp.row_blocks)
-                        if gp.n_miss else [], f_bs)
-                    self._submit(fplan, f_reader)
+                    with _stage("plan:gather"):
+                        gp = gatherer.plan_gather(nxt)
+                        fplan = self._emit(
+                            "gather", "feature",
+                            eng.feature_buffer.absent(gp.row_blocks)
+                            if gp.n_miss else [], f_bs)
+                        self._submit(fplan, f_reader)
                 # layer index assembly overlaps the submitted I/O
-                sampler.assemble_hop(hp, nxt, self.mfgs)
+                with _stage(f"assemble:hop{hop}"):
+                    sampler.assemble_hop(hp, nxt, self.mfgs)
                 frontiers, hp = nxt, nxt_hp
             if gp is None:  # 0-hop degenerate case: gather the targets
                 gp = gatherer.plan_gather(frontiers)
@@ -192,7 +211,8 @@ class PrepareSession:
                     if gp.n_miss else [], f_bs)
                 self._submit(fplan, f_reader)
             t1 = time.perf_counter()
-            feats = gatherer.consume_gather(gp) if gp.n_miss else gp.outs
+            with _stage("consume:gather"):
+                feats = gatherer.consume_gather(gp) if gp.n_miss else gp.outs
             fplan.state = "consumed"
             if not self.fused and f_reader is not None:
                 f_reader.reset()

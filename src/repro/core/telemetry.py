@@ -1,0 +1,527 @@
+"""Unified telemetry: trace spans, metrics registry, Fig.2 breakdown.
+
+The prepare stack accumulated one ad-hoc summary dict per subsystem
+(``IOStats.summary()``, ``io_stats()["hotness"/"migration"/"faults"]``,
+serving-tier rooflines) and zero timeline visibility.  This module is
+the one queryable, timestamped place the ROADMAP's model-based
+controller will consume:
+
+* :class:`TraceRecorder` — a lock-protected preallocated ring buffer of
+  structured spans ("X") and instant events ("i").  Recording one event
+  is a tuple build + one locked slot write; the buffer never grows, and
+  the monotonic emit counter makes the dropped-event count *exact*
+  (``n_dropped == n_emitted - capacity`` once wrapped).  Export with
+  :meth:`TraceRecorder.export_chrome` and load the file in Perfetto /
+  ``chrome://tracing``.
+* :class:`MetricsRegistry` — named counters / gauges / histograms
+  behind one namespace with atomic :meth:`~MetricsRegistry.snapshot`,
+  counter-aware :meth:`~MetricsRegistry.delta`, and a Prometheus-style
+  text exposition (:meth:`~MetricsRegistry.render_prometheus`).
+  :meth:`~MetricsRegistry.set_gauges` folds the existing nested summary
+  dicts into the same namespace.
+* :class:`Telemetry` — the per-engine bundle: an always-on registry
+  plus an optional recorder.  **Nullability contract**: ``trace`` is
+  ``None`` when tracing is off, so every instrumented hot path costs
+  exactly one ``is not None`` branch when disabled
+  (``benchmarks/bench_obs.py`` floor-guards the enabled overhead too).
+* :func:`fig2_breakdown` — reconstructs the paper's Fig. 2
+  prepare/train/transfer decomposition from a recorded trace; the
+  category scheme below makes its sums agree with
+  :class:`~repro.gnn.pipeline.OverlapReport` wall times.
+
+Category scheme (one cat per Fig.2 bar, sub-categories never double
+count into a parent):
+
+==================  ====================================================
+category            emitted by
+==================  ====================================================
+``prepare``         ``AgnesEngine.prepare`` — one span per hyperbatch
+``prepare.stage``   session stages (plan/consume/assemble), nested
+``io.submit``       ``CoalescedReader.submit`` (coalesce + charge)
+``io.run``          one span per coalesced run read, per-array track
+``io.fault``        retry/hedge/stall/degraded/error instants
+``train``           pipeline consumer — one span per hyperbatch
+``train.step``      the jitted train step, nested inside ``train``
+``transfer``        ``to_device`` + MFG padding, nested inside ``train``
+``admission``       serving-tier admission waits + forced grants
+``serving``         one span per served tenant prepare
+``migration``       migration / evacuation windows
+``cache``           admit / evict / writeback instants
+``pipeline``        epoch-level summary span
+==================  ====================================================
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import threading
+import time
+from contextlib import contextmanager, nullcontext
+
+__all__ = [
+    "TraceRecorder", "MetricsRegistry", "Telemetry", "fig2_breakdown",
+    "validate_chrome_trace", "format_metrics", "maybe_span",
+]
+
+
+# --------------------------------------------------------------------- trace
+class TraceRecorder:
+    """Low-overhead ring buffer of trace events.
+
+    Events are stored as tuples ``(ph, name, cat, track, ts_s, dur_s,
+    args)`` with timestamps relative to the recorder's construction
+    (``time.perf_counter`` clock).  ``track`` is a logical lane —
+    ``"array:3"``, ``"prepare:training"``, ``"cache"`` — mapped to a
+    Chrome thread id at export time so Perfetto renders one row per
+    track.
+    """
+
+    def __init__(self, capacity: int = 65536):
+        self.capacity = max(int(capacity), 1)
+        self._buf: list = [None] * self.capacity
+        self._n = 0                       # total emitted, never wraps
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+
+    # ------------------------------------------------------------ record
+    def now(self) -> float:
+        """The recorder's clock (absolute ``perf_counter`` seconds);
+        pass the value to :meth:`complete` as ``t0``/``t1``."""
+        return time.perf_counter()
+
+    def _emit(self, ev: tuple) -> None:
+        with self._lock:
+            self._buf[self._n % self.capacity] = ev
+            self._n += 1
+
+    def complete(self, name: str, cat: str, track: str, t0: float,
+                 t1: float | None = None, args: dict | None = None) -> None:
+        """One "X" (complete) span from ``t0`` to ``t1`` (now if None),
+        both absolute ``perf_counter`` readings — pass the *same*
+        timestamps an existing wall-time accumulator measured and the
+        trace agrees with it exactly."""
+        if t1 is None:
+            t1 = time.perf_counter()
+        self._emit(("X", name, cat, track, t0 - self._t0,
+                    max(t1 - t0, 0.0), args))
+
+    def instant(self, name: str, cat: str, track: str,
+                args: dict | None = None) -> None:
+        """One "i" (instant) event at the current time."""
+        self._emit(("i", name, cat, track,
+                    time.perf_counter() - self._t0, 0.0, args))
+
+    @contextmanager
+    def span(self, name: str, cat: str, track: str,
+             args: dict | None = None):
+        """Context-managed :meth:`complete` around the block."""
+        t0 = time.perf_counter()
+        try:
+            yield self
+        finally:
+            self.complete(name, cat, track, t0, args=args)
+
+    # ------------------------------------------------------------ inspect
+    @property
+    def n_emitted(self) -> int:
+        with self._lock:
+            return self._n
+
+    @property
+    def n_dropped(self) -> int:
+        """Exactly how many events the ring overwrote (oldest first)."""
+        with self._lock:
+            return max(self._n - self.capacity, 0)
+
+    @property
+    def n_retained(self) -> int:
+        with self._lock:
+            return min(self._n, self.capacity)
+
+    def events(self) -> list:
+        """Retained events, oldest first (a consistent locked copy)."""
+        with self._lock:
+            if self._n <= self.capacity:
+                return self._buf[:self._n]
+            cut = self._n % self.capacity
+            return self._buf[cut:] + self._buf[:cut]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._buf = [None] * self.capacity
+            self._n = 0
+            self._t0 = time.perf_counter()
+
+    # ------------------------------------------------------------ export
+    def to_chrome(self) -> dict:
+        """Chrome trace-event JSON object (the ``traceEvents`` format
+        Perfetto and ``chrome://tracing`` load)."""
+        tids: dict[str, int] = {}
+        body = []
+        for ph, name, cat, track, ts, dur, args in self.events():
+            tid = tids.get(track)
+            if tid is None:
+                tid = tids[track] = len(tids) + 1
+            ev = {"name": name, "cat": cat, "ph": ph, "pid": 1, "tid": tid,
+                  "ts": round(ts * 1e6, 3)}
+            if ph == "X":
+                ev["dur"] = round(dur * 1e6, 3)
+            elif ph == "i":
+                ev["s"] = "t"      # thread-scoped instant
+            if args:
+                ev["args"] = args
+            body.append(ev)
+        meta = [{"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+                 "args": {"name": "agnes"}}]
+        for track, tid in tids.items():
+            meta.append({"name": "thread_name", "ph": "M", "pid": 1,
+                         "tid": tid, "args": {"name": track}})
+            meta.append({"name": "thread_sort_index", "ph": "M", "pid": 1,
+                         "tid": tid, "args": {"sort_index": tid}})
+        return {"traceEvents": meta + body, "displayTimeUnit": "ms",
+                "otherData": {"clock": "perf_counter",
+                              "dropped_events": self.n_dropped}}
+
+    def export_chrome(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+        return path
+
+
+def maybe_span(recorder: TraceRecorder | None, name: str, cat: str,
+               track: str, args: dict | None = None):
+    """``recorder.span(...)`` or a no-op context when tracing is off."""
+    if recorder is None:
+        return nullcontext()
+    return recorder.span(name, cat, track, args=args)
+
+
+def validate_chrome_trace(payload: dict) -> list[str]:
+    """Schema-check an exported Chrome trace object (or loaded JSON).
+
+    Returns a list of violation strings — empty means valid.  Checks
+    the shape Perfetto's trace-event importer requires: a
+    ``traceEvents`` list of dicts with ``name``/``ph``/``pid``/``tid``,
+    numeric non-negative ``ts`` (and ``dur`` for "X"), a scope on
+    instants, and a ``thread_name`` metadata event for every tid that
+    carries events.
+    """
+    errs: list[str] = []
+    evs = payload.get("traceEvents")
+    if not isinstance(evs, list):
+        return ["traceEvents missing or not a list"]
+    named_tids = set()
+    used_tids = set()
+    for i, ev in enumerate(evs):
+        if not isinstance(ev, dict):
+            errs.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "M", "B", "E"):
+            errs.append(f"event {i}: bad ph {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str):
+            errs.append(f"event {i}: name missing")
+        if not isinstance(ev.get("pid"), int) \
+                or not isinstance(ev.get("tid"), int):
+            errs.append(f"event {i}: pid/tid must be ints")
+            continue
+        if ph == "M":
+            if ev["name"] == "thread_name":
+                named_tids.add(ev["tid"])
+            continue
+        used_tids.add(ev["tid"])
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errs.append(f"event {i}: bad ts {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errs.append(f"event {i}: bad dur {dur!r}")
+        if ph == "i" and ev.get("s") not in ("t", "p", "g"):
+            errs.append(f"event {i}: instant missing scope")
+    for tid in sorted(used_tids - named_tids):
+        errs.append(f"tid {tid} has events but no thread_name metadata")
+    return errs
+
+
+# ------------------------------------------------------------------ metrics
+_DEFAULT_BUCKETS = tuple(1e-6 * (4.0 ** i) for i in range(13))  # 1us..~67s
+
+
+class _Metric:
+    __slots__ = ("name", "help", "_lock")
+    kind = "none"
+
+    def __init__(self, name: str, help: str, lock: threading.Lock):
+        self.name = name
+        self.help = help
+        self._lock = lock
+
+
+class CounterMetric(_Metric):
+    __slots__ = ("value",)
+    kind = "counter"
+
+    def __init__(self, name, help, lock):
+        super().__init__(name, help, lock)
+        self.value = 0
+
+    def inc(self, v: float = 1) -> None:
+        with self._lock:
+            self.value += v
+
+
+class GaugeMetric(_Metric):
+    __slots__ = ("value",)
+    kind = "gauge"
+
+    def __init__(self, name, help, lock):
+        super().__init__(name, help, lock)
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self.value = v
+
+
+class HistogramMetric(_Metric):
+    __slots__ = ("buckets", "counts", "sum", "count")
+    kind = "histogram"
+
+    def __init__(self, name, help, lock, buckets=None):
+        super().__init__(name, help, lock)
+        self.buckets = tuple(sorted(buckets or _DEFAULT_BUCKETS))
+        self.counts = [0] * (len(self.buckets) + 1)  # last = overflow
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, v: float) -> None:
+        i = bisect.bisect_left(self.buckets, v)
+        with self._lock:
+            self.counts[i] += 1
+            self.sum += v
+            self.count += 1
+
+
+class MetricsRegistry:
+    """Named counters / gauges / histograms under one namespace.
+
+    All mutation and the snapshot share one lock, so
+    :meth:`snapshot` is atomic: it can never observe a half-applied
+    increment, and two snapshots bracket a window whose :meth:`delta`
+    is exact.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: dict[str, _Metric] = {}
+
+    def _get(self, name: str, cls, help: str, **kw) -> _Metric:
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(name, help, self._lock, **kw)
+            elif not isinstance(m, cls):
+                raise TypeError(f"metric {name!r} is a {m.kind}, "
+                                f"not a {cls.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> CounterMetric:
+        return self._get(name, CounterMetric, help)
+
+    def gauge(self, name: str, help: str = "") -> GaugeMetric:
+        return self._get(name, GaugeMetric, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets=None) -> HistogramMetric:
+        return self._get(name, HistogramMetric, help, buckets=buckets)
+
+    def set_gauges(self, prefix: str, mapping) -> None:
+        """Fold a nested summary dict into ``{prefix}.{path}`` gauges.
+
+        Numeric leaves become gauges; dicts recurse; lists recurse with
+        index keys; non-numeric leaves are skipped.  This is the bridge
+        from the pre-telemetry summary dicts (``engine.io_stats()``,
+        serving rooflines) into the unified namespace.
+        """
+        if isinstance(mapping, dict):
+            items = mapping.items()
+        elif isinstance(mapping, (list, tuple)):
+            items = enumerate(mapping)
+        else:
+            return
+        for k, v in items:
+            name = f"{prefix}.{k}"
+            if isinstance(v, bool):
+                self.gauge(name).set(int(v))
+            elif isinstance(v, (int, float)):
+                self.gauge(name).set(v)
+            elif isinstance(v, (dict, list, tuple)):
+                self.set_gauges(name, v)
+
+    # ------------------------------------------------------------ read
+    def snapshot(self) -> dict:
+        """Atomic point-in-time copy: ``{name: value}`` for counters
+        and gauges, ``{name: {"count", "sum", "buckets"}}`` for
+        histograms."""
+        with self._lock:
+            out = {}
+            for name, m in self._metrics.items():
+                if m.kind == "histogram":
+                    out[name] = {"count": m.count, "sum": m.sum,
+                                 "buckets": list(m.counts)}
+                else:
+                    out[name] = m.value
+            return out
+
+    def delta(self, prev: dict) -> dict:
+        """Window between ``prev`` (an earlier :meth:`snapshot`) and
+        now: counters and histograms are differenced, gauges pass
+        through at their current value."""
+        with self._lock:
+            kinds = {n: m.kind for n, m in self._metrics.items()}
+        cur = self.snapshot()
+        out = {}
+        for name, v in cur.items():
+            kind = kinds.get(name, "gauge")
+            p = prev.get(name)
+            if kind == "counter" and p is not None:
+                out[name] = v - p
+            elif kind == "histogram" and isinstance(p, dict):
+                out[name] = {
+                    "count": v["count"] - p["count"],
+                    "sum": v["sum"] - p["sum"],
+                    "buckets": [a - b for a, b in zip(v["buckets"],
+                                                      p["buckets"])]}
+            else:
+                out[name] = v
+        return out
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition (metric names sanitized to the
+        ``[a-zA-Z0-9_]`` charset, histograms with cumulative
+        ``_bucket{le=...}`` series)."""
+        lines: list[str] = []
+        with self._lock:
+            for name, m in sorted(self._metrics.items()):
+                pname = _prom_name(name)
+                if m.help:
+                    lines.append(f"# HELP {pname} {m.help}")
+                lines.append(f"# TYPE {pname} {m.kind}")
+                if m.kind == "histogram":
+                    cum = 0
+                    for ub, c in zip(m.buckets, m.counts):
+                        cum += c
+                        lines.append(f'{pname}_bucket{{le="{ub:g}"}} {cum}')
+                    cum += m.counts[-1]
+                    lines.append(f'{pname}_bucket{{le="+Inf"}} {cum}')
+                    lines.append(f"{pname}_sum {m.sum:g}")
+                    lines.append(f"{pname}_count {m.count}")
+                else:
+                    v = m.value
+                    lines.append(f"{pname} {v:g}" if isinstance(v, float)
+                                 else f"{pname} {v}")
+        return "\n".join(lines) + "\n"
+
+
+def _prom_name(name: str) -> str:
+    out = "".join(c if c.isalnum() or c == "_" else "_" for c in name)
+    return out if not out[:1].isdigit() else "_" + out
+
+
+def format_metrics(snapshot: dict, include: tuple = (),
+                   skip_zero: bool = True) -> str:
+    """One-line compact render of a snapshot/delta: ``k=v`` pairs.
+
+    ``include`` filters by name prefix; zero-valued entries are dropped
+    by default so per-epoch deltas read as "what happened this epoch".
+    """
+    parts = []
+    for name in sorted(snapshot):
+        if include and not any(name.startswith(p) for p in include):
+            continue
+        v = snapshot[name]
+        if isinstance(v, dict):                       # histogram
+            n = v.get("count", 0)
+            if skip_zero and not n:
+                continue
+            mean = v.get("sum", 0.0) / max(n, 1)
+            parts.append(f"{name}[n={n} mean={mean:.3g}]")
+        else:
+            if skip_zero and not v:
+                continue
+            parts.append(f"{name}={v:.4g}" if isinstance(v, float)
+                         else f"{name}={v}")
+    return " ".join(parts)
+
+
+# ------------------------------------------------------------------- bundle
+class Telemetry:
+    """One engine's observability bundle.
+
+    ``metrics`` is always live (counter increments are cheap and the
+    registry is the controller's substrate); ``trace`` is a
+    :class:`TraceRecorder` only when tracing is enabled — instrumented
+    hot paths hold the contract ``tr = tel.trace; if tr is not None:``
+    so a disabled recorder costs exactly one branch.
+    """
+
+    __slots__ = ("metrics", "trace")
+
+    def __init__(self, trace: bool = False, capacity: int = 65536,
+                 metrics: MetricsRegistry | None = None):
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.trace = TraceRecorder(capacity) if trace else None
+
+
+# ---------------------------------------------------------------- breakdown
+def fig2_breakdown(trace_or_events) -> dict:
+    """The paper's Fig. 2 decomposition, reconstructed from a trace.
+
+    Sums span durations per category.  ``prepare`` is carried only by
+    the top-level ``AgnesEngine.prepare`` spans and ``train`` only by
+    the pipeline consumer's per-hyperbatch spans — nested
+    sub-categories (``prepare.stage``, ``train.step``, ``transfer``)
+    are reported separately and never double count into their parents —
+    so ``prepare_s`` / ``train_s`` agree with
+    :class:`~repro.gnn.pipeline.OverlapReport`'s
+    ``prepare_wall_s`` / ``train_wall_s`` (the bench floor-guards the
+    agreement).  ``transfer_s`` is the host→device landing inside the
+    train spans, the paper's third bar.
+    """
+    if hasattr(trace_or_events, "events"):
+        evs = trace_or_events.events()
+    else:
+        evs = list(trace_or_events)
+    by_cat: dict[str, float] = {}
+    n_cat: dict[str, int] = {}
+    stages: dict[str, float] = {}
+    for ev in evs:
+        ph, name, cat, _track, _ts, dur, _args = ev
+        if ph != "X":
+            n_cat[cat] = n_cat.get(cat, 0)
+            continue
+        by_cat[cat] = by_cat.get(cat, 0.0) + dur
+        n_cat[cat] = n_cat.get(cat, 0) + 1
+        if cat == "prepare.stage":
+            key = name.split(":", 1)[0]
+            stages[key] = stages.get(key, 0.0) + dur
+    prepare = by_cat.get("prepare", 0.0)
+    train = by_cat.get("train", 0.0)
+    transfer = by_cat.get("transfer", 0.0)
+    denom = prepare + train
+    out = {
+        "prepare_s": prepare,
+        "train_s": train,
+        "transfer_s": transfer,           # nested inside train_s
+        "train_step_s": by_cat.get("train.step", 0.0),
+        "prepare_fraction": prepare / denom if denom else 0.0,
+        "train_fraction": train / denom if denom else 0.0,
+        "stages_s": stages,
+        "by_category_s": {k: round(v, 6) for k, v in sorted(by_cat.items())},
+        "spans_per_category": dict(sorted(n_cat.items())),
+    }
+    if hasattr(trace_or_events, "n_dropped"):
+        out["dropped_events"] = trace_or_events.n_dropped
+    return out

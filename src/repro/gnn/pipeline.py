@@ -279,6 +279,13 @@ class PipelinedExecutor:
         train_s = 0.0
         n_hb = n_mb = 0
         prev_wall = prev_prep = prev_train = 0.0  # adaptive-signal window
+        # telemetry (core/telemetry.py): consumer "train" spans reuse the
+        # exact perf_counter readings that accumulate train_s, so the
+        # trace-derived Fig.2 train bar equals OverlapReport.train_wall_s
+        tel = getattr(self.engine, "telemetry", None)
+        tr = tel.trace if tel is not None else None
+        if tel is not None and getattr(self.trainer, "telemetry", 1) is None:
+            self.trainer.telemetry = tel  # transfer/step spans, opt-in field
         t_epoch = time.perf_counter()
         self._producer.start()
         try:
@@ -312,7 +319,11 @@ class PipelinedExecutor:
                         cache = getattr(self.engine, "feature_cache", None)
                         if cache is not None:
                             cache.check_invariants()
-                train_s += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                train_s += t1 - t0
+                if tr is not None:
+                    tr.complete(f"train:hb{n_hb - 1}", "train", "train",
+                                t0, t1, args={"n_minibatches": len(payload)})
                 if self.adaptive_io and hasattr(self.engine,
                                                 "set_io_queue_depth"):
                     # windowed signal: this hyperbatch's deltas only — the
@@ -343,8 +354,20 @@ class PipelinedExecutor:
             # the next epoch's plans split against the migrated layout
             migration = self.engine.end_epoch()
         wall = time.perf_counter() - t_epoch
-        return OverlapReport(wall, prepare_s[0], train_s, n_hb, n_mb,
-                             losses, reports, queue_depths, migration)
+        report = OverlapReport(wall, prepare_s[0], train_s, n_hb, n_mb,
+                               losses, reports, queue_depths, migration)
+        if tr is not None:
+            tr.complete(f"epoch:{epoch}", "pipeline", "pipeline",
+                        t_epoch, t_epoch + wall,
+                        args={"n_hyperbatches": n_hb, "n_minibatches": n_mb,
+                              "hidden_fraction": round(
+                                  report.hidden_fraction, 4)})
+        if tel is not None:
+            tel.metrics.counter("pipeline.hyperbatches").inc(n_hb)
+            tel.metrics.counter("pipeline.minibatches").inc(n_mb)
+            tel.metrics.gauge("pipeline.hidden_fraction").set(
+                round(report.hidden_fraction, 4))
+        return report
 
     # ------------------------------------------------------- lifecycle
     def close(self) -> None:

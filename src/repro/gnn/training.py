@@ -49,6 +49,9 @@ class GNNTrainer:
     # boundary; requires feature_placement to be set
     feature_table: object | None = None
     labels: np.ndarray | None = None
+    # core.telemetry.Telemetry: when set, train_minibatch emits
+    # "transfer" (host->device + padding) and "train.step" spans
+    telemetry: object | None = None
 
     def __post_init__(self):
         key = jax.random.PRNGKey(self.seed)
@@ -82,18 +85,30 @@ class GNNTrainer:
     # ------------------------------------------------------------ api
     def train_minibatch(self, prepared: PreparedMinibatch) -> float:
         assert self.labels is not None, "set trainer.labels first"
+        tel = self.telemetry
+        tr = tel.trace if tel is not None else None
+        t_in = time.perf_counter() if tr is not None else 0.0
         if self.feature_placement is not None and isinstance(
                 prepared.features, np.ndarray):
             prepared = prepared.to_device(backend=self.feature_placement,
                                           table=self.feature_table)
         mfg = pad_mfg(prepared.mfg, prepared.features, self.labels)
         t0 = time.perf_counter()
+        if tr is not None:
+            # transfer = device placement + jit-stable padding; nested
+            # inside the pipeline's "train" span on the same track
+            tr.complete("transfer", "transfer", "train", t_in, t0,
+                        args={"n_targets": int(prepared.mfg.nodes[-1].size)})
         self.params, self.opt_state, loss, _ = self._step_fn(
             self.params, self.opt_state, mfg, self.arch, self.lr,
             self.backend)
         loss = float(loss)  # block for honest timing
-        self.compute_time += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.compute_time += t1 - t0
         self.steps += 1
+        if tr is not None:
+            tr.complete(f"step:{self.steps - 1}", "train.step", "train",
+                        t0, t1, args={"loss": round(float(loss), 5)})
         return loss
 
     def evaluate(self, prepared_list: list[PreparedMinibatch]) -> float:

@@ -1,0 +1,310 @@
+"""Unified telemetry (core/telemetry.py): trace ring, metrics, Fig.2.
+
+Covers:
+
+* span nesting + event ordering in the ring, instants, wraparound with
+  an *exact* dropped-event count, and a multi-writer hammer (plus a
+  concurrent ``events()`` reader) asserting the emit counter is exact;
+* the metrics registry — atomic snapshot, counter/histogram-aware
+  delta, Prometheus text rendering, kind-conflict errors, nested
+  summary folding via ``set_gauges``, and exact concurrent increments;
+* satellite: ``IOStats.merge``/``summary`` completeness, field-driven —
+  adding a counter to the dataclass without carrying it through both is
+  a test failure, not a silently dropped stat;
+* Chrome trace-event export: the *file* written by ``export_chrome``
+  round-trips through ``validate_chrome_trace`` cleanly and carries the
+  per-array / per-tenant tracks;
+* Fig.2 fidelity: on a traced pipelined epoch the trace-derived
+  prepare/train bars agree with ``OverlapReport`` wall times;
+* the nullability contract (``trace=False`` ⇒ ``telemetry.trace is
+  None`` while metrics stay live) and concurrent serving tenants
+  tracing onto separate tracks.
+"""
+import dataclasses
+import json
+import threading
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import (AgnesConfig, AgnesEngine, IOStats, MetricsRegistry,
+                        ServingTier, TraceRecorder, fig2_breakdown,
+                        validate_chrome_trace)
+from repro.core.device_model import SUMMARY_FIELD_MAP
+from repro.gnn import GNNTrainer, PipelinedExecutor
+
+CFG = dict(block_size=16384, minibatch_size=64, hyperbatch_size=2,
+           fanouts=(4, 4), graph_buffer_bytes=1 << 20,
+           feature_buffer_bytes=1 << 20, async_io=False)
+
+
+def _engine(tiny_ds, **over):
+    g, f = tiny_ds.reopen_stores()
+    return AgnesEngine(g, f, AgnesConfig(**dict(CFG, **over)))
+
+
+# ------------------------------------------------------------------ recorder
+def test_span_nesting_and_order():
+    rec = TraceRecorder(capacity=64)
+    with rec.span("outer", "cat", "t0"):
+        with rec.span("inner", "cat", "t0", args={"k": 1}):
+            pass
+        rec.instant("mark", "cat", "t0")
+    evs = rec.events()
+    assert [e[1] for e in evs] == ["inner", "mark", "outer"]  # close order
+    inner, mark, outer = evs
+    assert inner[0] == "X" and outer[0] == "X" and mark[0] == "i"
+    # proper nesting on the shared timeline: inner ⊆ outer
+    assert outer[4] <= inner[4]
+    assert inner[4] + inner[5] <= outer[4] + outer[5] + 1e-9
+    assert inner[6] == {"k": 1}
+    assert rec.n_emitted == 3 and rec.n_dropped == 0
+
+
+def test_ring_wraparound_exact_drop_count():
+    rec = TraceRecorder(capacity=16)
+    for i in range(50):
+        rec.instant(f"e{i}", "c", "t")
+    assert rec.n_emitted == 50
+    assert rec.n_dropped == 34            # exactly 50 - 16, oldest first
+    assert rec.n_retained == 16
+    assert [e[1] for e in rec.events()] == [f"e{i}" for i in range(34, 50)]
+    assert rec.to_chrome()["otherData"]["dropped_events"] == 34
+    rec.clear()
+    assert rec.n_emitted == 0 and rec.events() == []
+
+
+def test_trace_thread_safety_hammer():
+    rec = TraceRecorder(capacity=8192)
+    stop = threading.Event()
+    reader_sane = []
+
+    def writer(tag):
+        for i in range(500):
+            rec.instant(f"{tag}:{i}", "hammer", f"track:{tag}")
+
+    def reader():
+        while not stop.is_set():
+            evs = rec.events()          # consistent copy mid-write
+            reader_sane.append(len(evs) <= 8192
+                               and all(e is not None for e in evs))
+
+    rt = threading.Thread(target=reader)
+    ws = [threading.Thread(target=writer, args=(t,)) for t in range(8)]
+    rt.start()
+    for w in ws:
+        w.start()
+    for w in ws:
+        w.join()
+    stop.set()
+    rt.join()
+    assert rec.n_emitted == 4000 and rec.n_dropped == 0
+    assert reader_sane and all(reader_sane)
+    # small ring under the same load: the drop count stays exact
+    rec2 = TraceRecorder(capacity=64)
+    ws = [threading.Thread(
+        target=lambda t=t: [rec2.instant(f"{t}:{i}", "h", "t")
+                            for i in range(500)]) for t in range(8)]
+    for w in ws:
+        w.start()
+    for w in ws:
+        w.join()
+    assert rec2.n_emitted == 4000
+    assert rec2.n_dropped == 4000 - 64
+    assert len(rec2.events()) == 64
+
+
+# ------------------------------------------------------------------- metrics
+def test_metrics_snapshot_delta_and_prometheus():
+    reg = MetricsRegistry()
+    c = reg.counter("io.reads", help="total reads")
+    g = reg.gauge("queue.depth")
+    h = reg.histogram("latency_s", buckets=(0.001, 0.01, 0.1))
+    c.inc(3)
+    g.set(7)
+    h.observe(0.005)
+    h.observe(5.0)                        # overflow bucket
+    s0 = reg.snapshot()
+    assert s0["io.reads"] == 3 and s0["queue.depth"] == 7
+    assert s0["latency_s"] == {"count": 2, "sum": 5.005,
+                               "buckets": [0, 1, 0, 1]}
+    c.inc(2)
+    g.set(9)
+    h.observe(0.0001)
+    d = reg.delta(s0)
+    assert d["io.reads"] == 2             # counters difference
+    assert d["queue.depth"] == 9          # gauges pass through
+    assert d["latency_s"]["count"] == 1
+    assert d["latency_s"]["buckets"] == [1, 0, 0, 0]
+    text = reg.render_prometheus()
+    assert "# HELP io_reads total reads" in text
+    assert "# TYPE io_reads counter" in text
+    assert "io_reads 5" in text
+    assert '# TYPE latency_s histogram' in text
+    assert 'latency_s_bucket{le="+Inf"} 3' in text
+    assert "latency_s_count 3" in text
+    with pytest.raises(TypeError):
+        reg.gauge("io.reads")             # kind conflict fails loudly
+
+
+def test_metrics_concurrent_increments_exact():
+    reg = MetricsRegistry()
+    c = reg.counter("hits")
+    h = reg.histogram("obs_s")
+
+    def work():
+        for _ in range(1000):
+            c.inc()
+            h.observe(0.5)
+
+    ts = [threading.Thread(target=work) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    snap = reg.snapshot()
+    assert snap["hits"] == 4000
+    assert snap["obs_s"]["count"] == 4000
+
+
+def test_set_gauges_folds_nested_summaries():
+    reg = MetricsRegistry()
+    reg.set_gauges("io", {"graph": {"bytes": 10, "ok": True},
+                          "arr": [1.5, 2.5], "skip": "a-string"})
+    s = reg.snapshot()
+    assert s["io.graph.bytes"] == 10
+    assert s["io.graph.ok"] == 1
+    assert s["io.arr.0"] == 1.5 and s["io.arr.1"] == 2.5
+    assert "io.skip" not in s
+
+
+# ---------------------------------------------------- IOStats completeness
+def test_iostats_merge_and_summary_cover_every_field():
+    """Field-driven: a counter added to IOStats but dropped by merge()
+    or summary() fails here, instead of silently zeroing stats."""
+    a, b = IOStats(), IOStats()
+    for i, f in enumerate(dataclasses.fields(IOStats), start=1):
+        if isinstance(getattr(a, f.name), Counter):
+            getattr(a, f.name).update({i: i})
+            getattr(b, f.name).update({i: 2 * i})
+        else:
+            setattr(a, f.name, i)
+            setattr(b, f.name, 2 * i)
+    a.merge(b)
+    for i, f in enumerate(dataclasses.fields(IOStats), start=1):
+        v = getattr(a, f.name)
+        if isinstance(v, Counter):
+            assert v == Counter({i: 3 * i}), f"merge() dropped {f.name}"
+        else:
+            assert v == 3 * i, f"merge() dropped {f.name}"
+    summ = a.summary()
+    for f in dataclasses.fields(IOStats):
+        key = SUMMARY_FIELD_MAP.get(f.name, f.name)
+        assert key in summ, f"summary() missing {f.name} (as {key})"
+
+
+# ------------------------------------------------------------ chrome export
+def test_chrome_validator_catches_violations():
+    assert validate_chrome_trace({}) == ["traceEvents missing or not a list"]
+    bad = {"traceEvents": [
+        {"name": "x", "ph": "X", "pid": 1, "tid": 1, "ts": -1.0, "dur": 1.0},
+        {"name": "y", "ph": "i", "pid": 1, "tid": 1, "ts": 0.0},
+    ]}
+    errs = validate_chrome_trace(bad)
+    assert any("bad ts" in e for e in errs)
+    assert any("missing scope" in e for e in errs)
+    assert any("thread_name" in e for e in errs)
+
+
+def test_chrome_export_file_is_schema_valid(tiny_ds, tmp_path):
+    eng = _engine(tiny_ds, trace=True)
+    eng.prepare([np.arange(64), np.arange(64, 128)], epoch=0)
+    path = eng.telemetry.trace.export_chrome(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        payload = json.load(f)
+    assert validate_chrome_trace(payload) == []
+    evs = payload["traceEvents"]
+    tracks = {e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert any(t.startswith("prepare:") for t in tracks)
+    assert any(t.startswith("array:") for t in tracks)
+    cats = {e.get("cat") for e in evs if e["ph"] != "M"}
+    assert {"prepare", "prepare.stage", "io.submit", "io.run"} <= cats
+    eng.close()
+
+
+# ------------------------------------------------------------ integration
+def test_fig2_breakdown_agrees_with_overlap_report(tiny_ds):
+    eng = _engine(tiny_ds, trace=True)
+    tr = GNNTrainer(arch="gcn", in_dim=32, hidden=32, n_classes=16,
+                    n_layers=2, seed=7)
+    tr.labels = tiny_ds.labels
+    with PipelinedExecutor(eng, tr, depth=2) as ex:
+        report = ex.run_epoch(np.arange(256), epoch=0)
+    rec = eng.telemetry.trace
+    fb = fig2_breakdown(rec)
+    assert fb["dropped_events"] == 0
+    # the spans reuse the report's own perf_counter readings
+    assert fb["train_s"] == pytest.approx(report.train_wall_s, rel=1e-9)
+    assert fb["prepare_s"] == pytest.approx(report.prepare_wall_s, rel=0.02)
+    assert fb["prepare_fraction"] + fb["train_fraction"] == \
+        pytest.approx(1.0)
+    # nested sub-bars stay inside their parents
+    assert fb["transfer_s"] + fb["train_step_s"] <= fb["train_s"] + 1e-9
+    assert sum(fb["stages_s"].values()) <= fb["prepare_s"] * 1.02
+    n = fb["spans_per_category"]
+    assert n["prepare"] == report.n_hyperbatches
+    assert n["train"] == report.n_hyperbatches
+    assert n["train.step"] == report.n_minibatches
+    assert validate_chrome_trace(rec.to_chrome()) == []
+    eng.close()
+
+
+def test_disabled_trace_keeps_metrics_live(tiny_ds):
+    eng = _engine(tiny_ds)                # trace defaults to False
+    assert eng.telemetry.trace is None
+    eng.prepare([np.arange(64)], epoch=0)
+    snap = eng.metrics_snapshot()
+    assert snap["io.graph.runs"] > 0      # counters flow without a trace
+    assert snap["agnes.graph.bytes_read"] > 0  # summary gauges folded in
+    eng.close()
+
+
+def test_serving_tenants_trace_onto_separate_tracks(tiny_ds):
+    eng = _engine(tiny_ds, trace=True, fanouts=(), feature_cache_rows=1,
+                  n_arrays=2, placement="stripe",
+                  max_coalesce_bytes=64 << 10, io_queue_depth=4)
+    tier = ServingTier(eng)
+    tier.open_tenant("inference")
+    errs: list = []
+
+    def work(tenant, seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for i in range(3):
+                tier.prepare(
+                    tenant,
+                    [rng.choice(tiny_ds.n_nodes, 32, replace=False)],
+                    epoch=i)
+        except Exception as e:            # surfaced after join
+            errs.append((tenant, e))
+
+    ts = [threading.Thread(target=work, args=("training", 0)),
+          threading.Thread(target=work, args=("inference", 1))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs, errs
+    rec = eng.telemetry.trace
+    assert validate_chrome_trace(rec.to_chrome()) == []
+    tracks = {e[3] for e in rec.events()}
+    assert {"serving:training", "serving:inference"} <= tracks
+    assert "prepare:inference" in tracks  # tenant-labeled session stages
+    snap = eng.telemetry.metrics.snapshot()
+    assert snap["serving.training.requests"] == 3
+    assert snap["serving.inference.requests"] == 3
+    assert snap["serving.training.latency_s"]["count"] == 3
+    tier.close()
+    eng.close()
