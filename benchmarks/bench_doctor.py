@@ -1,0 +1,324 @@
+"""Storage doctor ground truth: planted bottlenecks, graded diagnosis.
+
+The doctor (``core/diagnosis.py``) is only trustworthy if it names the
+*planted* bottleneck, not a plausible one.  This benchmark constructs
+eight labeled scenarios on one ring workload — each engineered so a
+single cause dominates by construction — runs the real engine through
+each, and grades ``AgnesEngine.diagnose`` / ``ServingTier.diagnose``
+against the label:
+
+========== ==================== =====================================
+scenario   expected primary     how the bottleneck is planted
+========== ==================== =====================================
+bw         bw-bound             contiguous tiles, 8 MiB coalesce,
+                                qd 32 — few huge sequential requests
+iops       iops-bound           scattered ego islands, per-block path
+                                (coalesce off), qd 8 — tiny random
+                                requests at healthy depth
+qd         queue-starved        same scatter, qd clamped to 1 — the
+                                submitter starves the device queue
+cache      cache-miss-bound     feature cache 64 rows vs a ~2.5k-row
+                                working set replayed 3 epochs (graph
+                                fully buffered, so feature I/O
+                                dominates and the cache thrashes)
+dropout    fault-degraded       4 arrays, array 3 drops on its first
+                                read — reads served degraded
+latency    hedge-stall          seeded latency spikes (p=0.2, 40x)
+                                with hedging armed
+admission  admission-throttled  a 1%-share tenant behind a saturating
+                                bulk tenant on one admission queue
+clean      (no causal finding)  tiles, ample cache, no faults — the
+                                watchdog and causal detectors must
+                                stay silent (zero false positives)
+========== ==================== =====================================
+
+Graded as ``n_correct`` out of 8 (the seven planted primaries plus the
+alert-free clean run); floors ``MIN_CORRECT`` and
+``MIN_CLEAN_ALERT_FREE`` are enforced inline and re-checked from
+``BENCH_doctor.json`` by ``benchmarks.check_regression``.  Fixed
+geometry in both tiers — a deterministic grading matrix at container
+scale, not a scaling measurement.
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+import numpy as np
+
+from .common import WORKDIR, emit, maybe_export_trace
+
+from repro.core import (AgnesConfig, AgnesEngine, AnomalyWatchdog,
+                        FeatureBlockStore, GraphBlockStore, NVMeModel,
+                        QoSClass, ServingTier, StorageTopology)
+
+MIN_CORRECT = 7           # of N_SCENARIOS labeled scenarios
+MIN_CLEAN_ALERT_FREE = 1  # clean run: 1 <=> zero alerts + zero causal
+
+N_SCENARIOS = 8
+CAUSAL_KINDS = ("fault-degraded", "admission-throttled",
+                "cache-miss-bound", "hedge-stall")
+
+N_NODES = 4_096
+RING_K = 8                # ring neighbors per side (degree 16, uniform)
+G_BLOCK = 2048
+F_DIM = 128               # 512 B rows -> 4 rows per feature block
+F_BLOCK = 2048
+MB, N_MB = 64, 4          # tile minibatch geometry (256 nodes/hyperbatch)
+SMB, SN_MB = 24, 2        # scatter geometry (48 isolated ego islands)
+
+DROPOUT_NOW = "dropout:array=3,at=0"
+LATENCY_SPIKES = "latency:p=0.2,factor=40"
+
+
+def _build_workload() -> tuple[str, str]:
+    gpath = os.path.join(WORKDIR, "doctor_ring.graph")
+    fpath = os.path.join(WORKDIR, "doctor_ring.feat")
+    if not os.path.exists(gpath + ".meta.json"):
+        offs = np.concatenate([np.arange(-RING_K, 0),
+                               np.arange(1, RING_K + 1)])
+        indices = ((np.arange(N_NODES)[:, None] + offs[None, :])
+                   % N_NODES).astype(np.int64).ravel()
+        indptr = (np.arange(N_NODES + 1, dtype=np.int64) * (2 * RING_K))
+        GraphBlockStore.build(gpath, indptr, indices, block_size=G_BLOCK)
+    if not os.path.exists(fpath + ".meta.json"):
+        rng = np.random.default_rng(7)
+        feats = rng.normal(0, 1, (N_NODES, F_DIM)).astype(np.float32)
+        FeatureBlockStore.build(fpath, feats, block_size=F_BLOCK)
+    return gpath, fpath
+
+
+def _engine(gpath: str, fpath: str, n_arrays: int = 1,
+            **over) -> AgnesEngine:
+    g = GraphBlockStore.open(gpath, NVMeModel())
+    f = FeatureBlockStore.open(fpath, NVMeModel())
+    kw = dict(block_size=G_BLOCK, minibatch_size=MB, hyperbatch_size=N_MB,
+              fanouts=(RING_K,), graph_buffer_bytes=64 << 10,
+              feature_buffer_bytes=64 << 10,
+              # capacity >= every row touched: the cache never evicts,
+              # so cold one-pass misses cannot masquerade as a planted
+              # cache-miss-bound scenario
+              cache_capacity_rows=N_NODES, async_io=False,
+              io_queue_depth=8, max_coalesce_bytes=64 << 10,
+              placement="stripe", trace=True)
+    kw.update(over)
+    topo = StorageTopology.uniform(n_arrays) if n_arrays > 1 else None
+    return AgnesEngine(g, f, AgnesConfig(**kw), topology=topo)
+
+
+def _tiles(hb: int) -> list[np.ndarray]:
+    """Contiguous tiles marching over the ring: long sequential runs."""
+    lo = (hb * N_MB * MB) % N_NODES
+    return [(lo + np.arange(j * MB, (j + 1) * MB)) % N_NODES
+            for j in range(N_MB)]
+
+
+def _scatter(hb: int) -> list[np.ndarray]:
+    """48 isolated ego islands ~85 nodes apart: each island spans ~2
+    graph blocks and ~5 feature blocks, so per-block reads are random
+    heads with short sequential tails — the iops arm by construction."""
+    seeds = (hb * 409 + np.arange(SN_MB * SMB) * 85) % N_NODES
+    return [seeds[j * SMB:(j + 1) * SMB].astype(np.int64)
+            for j in range(SN_MB)]
+
+
+def _grade(report, expected: str) -> dict:
+    top = report.findings[0] if report.findings else None
+    return {"expected": expected, "primary": report.primary,
+            "correct": int(report.primary == expected),
+            "severity": top.severity if top else 0.0}
+
+
+# ---------------------------------------------------------------- scenarios
+def _scn_bw(gpath, fpath):
+    eng = _engine(gpath, fpath, max_coalesce_bytes=8 << 20,
+                  io_queue_depth=32)
+    for hb in range(6):
+        eng.prepare(_tiles(hb), epoch=0)
+    report = eng.diagnose()
+    maybe_export_trace(eng, "doctor_bw")
+    eng.close()
+    return report
+
+
+def _scn_iops(gpath, fpath):
+    eng = _engine(gpath, fpath, minibatch_size=SMB, hyperbatch_size=SN_MB,
+                  max_coalesce_bytes=0, io_queue_depth=8)
+    for hb in range(6):
+        eng.prepare(_scatter(hb), epoch=0)
+    report = eng.diagnose()
+    maybe_export_trace(eng, "doctor_iops")
+    eng.close()
+    return report
+
+
+def _scn_qd(gpath, fpath):
+    eng = _engine(gpath, fpath, minibatch_size=SMB, hyperbatch_size=SN_MB,
+                  max_coalesce_bytes=0, io_queue_depth=1)
+    for hb in range(6):
+        eng.prepare(_scatter(hb), epoch=0)
+    report = eng.diagnose()
+    maybe_export_trace(eng, "doctor_qd")
+    eng.close()
+    return report
+
+
+def _scn_cache(gpath, fpath):
+    # graph fully buffered after epoch 0; the 64-row cache thrashes
+    # against a ~2.5k-row working set replayed every epoch
+    eng = _engine(gpath, fpath, minibatch_size=SMB, hyperbatch_size=SN_MB,
+                  graph_buffer_bytes=1 << 20, cache_capacity_rows=64,
+                  cache_policy="clock")
+    plan = [_scatter(hb) for hb in range(4)]
+    for epoch in range(3):
+        for targets in plan:
+            eng.prepare(targets, epoch=epoch)
+    report = eng.diagnose()
+    maybe_export_trace(eng, "doctor_cache")
+    eng.close()
+    return report
+
+
+def _scn_dropout(gpath, fpath):
+    eng = _engine(gpath, fpath, n_arrays=4, fault_schedule=DROPOUT_NOW,
+                  io_retries=6)
+    for hb in range(6):
+        eng.prepare(_tiles(hb), epoch=0)
+    report = eng.diagnose()
+    maybe_export_trace(eng, "doctor_dropout")
+    eng.close()
+    return report
+
+
+def _scn_latency(gpath, fpath):
+    eng = _engine(gpath, fpath, n_arrays=4, fault_schedule=LATENCY_SPIKES,
+                  hedge_deadline_frac=1.5, io_retries=6)
+    for hb in range(8):
+        eng.prepare(_tiles(hb), epoch=0)
+    report = eng.diagnose()
+    maybe_export_trace(eng, "doctor_latency")
+    eng.close()
+    return report
+
+
+def _scn_admission(gpath, fpath):
+    """A 1%-share tenant behind a bulk tenant saturating the same
+    queues: its admission stall must dominate its own tiny I/O and
+    surface as a per-tenant admission-throttled finding."""
+    eng = _engine(gpath, fpath, n_arrays=4, io_queue_depth=4)
+    tier = ServingTier(eng)
+    tier.open_tenant(
+        "starved",
+        qos=QoSClass("starved", priority=9, share=0.01, burst_bytes=1024,
+                     fetch_timeout_s=30.0, aging_grants=10_000,
+                     aging_wait_s=0.05),
+        fanouts=(RING_K,))
+    errs: list[BaseException] = []
+    done = [False]
+
+    def bulk():
+        try:
+            hb = 0
+            while not done[0] and hb < 48:
+                tier.prepare("training", _tiles(hb), epoch=0)
+                hb += 1
+        except BaseException as e:       # surfaced via errs
+            errs.append(e)
+
+    t = threading.Thread(target=bulk)
+    t.start()
+    try:
+        for i in range(8):
+            seeds = np.array([(i * 97 + j * 911) % N_NODES
+                              for j in range(4)], dtype=np.int64)
+            tier.prepare("starved", [seeds], epoch=100 + i)
+    finally:
+        done[0] = True
+        t.join(timeout=300)
+    assert not errs, errs
+    report = tier.diagnose()
+    maybe_export_trace(eng, "doctor_admission")
+    tier.close()
+    eng.close()
+    return report
+
+
+def _scn_clean(gpath, fpath):
+    """No planted bottleneck: the causal detectors and every watchdog
+    window must stay silent."""
+    eng = _engine(gpath, fpath)
+    wd = AnomalyWatchdog(eng)
+    wd.begin()
+    for epoch in range(3):
+        for hb in range(4):
+            eng.prepare(_tiles(hb), epoch=epoch)
+            wd.observe(f"e{epoch}hb{hb}")
+    report = eng.diagnose()
+    maybe_export_trace(eng, "doctor_clean")
+    eng.close()
+    return report, list(wd.alerts)
+
+
+# --------------------------------------------------------------------- run
+def run() -> dict:
+    gpath, fpath = _build_workload()
+    planted = [
+        ("bw", "bw-bound", _scn_bw),
+        ("iops", "iops-bound", _scn_iops),
+        ("qd", "queue-starved", _scn_qd),
+        ("cache", "cache-miss-bound", _scn_cache),
+        ("dropout", "fault-degraded", _scn_dropout),
+        ("latency", "hedge-stall", _scn_latency),
+        ("admission", "admission-throttled", _scn_admission),
+    ]
+    scenarios: dict = {}
+    n_correct = 0
+    for tag, expected, fn in planted:
+        report = fn(gpath, fpath)
+        g = _grade(report, expected)
+        scenarios[tag] = g
+        n_correct += g["correct"]
+        emit(f"doctor/{tag}", g["correct"],
+             f"expected {expected}, diagnosed {g['primary']} "
+             f"(severity {g['severity']:.2f})")
+
+    clean_report, clean_alerts = _scn_clean(gpath, fpath)
+    causal = [f.kind for f in clean_report.findings
+              if f.kind in CAUSAL_KINDS]
+    alert_free = int(not clean_alerts and not causal)
+    scenarios["clean"] = {"expected": "no causal finding",
+                         "primary": clean_report.primary,
+                         "correct": alert_free,
+                         "severity": (clean_report.findings[0].severity
+                                      if clean_report.findings else 0.0)}
+    n_correct += alert_free
+    emit("doctor/clean", alert_free,
+         f"{len(clean_alerts)} watchdog alerts, causal findings "
+         f"{causal or '[]'} (primary {clean_report.primary})")
+    emit("doctor/accuracy", n_correct,
+         f"{n_correct}/{N_SCENARIOS} planted bottlenecks diagnosed "
+         f"correctly")
+
+    assert n_correct >= MIN_CORRECT, \
+        (f"doctor accuracy regression: {n_correct}/{N_SCENARIOS} < "
+         f"{MIN_CORRECT} — " + ", ".join(
+             f"{t}: expected {s['expected']} got {s['primary']}"
+             for t, s in scenarios.items() if not s["correct"]))
+    assert alert_free >= MIN_CLEAN_ALERT_FREE, \
+        (f"clean run false positives: alerts {clean_alerts}, "
+         f"causal findings {causal}")
+
+    return {
+        "workload": {"n_nodes": N_NODES, "graph_block": G_BLOCK,
+                     "feature_block": F_BLOCK, "dim": F_DIM},
+        "scenarios": scenarios,
+        "n_scenarios": N_SCENARIOS,
+        "n_correct": n_correct,
+        "clean": {"alerts": len(clean_alerts),
+                  "causal_findings": causal,
+                  "alert_free": alert_free},
+    }
+
+
+if __name__ == "__main__":
+    print(run())

@@ -30,7 +30,8 @@ import numpy as np
 from repro.core import TraceRecorder, fig2_breakdown, validate_chrome_trace
 from repro.gnn import GNNTrainer, PipelinedExecutor
 
-from .common import emit, get_dataset, make_agnes, quick_val, targets_for
+from .common import (emit, get_dataset, make_agnes, maybe_export_trace,
+                     quick_val, targets_for)
 
 # wall-clock floor: prepare with tracing on may cost at most ~5% over
 # tracing off (disabled telemetry is one branch and is covered for free)
@@ -125,6 +126,7 @@ def run() -> dict:
     assert agreement >= MIN_BREAKDOWN_AGREEMENT, \
         f"fig2 breakdown drifted from OverlapReport: {agreement:.4f} < " \
         f"{MIN_BREAKDOWN_AGREEMENT}"
+    maybe_export_trace(eng, "obs_breakdown")
     eng.close()
 
     return {

@@ -17,8 +17,9 @@ import json
 import os
 import sys
 
-from . import (bench_cache, bench_faults, bench_io_sched, bench_migration,
-               bench_obs, bench_plan_fusion, bench_serving, bench_striping)
+from . import (bench_cache, bench_doctor, bench_faults, bench_io_sched,
+               bench_migration, bench_obs, bench_plan_fusion, bench_serving,
+               bench_striping)
 
 # file -> [(dotted path into the json payload, floor, description)]
 GUARDS = {
@@ -73,6 +74,14 @@ GUARDS = {
         ("obs.breakdown.agreement", bench_obs.MIN_BREAKDOWN_AGREEMENT,
          "trace-derived Fig.2 prepare/train bars vs OverlapReport wall "
          "times on a traced pipelined epoch"),
+    ],
+    "BENCH_doctor.json": [
+        ("doctor.n_correct", bench_doctor.MIN_CORRECT,
+         "storage doctor ground truth: planted primary bottleneck "
+         "diagnosed correctly in >= 7 of 8 labeled scenarios"),
+        ("doctor.clean.alert_free", bench_doctor.MIN_CLEAN_ALERT_FREE,
+         "clean run false positives: zero watchdog alerts and zero "
+         "causal findings on an unperturbed workload"),
     ],
 }
 

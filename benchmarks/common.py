@@ -29,6 +29,33 @@ QUICK_MAX_NODES = 6_000
 QUICK_MAX_DIM = 32
 QUICK_MAX_BLOCK = 65_536
 
+# --trace-dir (benchmarks/run.py): when set, traced benchmarks export
+# their Chrome traces here so every regression report ships an
+# inspectable timeline next to its BENCH_*.json
+TRACE_DIR = os.environ.get("REPRO_BENCH_TRACE_DIR") or None
+
+
+def maybe_export_trace(engine_or_recorder, name: str) -> str | None:
+    """Export a benchmark's Chrome trace into ``TRACE_DIR``.
+
+    Accepts an engine (uses ``engine.telemetry.trace``) or a bare
+    :class:`~repro.core.TraceRecorder`; a no-op returning ``None`` when
+    ``--trace-dir`` was not given or the engine records no trace.
+    """
+    if TRACE_DIR is None:
+        return None
+    rec = engine_or_recorder
+    tel = getattr(engine_or_recorder, "telemetry", None)
+    if tel is not None:
+        rec = tel.trace
+    if rec is None or not hasattr(rec, "export_chrome"):
+        return None
+    os.makedirs(TRACE_DIR, exist_ok=True)
+    path = os.path.join(TRACE_DIR, f"{name}.trace.json")
+    rec.export_chrome(path)
+    print(f"# trace: {name} -> {path}", flush=True)
+    return path
+
 
 def quick_val(normal, quick):
     """Pick a parameter by tier (reads the QUICK flag at call time)."""

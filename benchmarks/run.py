@@ -1,10 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] \
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--trace-dir DIR] \
       [fig2 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 pipeline io fusion
        stripe]
 
 Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
+
+``--trace-dir DIR`` makes the traced benchmarks (obs, doctor) export
+their Chrome traces into ``DIR`` (``common.maybe_export_trace``), so a
+regression report ships an inspectable ``chrome://tracing`` timeline —
+and a ``python -m repro.doctor`` input — next to its ``BENCH_*.json``.
 
 ``--quick`` is the smoke tier: every selected benchmark runs on a tiny
 synthetic graph (common.QUICK clamps dataset sizes) and the results —
@@ -19,9 +24,9 @@ import os
 import sys
 import time
 
-from . import (bench_cache, bench_faults, bench_fig2_breakdown,
-               bench_fig4_io_unit, bench_fig6_eq1, bench_fig7_distdgl,
-               bench_fig8_hyperbatch, bench_fig9_sweep,
+from . import (bench_cache, bench_doctor, bench_faults,
+               bench_fig2_breakdown, bench_fig4_io_unit, bench_fig6_eq1,
+               bench_fig7_distdgl, bench_fig8_hyperbatch, bench_fig9_sweep,
                bench_fig10_sensitivity, bench_fig11_bw,
                bench_fig12_accuracy, bench_io_sched, bench_migration,
                bench_obs, bench_pipeline_overlap, bench_plan_fusion,
@@ -46,6 +51,7 @@ ALL = {
     "faults": bench_faults.run,
     "serving": bench_serving.run,
     "obs": bench_obs.run,
+    "doctor": bench_doctor.run,
 }
 
 OUT_PATH = os.environ.get(
@@ -72,6 +78,9 @@ SERVING_OUT_PATH = os.environ.get(
 OBS_OUT_PATH = os.environ.get(
     "REPRO_BENCH_OBS_OUT",
     os.path.join(os.path.dirname(__file__), "..", "BENCH_obs.json"))
+DOCTOR_OUT_PATH = os.environ.get(
+    "REPRO_BENCH_DOCTOR_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_doctor.json"))
 
 
 def main() -> None:
@@ -81,6 +90,24 @@ def main() -> None:
         argv = [a for a in argv if a != "--quick"]
         common.QUICK = True
         os.environ["REPRO_BENCH_QUICK"] = "1"
+    trace_dir = None
+    rest = []
+    it = iter(argv)
+    for a in it:
+        if a == "--trace-dir":
+            trace_dir = next(it, None)
+            if trace_dir is None:
+                sys.exit("--trace-dir needs a directory argument")
+        elif a.startswith("--trace-dir="):
+            trace_dir = a.split("=", 1)[1]
+        else:
+            rest.append(a)
+    argv = rest
+    if trace_dir:
+        trace_dir = os.path.abspath(trace_dir)
+        os.makedirs(trace_dir, exist_ok=True)
+        common.TRACE_DIR = trace_dir
+        os.environ["REPRO_BENCH_TRACE_DIR"] = trace_dir
     which = argv or list(ALL)
     print("name,us_per_call,derived")
     results: dict = {}
@@ -107,7 +134,8 @@ def main() -> None:
                    ("cache", CACHE_OUT_PATH),
                    ("faults", FAULTS_OUT_PATH),
                    ("serving", SERVING_OUT_PATH),
-                   ("obs", OBS_OUT_PATH)]
+                   ("obs", OBS_OUT_PATH),
+                   ("doctor", DOCTOR_OUT_PATH)]
         for name, path in tracked:
             if name not in results:
                 continue

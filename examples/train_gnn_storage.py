@@ -92,6 +92,14 @@ def main():
     ap.add_argument("--metrics-dump", action="store_true",
                     help="print the AGNES metrics registry as Prometheus "
                          "text exposition after the run")
+    ap.add_argument("--metrics-json", default=None, metavar="OUT.json",
+                    help="dump the final metrics snapshot as JSON — "
+                         "feed it to `python -m repro.doctor` together "
+                         "with the --trace file")
+    ap.add_argument("--doctor", action="store_true",
+                    help="run the storage doctor after the run and print "
+                         "the findings table (roofline attribution + "
+                         "suggested knobs)")
     args = ap.parse_args()
 
     if args.backend == "pallas":
@@ -222,6 +230,16 @@ def main():
               f"({fb['prepare_fraction']:.0%}) train {fb['train_s']:.3f}s "
               f"({fb['train_fraction']:.0%}) of which transfer "
               f"{fb['transfer_s']:.3f}s")
+    if args.metrics_json:
+        import json
+        with open(args.metrics_json, "w") as f:
+            json.dump(agnes.metrics_snapshot(), f, indent=2)
+        print(f"[agnes] metrics snapshot -> {args.metrics_json} "
+              f"(diagnose offline: python -m repro.doctor "
+              f"{args.trace or 'trace.json'} --metrics {args.metrics_json})")
+    if args.doctor:
+        print("\n# storage doctor")
+        print(agnes.diagnose().render())
     if agnes.topology is not None:
         u = agnes.io_stats()["arrays"]
         print(f"[agnes] storage topology: {u['n_arrays']} arrays "

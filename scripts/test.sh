@@ -27,6 +27,11 @@
 # the --quick obs benchmark (writes BENCH_obs.json) and the regression
 # guard over its floors (tracing overhead <= ~5%, Fig.2 breakdown
 # agreement with OverlapReport).
+# RUN_DOCTOR=1 runs just the storage-doctor tier: the diagnosis test
+# file, the --quick doctor benchmark (writes BENCH_doctor.json: eight
+# labeled bottleneck scenarios graded against the doctor's primary
+# finding) and the regression guard over its floors (>= 7/8 correct,
+# zero false positives on the clean run).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
@@ -54,5 +59,11 @@ if [[ "${RUN_OBS:-0}" == "1" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q tests/test_telemetry.py
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick obs
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.check_regression
+fi
+if [[ "${RUN_DOCTOR:-0}" == "1" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q tests/test_diagnosis.py
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick doctor
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.check_regression
 fi

@@ -18,6 +18,10 @@ from .buffer import BlockBuffer
 from .cache_oracle import (NEVER, OracleSchedule, belady_min_misses,
                            first_use_table, trace_from_plan)
 from .device_model import IOStats, NVMeModel
+from .diagnosis import (ARRAY_STATES, SUGGESTED_KNOBS, AnomalyWatchdog,
+                        ArrayDiagnosis, DoctorReport, DoctorThresholds,
+                        Finding, decompose_prepare, diagnose,
+                        events_from_chrome)
 from .fault import (ArrayOfflineError, FaultInjector, FaultRule, IOFaultError,
                     PermanentIOError, TornWriteError, TransientIOError,
                     classify_error)
@@ -70,4 +74,7 @@ __all__ = [
     "QoSClass", "ServedPrepare", "ServingTier",
     "MetricsRegistry", "Telemetry", "TraceRecorder", "fig2_breakdown",
     "format_metrics", "maybe_span", "validate_chrome_trace",
+    "ARRAY_STATES", "SUGGESTED_KNOBS", "AnomalyWatchdog", "ArrayDiagnosis",
+    "DoctorReport", "DoctorThresholds", "Finding", "decompose_prepare",
+    "diagnose", "events_from_chrome",
 ]

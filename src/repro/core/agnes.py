@@ -474,6 +474,30 @@ class AgnesEngine:
             self.telemetry.metrics.set_gauges("agnes", self.io_stats())
         return self.telemetry.metrics.snapshot()
 
+    def diagnose(self, thresholds=None):
+        """Run the storage doctor over everything this engine has done.
+
+        Folds the current :meth:`io_stats` into the metrics namespace,
+        hands the snapshot (plus the trace, when recording) to
+        :func:`repro.core.diagnosis.diagnose`, and returns the
+        :class:`~repro.core.diagnosis.DoctorReport` — per-array
+        roofline states, the exposed-prepare decomposition, and ranked
+        findings with a suggested knob each.  Counters are cumulative,
+        so the report covers the window since engine construction (or
+        the last stats reset); for per-epoch windows, drive an
+        :class:`~repro.core.diagnosis.AnomalyWatchdog` alongside.
+        """
+        from .diagnosis import diagnose
+        snap = self.metrics_snapshot(refresh=True)
+        tr = self.telemetry.trace
+        dev = self.graph_store.device
+        return diagnose(
+            snap, events=tr.events() if tr is not None else None,
+            thresholds=thresholds,
+            default_device={"bandwidth": dev.array_bandwidth,
+                            "latency": dev.latency,
+                            "queue_depth": dev.queue_depth})
+
     def open_session(self, targets_per_mb: list[np.ndarray],
                      epoch: int = 0,
                      tenant: str | None = None) -> PrepareSession:
@@ -723,6 +747,10 @@ class AgnesEngine:
         }
         if self.topology is not None:
             out["arrays"] = self.topology.utilization_summary()
+        # submitter-side queue depth(s): the roofline's qd arm — folded
+        # into the snapshot so the storage doctor can tell queue
+        # starvation (small submitter depth) from IOPS saturation
+        out["io_queue_depth"] = self.io_queue_depths()
         out["hotness"] = {
             "graph": self.graph_hotness.skew_summary(),
             "feature": self.feature_hotness.skew_summary(),

@@ -1,0 +1,813 @@
+"""Storage doctor: roofline attribution, anomaly watchdog, diagnosis.
+
+PR 9's telemetry can *record* (spans, counters, Fig.2 bars) but cannot
+*explain*: when prepare time is exposed, nothing says whether the cause
+is an iops-bound array, admission starvation, a hedge storm, a
+cache-hit collapse, or a degraded array.  This module closes that gap —
+it consumes exactly what the telemetry layer already produces
+(:class:`~repro.core.telemetry.TraceRecorder` event tuples and flat
+:class:`~repro.core.telemetry.MetricsRegistry` snapshots, including the
+``agnes.*`` gauges ``AgnesEngine.metrics_snapshot`` folds in) and emits
+a structured :class:`DoctorReport`:
+
+* **per-array roofline attribution** — each array's achieved bytes /
+  requests / busy time against its :class:`~repro.core.device_model.
+  NVMeModel` ceiling, split into the model's two arms
+  (``bw_term = bytes / array_bandwidth`` vs ``iops_term = n_random *
+  latency / qd``) and classified as one of :data:`ARRAY_STATES`
+  (bw-bound / iops-bound / queue-starved / admission-throttled /
+  fault-degraded / idle);
+* **exposed-prepare decomposition** — the pipeline's
+  ``exposed_prepare_fraction`` split into sampling-CPU vs graph I/O vs
+  cache-miss (feature) I/O vs admission-wait vs retry/hedge-stall
+  components using the existing span categories (``prepare.stage``,
+  ``io.run``, ``admission``, ``io.fault``) — an *attribution*, not a
+  wall-clock partition: fault stalls carry modeled seconds and async
+  reads overlap the prepare wall, so components are normalized before
+  being scaled onto the exposed seconds;
+* **findings** — ranked, each with a severity in [0, 1], the evidence
+  numbers behind it, and a suggested knob from the controller's future
+  action space (:data:`SUGGESTED_KNOBS`: queue depth, coalesce bytes,
+  cache capacity, admission share);
+* **anomaly watchdog** — :class:`AnomalyWatchdog`, rolling windowed
+  detectors over :meth:`MetricsRegistry.delta` (stall spikes,
+  starvation, hedge storms, cache-hit collapse, trace-event drops) that
+  emit structured ``diag.alert`` instants back into the trace.
+
+Ground truth: ``benchmarks/bench_doctor.py`` plants each bottleneck
+(dropout schedules, throttled QoS shares, undersized caches, qd=1,
+tiny/huge request mixes, latency spikes) and gates that
+:func:`diagnose` names the planted primary in >= 7 of 8 scenarios with
+a zero-alert clean run — the floors live in ``check_regression.py``.
+
+Entry points: :meth:`AgnesEngine.diagnose`, :meth:`ServingTier.
+diagnose`, and the offline CLI ``python -m repro.doctor trace.json
+--metrics metrics.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+__all__ = [
+    "ARRAY_STATES", "SUGGESTED_KNOBS", "DoctorThresholds", "Finding",
+    "ArrayDiagnosis", "DoctorReport", "AnomalyWatchdog", "diagnose",
+    "decompose_prepare", "events_from_chrome",
+]
+
+# the six per-array states of the roofline attribution
+ARRAY_STATES = ("idle", "bw-bound", "iops-bound", "queue-starved",
+                "admission-throttled", "fault-degraded")
+
+# finding kind -> the knob a controller (or a human) would turn.  This
+# is the ROADMAP controller's action space, spelled out per cause.
+SUGGESTED_KNOBS = {
+    "fault-degraded": "bring the array back online / let end_epoch "
+                      "evacuate (online_placement, migrate_budget_bytes)",
+    "admission-throttled": "raise the tenant's QoS share / burst_bytes "
+                           "(AdmissionController, QoSClass.share)",
+    "queue-starved": "raise io_queue_depth "
+                     "(AgnesEngine.set_io_queue_depth)",
+    "iops-bound": "raise max_coalesce_bytes so small requests merge "
+                  "(or grow block_size)",
+    "bw-bound": "add arrays / widen striping (n_arrays, placement) — "
+                "the device ceiling itself is the limit",
+    "cache-miss-bound": "raise cache_capacity_rows (or install the "
+                        "Belady oracle: install_cache_oracle)",
+    "hedge-stall": "tighten hedge_deadline_frac toward p99 / raise "
+                   "io_retries; investigate the latency spikes",
+    "stall-spike": "raise io_retries / check the array for transient "
+                   "faults",
+    "hedge-storm": "tighten hedge_deadline_frac; check for a straggling "
+                   "array",
+    "starvation": "raise the tenant's QoS share or lower aging_wait_s",
+    "cache-collapse": "raise cache_capacity_rows / refresh the oracle "
+                      "schedule (refresh_cache_oracle)",
+    "trace-drops": "raise trace_buffer_events",
+    "healthy": "no action",
+}
+
+# io.fault instant kinds whose modeled seconds count as fault stall
+_STALL_KINDS = ("retry", "hedge", "stall")
+
+
+@dataclasses.dataclass(frozen=True)
+class DoctorThresholds:
+    """Detector thresholds; defaults calibrated by bench_doctor's
+    labeled scenario matrix (every planted bottleneck must fire its
+    detector, the clean run must fire none)."""
+
+    idle_busy_s: float = 1e-6        # below: the array never worked
+    # iops-dominant arrays with qd <= this fraction of the device's
+    # native depth are starved by the *submitter*, not the device
+    queue_starved_qd_frac: float = 0.125
+    admission_wait_frac: float = 0.2   # wait / (wait + busy)
+    fault_rate: float = 0.01           # (retries+hedges+stalls)/requests
+    degraded_read_frac: float = 0.02   # degraded reads / reads
+    cache_hit_floor: float = 0.5
+    cache_feature_share: float = 0.35  # feature io / total io
+    # --- watchdog windows ---
+    w_min_events: int = 4
+    w_stall_rate: float = 0.02         # faults per submitted run
+    w_hedge_rate: float = 0.01
+    w_wait_mean_s: float = 0.02        # mean admission wait per grant
+    w_hit_drop: float = 0.25           # cache hit ratio drop vs baseline
+    w_history: int = 8                 # rolling baseline length
+
+
+@dataclasses.dataclass
+class Finding:
+    """One ranked diagnosis: what, how bad, why, and which knob."""
+
+    kind: str
+    severity: float                  # 0..1, ranks the findings
+    summary: str
+    knob: str
+    evidence: dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ArrayDiagnosis:
+    """One array's roofline attribution for the diagnosed window."""
+
+    array: int
+    state: str                       # one of ARRAY_STATES
+    online: bool
+    bytes: int
+    n_requests: int
+    busy_s: float
+    bw_term_s: float                 # bytes / array_bandwidth
+    iops_term_s: float               # n_random * latency / qd
+    bw_utilization: float            # achieved bw / ceiling
+    iops_utilization: float          # achieved iops / ceiling at qd
+    queue_depth: int
+    device_queue_depth: int
+    avg_request_bytes: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class DoctorReport:
+    """Structured output of :func:`diagnose`.
+
+    ``primary`` is the top-ranked finding's kind ("healthy" when no
+    detector fired); ``alerts`` is whatever the caller's
+    :class:`AnomalyWatchdog` collected for the same window (empty when
+    no watchdog ran).
+    """
+
+    primary: str
+    findings: list
+    arrays: list
+    decomposition: dict
+    alerts: list = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {
+            "primary": self.primary,
+            "findings": [f.to_dict() for f in self.findings],
+            "arrays": [a.to_dict() for a in self.arrays],
+            "decomposition": self.decomposition,
+            "alerts": list(self.alerts),
+        }
+
+    def render(self) -> str:
+        """Human-readable findings table (the ``repro.doctor`` CLI)."""
+        out = [f"storage doctor — primary bottleneck: {self.primary}"]
+        if self.findings:
+            rows = [("finding", "sev", "suggested knob")]
+            rows += [(f.kind, f"{f.severity:.2f}", f.knob)
+                     for f in self.findings]
+            w0 = max(len(r[0]) for r in rows)
+            w1 = max(len(r[1]) for r in rows)
+            for r in rows:
+                out.append(f"  {r[0]:<{w0}}  {r[1]:>{w1}}  {r[2]}")
+        else:
+            out.append("  no findings — storage path is healthy")
+        if self.arrays:
+            out.append("per-array roofline:")
+            rows = [("array", "state", "busy_s", "bw_util", "iops_util",
+                     "qd", "KiB/req")]
+            for a in self.arrays:
+                rows.append((str(a.array), a.state, f"{a.busy_s:.4f}",
+                             f"{a.bw_utilization:.2f}",
+                             f"{a.iops_utilization:.2f}",
+                             f"{a.queue_depth}/{a.device_queue_depth}",
+                             f"{a.avg_request_bytes / 1024:.1f}"))
+            widths = [max(len(r[i]) for r in rows) for i in range(7)]
+            for r in rows:
+                out.append("  " + "  ".join(
+                    f"{c:<{w}}" for c, w in zip(r, widths)))
+        d = self.decomposition
+        if d.get("prepare_s"):
+            comp = d.get("exposed_components_s", {})
+            parts = " | ".join(
+                f"{k} {d['component_fractions'].get(k, 0.0):.0%}"
+                for k in comp)
+            out.append(f"exposed prepare: {d['exposed_prepare_s']:.4f}s "
+                       f"({d['exposed_prepare_fraction']:.0%} of "
+                       f"{d['prepare_s']:.4f}s prepare) — {parts}")
+        if self.alerts:
+            out.append(f"alerts ({len(self.alerts)}):")
+            for a in self.alerts:
+                out.append(f"  [{a.get('window', '?')}] {a.get('kind')}: "
+                           f"{a.get('detail', '')}")
+        return "\n".join(out)
+
+
+# ------------------------------------------------------------ trace import
+def events_from_chrome(payload: dict) -> list:
+    """Invert :meth:`TraceRecorder.to_chrome`: re-import an exported
+    (or hand-built) Chrome trace object as recorder-style event tuples
+    ``(ph, name, cat, track, ts_s, dur_s, args)``.
+
+    ``thread_name`` metadata maps tids back to logical tracks; events
+    on unnamed tids keep the tid as their track.  Only "X" and "i"
+    events carry signal for the doctor; everything else is skipped.
+    """
+    evs = payload.get("traceEvents")
+    if not isinstance(evs, list):
+        return []
+    names = {}
+    for ev in evs:
+        if isinstance(ev, dict) and ev.get("ph") == "M" \
+                and ev.get("name") == "thread_name":
+            names[ev.get("tid")] = ev.get("args", {}).get("name")
+    out = []
+    for ev in evs:
+        if not isinstance(ev, dict):
+            continue
+        ph = ev.get("ph")
+        if ph not in ("X", "i"):
+            continue
+        track = names.get(ev.get("tid")) or str(ev.get("tid"))
+        try:
+            ts = float(ev.get("ts", 0.0)) / 1e6
+            dur = float(ev.get("dur", 0.0) or 0.0) / 1e6
+        except (TypeError, ValueError):
+            continue
+        out.append((ph, ev.get("name", ""), ev.get("cat", ""), track,
+                    ts, dur, ev.get("args") or None))
+    return out
+
+
+# ------------------------------------------------------- decomposition
+def _merge_intervals(iv: list) -> list:
+    if not iv:
+        return []
+    iv = sorted(iv)
+    out = [list(iv[0])]
+    for lo, hi in iv[1:]:
+        if lo <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], hi)
+        else:
+            out.append([lo, hi])
+    return out
+
+
+def _overlap_s(a: list, b: list) -> float:
+    """Total length of intersection(union(a), union(b))."""
+    a, b = _merge_intervals(a), _merge_intervals(b)
+    i = j = 0
+    total = 0.0
+    while i < len(a) and j < len(b):
+        lo = max(a[i][0], b[j][0])
+        hi = min(a[i][1], b[j][1])
+        if hi > lo:
+            total += hi - lo
+        if a[i][1] < b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
+
+
+def decompose_prepare(events) -> dict:
+    """Split the exposed-prepare fraction into causal components.
+
+    Exposure is exact interval arithmetic over the trace: the prepare
+    spans' wall time minus their timeline overlap with the train spans
+    (matching ``OverlapReport.exposed_prepare_s = max(epoch_wall -
+    train_wall, 0)`` when prepare and train tile the epoch).  The
+    component split reuses the span category scheme:
+
+    ============== ===================================================
+    component      source
+    ============== ===================================================
+    sampling_cpu   ``prepare.stage`` spans named ``plan:*``/``assemble:*``
+    io             ``io.run`` spans on the graph store
+    cache_miss     ``io.run`` spans on the feature store (feature reads
+                   reach storage only on buffer/cache misses)
+    admission_wait ``admission`` spans
+    fault_stall    ``io.fault`` retry/hedge/stall instants' modeled
+                   seconds
+    other          prepare wall not covered above (clamped >= 0)
+    ============== ===================================================
+
+    Components are attributions (fault stalls are modeled, async reads
+    overlap the wall), so they are normalized into
+    ``component_fractions`` and scaled onto the exposed seconds as
+    ``exposed_components_s``.
+    """
+    prepare_iv: list = []
+    train_iv: list = []
+    comp = {"sampling_cpu": 0.0, "io": 0.0, "cache_miss": 0.0,
+            "admission_wait": 0.0, "fault_stall": 0.0}
+    for ev in events:
+        ph, name, cat, _track, ts, dur, args = ev
+        if ph == "X":
+            if cat == "prepare":
+                prepare_iv.append((ts, ts + dur))
+            elif cat == "train":
+                train_iv.append((ts, ts + dur))
+            elif cat == "prepare.stage":
+                stage = name.split(":", 1)[0]
+                if stage in ("plan", "assemble"):
+                    comp["sampling_cpu"] += dur
+            elif cat == "io.run":
+                if name.startswith("feature"):
+                    comp["cache_miss"] += dur
+                else:
+                    comp["io"] += dur
+            elif cat == "admission":
+                comp["admission_wait"] += dur
+        elif ph == "i" and cat == "io.fault" and args:
+            kind = name.rsplit(".", 1)[-1]
+            if kind in _STALL_KINDS:
+                try:
+                    comp["fault_stall"] += float(args.get("modeled_s", 0.0))
+                except (TypeError, ValueError):
+                    pass
+    prepare_s = sum(hi - lo for lo, hi in prepare_iv)
+    train_s = sum(hi - lo for lo, hi in train_iv)
+    hidden_s = _overlap_s(prepare_iv, train_iv)
+    exposed_s = max(prepare_s - hidden_s, 0.0)
+    comp["other"] = max(prepare_s - sum(comp.values()), 0.0)
+    total = sum(comp.values())
+    fractions = {k: (v / total if total > 0 else 0.0)
+                 for k, v in comp.items()}
+    return {
+        "prepare_s": prepare_s,
+        "train_s": train_s,
+        "hidden_prepare_s": hidden_s,
+        "exposed_prepare_s": exposed_s,
+        "exposed_prepare_fraction":
+            exposed_s / prepare_s if prepare_s > 0 else 0.0,
+        "components_s": {k: round(v, 6) for k, v in comp.items()},
+        "component_fractions": {k: round(v, 4)
+                                for k, v in fractions.items()},
+        "exposed_components_s": {k: round(v * exposed_s, 6)
+                                 for k, v in fractions.items()},
+    }
+
+
+# ----------------------------------------------------------- roofline
+# NVMeModel defaults; used when the snapshot carries no per-array
+# device gauges (single-array engines without a topology)
+_DEF_BW = 6.7e9
+_DEF_LATENCY = 80e-6
+_DEF_DEVICE_QD = 32
+
+
+def _array_rows(metrics: dict, default_device: dict | None) -> list:
+    """Per-array facts from the flat snapshot.
+
+    Multi-array engines fold ``topology.utilization_summary()`` into
+    ``agnes.arrays.arrays.<i>.*`` gauges; without a topology the engine
+    totals (``agnes.total.*``) become one pseudo-array using
+    ``default_device`` (or NVMeModel defaults) as the ceiling.
+    """
+    pre = "agnes.arrays.arrays."
+    grouped: dict[int, dict] = {}
+    for k, v in metrics.items():
+        if not k.startswith(pre):
+            continue
+        idx, _, field = k[len(pre):].partition(".")
+        if not idx.isdigit() or not field:
+            continue
+        grouped.setdefault(int(idx), {})[field] = v
+    dev = dict(bandwidth=_DEF_BW, latency=_DEF_LATENCY,
+               queue_depth=_DEF_DEVICE_QD)
+    if default_device:
+        dev.update({k: v for k, v in default_device.items() if v})
+    rows = []
+    if grouped:
+        for a in sorted(grouped):
+            g = grouped[a]
+            rows.append({
+                "array": a,
+                "online": bool(g.get("online", 1)),
+                "bytes": int(g.get("bytes", 0)),
+                "n_requests": int(g.get("n_requests", 0)),
+                "sequential_fraction": float(
+                    g.get("sequential_fraction", 0.0)),
+                "busy_s": float(g.get("busy_s", 0.0)),
+                "bandwidth": float(
+                    g.get("bandwidth_GBps", dev["bandwidth"] / 1e9)) * 1e9,
+                "latency": float(
+                    g.get("latency_us", dev["latency"] * 1e6)) / 1e6,
+                "device_queue_depth": int(
+                    g.get("device_queue_depth", dev["queue_depth"])),
+                "queue_depth": int(metrics.get(
+                    f"agnes.io_queue_depth.{a}",
+                    metrics.get("agnes.io_queue_depth", 0)) or 0),
+            })
+        return rows
+    total_bytes = int(metrics.get("agnes.total.bytes_read", 0)
+                      + metrics.get("agnes.total.bytes_written", 0))
+    if not total_bytes and "agnes.total.n_requests" not in metrics:
+        return []
+    n_req = int(metrics.get("agnes.total.n_requests", 0))
+    n_reads = int(metrics.get("agnes.total.n_reads", 0))
+    n_seq = int(metrics.get("agnes.total.n_sequential_reads", 0))
+    rows.append({
+        "array": 0,
+        "online": True,
+        "bytes": total_bytes,
+        "n_requests": n_req,
+        "sequential_fraction": n_seq / n_reads if n_reads else 0.0,
+        "busy_s": float(metrics.get("agnes.total.modeled_io_time_s", 0.0)),
+        "bandwidth": dev["bandwidth"],
+        "latency": dev["latency"],
+        "device_queue_depth": dev["queue_depth"],
+        "queue_depth": int(metrics.get("agnes.io_queue_depth", 0) or 0),
+    })
+    return rows
+
+
+def _classify_array(row: dict, admission_frac: float,
+                    degraded_frac: float, th: DoctorThresholds
+                    ) -> ArrayDiagnosis:
+    """One array against its NVMe ceiling (``NVMeModel.batch_time``'s
+    two arms re-derived from the accounted aggregates)."""
+    bw = max(row["bandwidth"], 1.0)
+    lat = max(row["latency"], 1e-9)
+    dqd = max(row["device_queue_depth"], 1)
+    qd = row["queue_depth"] or dqd
+    qd_eff = max(min(qd, dqd), 1)
+    busy = row["busy_s"]
+    nbytes = row["bytes"]
+    n_req = row["n_requests"]
+    # sequential_fraction is block-granular (n_sequential/n_reads); at
+    # request granularity it slightly overestimates randomness, which
+    # only biases toward the conservative (iops) arm
+    n_random = n_req * max(1.0 - row["sequential_fraction"], 0.0)
+    bw_term = nbytes / bw
+    iops_term = n_random * lat / qd_eff
+    bw_util = (nbytes / busy) / bw if busy > 0 else 0.0
+    iops_ceiling = qd_eff / lat
+    iops_util = (n_random / busy) / iops_ceiling if busy > 0 else 0.0
+    if not row["online"] or degraded_frac > th.degraded_read_frac:
+        state = "fault-degraded"
+    elif busy <= th.idle_busy_s or nbytes == 0:
+        state = "idle"
+    elif admission_frac > th.admission_wait_frac:
+        state = "admission-throttled"
+    elif iops_term >= bw_term:
+        starved_qd = max(1, int(dqd * th.queue_starved_qd_frac))
+        state = "queue-starved" if qd_eff <= starved_qd else "iops-bound"
+    else:
+        state = "bw-bound"
+    return ArrayDiagnosis(
+        array=row["array"], state=state, online=row["online"],
+        bytes=nbytes, n_requests=n_req, busy_s=busy,
+        bw_term_s=round(bw_term, 6), iops_term_s=round(iops_term, 6),
+        bw_utilization=round(min(bw_util, 1.0), 4),
+        iops_utilization=round(min(iops_util, 1.0), 4),
+        queue_depth=qd, device_queue_depth=dqd,
+        avg_request_bytes=nbytes / n_req if n_req else 0.0)
+
+
+# ----------------------------------------------------------- findings
+def _mk(kind: str, severity: float, summary: str, evidence: dict
+        ) -> Finding:
+    return Finding(kind=kind, severity=round(min(max(severity, 0.0), 1.0), 4),
+                   summary=summary, knob=SUGGESTED_KNOBS[kind],
+                   evidence=evidence)
+
+
+def diagnose(metrics: dict, events=None, *, tenant_rooflines: dict | None
+             = None, thresholds: DoctorThresholds | None = None,
+             default_device: dict | None = None,
+             alerts: list | None = None) -> DoctorReport:
+    """Produce a :class:`DoctorReport` for one observation window.
+
+    ``metrics`` is a flat snapshot/delta from
+    :meth:`MetricsRegistry.snapshot` (with the ``agnes.*`` gauges
+    folded — :meth:`AgnesEngine.metrics_snapshot` does this);
+    ``events`` are recorder tuples or ``None`` (metrics-only diagnosis
+    still attributes the roofline; only the exposed-prepare
+    decomposition degrades to zeros).  ``tenant_rooflines`` is
+    :meth:`ServingTier.tenant_roofline` per tenant, for per-tenant
+    admission attribution.  ``alerts`` attaches a watchdog's collected
+    alerts to the report (they also factor into the zero-false-positive
+    clean-run gate).
+    """
+    th = thresholds or DoctorThresholds()
+    decomp = decompose_prepare(events) if events else decompose_prepare([])
+
+    busy = float(metrics.get("agnes.total.modeled_io_time_s", 0.0))
+    n_requests = int(metrics.get("agnes.total.n_requests", 0))
+    n_reads = int(metrics.get("agnes.total.n_reads", 0))
+    wait = float(metrics.get("agnes.total.admission_wait_s", 0.0))
+    if tenant_rooflines:
+        wait = max(wait, sum(
+            t.get("io", {}).get("admission_wait_s", 0.0)
+            for t in tenant_rooflines.values()))
+    admission_frac = wait / (wait + busy) if (wait + busy) > 0 else 0.0
+    degraded = int(metrics.get("agnes.total.io_degraded", 0))
+    degraded_frac = degraded / n_reads if n_reads else 0.0
+    offline = sorted(int(v) for k, v in metrics.items()
+                     if k.startswith("agnes.faults.offline_arrays."))
+
+    arrays = [_classify_array(r, admission_frac, degraded_frac, th)
+              for r in _array_rows(metrics, default_device)]
+
+    findings: list[Finding] = []
+
+    # --- fault-degraded: structural — an array is gone or reads are
+    # being served through the degraded path
+    if offline or degraded_frac > th.degraded_read_frac:
+        findings.append(_mk(
+            "fault-degraded", 0.95,
+            f"offline arrays {offline or '[]'}; "
+            f"{degraded} degraded reads "
+            f"({degraded_frac:.1%} of {n_reads})",
+            {"offline_arrays": offline, "io_degraded": degraded,
+             "degraded_read_frac": round(degraded_frac, 4)}))
+
+    # --- admission-throttled: engine-wide, then per tenant
+    if admission_frac > th.admission_wait_frac:
+        findings.append(_mk(
+            "admission-throttled", 0.5 + 0.5 * admission_frac,
+            f"admission wait {wait:.4f}s vs {busy:.4f}s busy "
+            f"({admission_frac:.0%} of storage time spent waiting)",
+            {"admission_wait_s": round(wait, 6),
+             "busy_s": round(busy, 6),
+             "wait_fraction": round(admission_frac, 4)}))
+    if tenant_rooflines:
+        for name, tr_ in sorted(tenant_rooflines.items()):
+            io = tr_.get("io", {})
+            t_wait = float(io.get("admission_wait_s", 0.0))
+            t_busy = float(io.get("modeled_io_time_s", 0.0))
+            t_frac = t_wait / (t_wait + t_busy) \
+                if (t_wait + t_busy) > 0 else 0.0
+            if t_frac > th.admission_wait_frac and not any(
+                    f.kind == "admission-throttled"
+                    and f.evidence.get("tenant") == name
+                    for f in findings):
+                findings.append(_mk(
+                    "admission-throttled", 0.5 + 0.5 * t_frac,
+                    f"tenant {name!r}: {t_wait:.4f}s admission wait vs "
+                    f"{t_busy:.4f}s of its own I/O ({t_frac:.0%})",
+                    {"tenant": name,
+                     "admission_wait_s": round(t_wait, 6),
+                     "busy_s": round(t_busy, 6),
+                     "wait_fraction": round(t_frac, 4),
+                     "forced_grants": int(
+                         tr_.get("admission", {}).get("forced_grants",
+                                                      0))}))
+
+    # --- hedge/stall: fault-path events per submitted request, plus
+    # the trace's modeled stall attribution when available
+    n_faults = int(metrics.get("agnes.total.io_retries", 0)
+                   + metrics.get("agnes.total.io_hedges", 0))
+    n_faults += sum(int(v) for k, v in metrics.items()
+                    if k.endswith(".fault.stall")
+                    and not isinstance(v, dict))
+    fault_rate = n_faults / n_requests if n_requests else 0.0
+    stall_frac = decomp["component_fractions"].get("fault_stall", 0.0)
+    if fault_rate > th.fault_rate or stall_frac > 0.2:
+        findings.append(_mk(
+            "hedge-stall",
+            0.45 + min(0.5, 5.0 * fault_rate + stall_frac),
+            f"{n_faults} retry/hedge/stall events over {n_requests} "
+            f"requests ({fault_rate:.1%}); fault stall is "
+            f"{stall_frac:.0%} of attributed prepare",
+            {"fault_events": n_faults, "n_requests": n_requests,
+             "fault_rate": round(fault_rate, 4),
+             "stall_fraction": round(stall_frac, 4)}))
+
+    # --- cache-miss-bound: the feature cache stopped absorbing the
+    # gather and feature I/O dominates storage time.  Eviction-gated:
+    # a cache that never evicted is cold or streaming, not undersized —
+    # cold first-touch misses are not a capacity problem
+    hit = float(metrics.get("agnes.feature_cache_hit", 0.0))
+    admitted = int(metrics.get("cache.rows_admitted", 0)
+                   + metrics.get("agnes.total.cache_misses", 0))
+    evictions = int(metrics.get("cache.rows_evicted", 0)
+                    + metrics.get("agnes.total.cache_evictions", 0))
+    feat_io = float(metrics.get("agnes.feature.modeled_io_time_s", 0.0))
+    feat_share = feat_io / busy if busy > 0 else 0.0
+    if (admitted and evictions and hit < th.cache_hit_floor
+            and feat_share > th.cache_feature_share):
+        findings.append(_mk(
+            "cache-miss-bound",
+            0.5 + 0.4 * (1.0 - hit) * feat_share,
+            f"feature cache hit ratio {hit:.0%} with {evictions} "
+            f"evictions over {admitted} admissions; feature I/O is "
+            f"{feat_share:.0%} of storage time",
+            {"cache_hit_ratio": round(hit, 4),
+             "cache_rows_admitted": admitted,
+             "cache_rows_evicted": evictions,
+             "feature_io_share": round(feat_share, 4)}))
+
+    # --- device shape of the busiest online array: always attributed,
+    # ranked below any causal finding (severity capped at 0.4)
+    active = [a for a in arrays if a.state not in ("idle",)]
+    if active:
+        top = max(active, key=lambda a: a.busy_s)
+        if top.state in ("bw-bound", "iops-bound", "queue-starved"):
+            dom = max(top.bw_term_s, top.iops_term_s)
+            share = dom / top.busy_s if top.busy_s > 0 else 0.0
+            findings.append(_mk(
+                top.state, 0.25 + 0.15 * min(share, 1.0),
+                f"array {top.array}: {top.state} "
+                f"(bw arm {top.bw_term_s:.4f}s vs iops arm "
+                f"{top.iops_term_s:.4f}s at qd "
+                f"{min(top.queue_depth, top.device_queue_depth)}, "
+                f"{top.avg_request_bytes / 1024:.1f} KiB/request)",
+                {"array": top.array,
+                 "bw_term_s": top.bw_term_s,
+                 "iops_term_s": top.iops_term_s,
+                 "queue_depth": top.queue_depth,
+                 "avg_request_bytes": round(top.avg_request_bytes, 1)}))
+
+    findings.sort(key=lambda f: f.severity, reverse=True)
+    primary = findings[0].kind if findings else "healthy"
+    return DoctorReport(primary=primary, findings=findings,
+                        arrays=arrays, decomposition=decomp,
+                        alerts=list(alerts or []))
+
+
+# ----------------------------------------------------------- watchdog
+class AnomalyWatchdog:
+    """Rolling windowed anomaly detectors over the metrics registry.
+
+    Drive :meth:`observe` at a fixed cadence (per hyperbatch or per
+    epoch); each call closes one window via
+    :meth:`MetricsRegistry.delta`, runs the detectors against rolling
+    baselines, appends any alerts to :attr:`alerts`, and — when the
+    bundle records a trace — emits each alert as a structured
+    ``diag.alert`` instant on the ``doctor`` track, so anomalies land
+    on the same timeline as the I/O that caused them.
+
+    Detectors: stall/retry spikes, hedge storms, admission starvation
+    (forced grants or waits past the per-grant mean bound), cache-hit
+    collapse vs the rolling baseline, and trace-event drops.
+    """
+
+    def __init__(self, engine=None, *, telemetry=None,
+                 thresholds: DoctorThresholds | None = None):
+        if telemetry is None:
+            telemetry = engine.telemetry
+        self._engine = engine
+        self.telemetry = telemetry
+        self.th = thresholds or DoctorThresholds()
+        self.alerts: list[dict] = []
+        self._prev: dict | None = None
+        self._window = 0
+        self._hist: dict[str, deque] = {
+            k: deque(maxlen=self.th.w_history)
+            for k in ("stall", "hedge", "hit")}
+        self._last_dropped = 0
+
+    # ------------------------------------------------------------ snap
+    def _snap(self) -> dict:
+        if self._engine is not None:
+            return self._engine.metrics_snapshot(refresh=True)
+        return self.telemetry.metrics.snapshot()
+
+    def begin(self) -> None:
+        """Prime the first window (also implied by the first
+        :meth:`observe`)."""
+        self._prev = self._snap()
+        tr = self.telemetry.trace
+        self._last_dropped = tr.n_dropped if tr is not None else 0
+
+    # -------------------------------------------------------- observe
+    def observe(self, label: str = "") -> list:
+        """Close the current window; returns this window's alerts."""
+        if self._prev is None:
+            self.begin()
+            return []
+        cur = self._snap()
+        d = self.telemetry.metrics.delta(self._prev)
+        self._prev = cur
+        self._window += 1
+        new = self._detect(d)
+        for a in new:
+            a["window"] = label or f"w{self._window}"
+            self.alerts.append(a)
+            self._emit(a)
+        if new:
+            # writing the alerts into a saturated ring bumps n_dropped;
+            # re-baseline so the drops *we* caused don't retrigger the
+            # trace-drops detector next window, forever
+            tr = self.telemetry.trace
+            if tr is not None:
+                self._last_dropped = tr.n_dropped
+        return new
+
+    def _emit(self, alert: dict) -> None:
+        tr = self.telemetry.trace
+        if tr is not None:
+            tr.instant(f"alert:{alert['kind']}", "diag.alert", "doctor",
+                       args=dict(alert))
+
+    # ------------------------------------------------------- detectors
+    @staticmethod
+    def _sum(d: dict, pred) -> float:
+        return sum(v for k, v in d.items()
+                   if not isinstance(v, dict) and pred(k))
+
+    def _detect(self, d: dict) -> list[dict]:
+        th = self.th
+        out: list[dict] = []
+        runs = self._sum(d, lambda k: k.startswith("io.")
+                         and k.endswith(".runs"))
+
+        # stall spike: transient-fault retries + exposed latency stalls
+        n_stall = self._sum(d, lambda k: k.startswith("io.") and (
+            k.endswith(".fault.stall") or k.endswith(".fault.retry")))
+        rate = n_stall / max(runs, 1.0)
+        base = self._baseline("stall")
+        self._hist["stall"].append(rate)
+        if n_stall >= th.w_min_events and rate > max(th.w_stall_rate,
+                                                     3.0 * base):
+            out.append({"kind": "stall-spike", "severity": min(1.0, rate * 10),
+                        "detail": f"{int(n_stall)} stall/retry events over "
+                                  f"{int(runs)} runs ({rate:.1%}, baseline "
+                                  f"{base:.1%})",
+                        "knob": SUGGESTED_KNOBS["stall-spike"]})
+
+        # hedge storm: duplicate reads past the p99 deadline
+        n_hedge = self._sum(d, lambda k: k.startswith("io.")
+                            and k.endswith(".fault.hedge"))
+        hrate = n_hedge / max(runs, 1.0)
+        hbase = self._baseline("hedge")
+        self._hist["hedge"].append(hrate)
+        if n_hedge >= th.w_min_events and hrate > max(th.w_hedge_rate,
+                                                      3.0 * hbase):
+            out.append({"kind": "hedge-storm", "severity": min(1.0, hrate * 10),
+                        "detail": f"{int(n_hedge)} hedged reads over "
+                                  f"{int(runs)} runs ({hrate:.1%})",
+                        "knob": SUGGESTED_KNOBS["hedge-storm"]})
+
+        # starvation: aging overrode priority, or per-grant waits blew
+        # past the bound ("admission.state.*" are pass-through gauges —
+        # only the true counters/histograms carry window semantics)
+        forced = self._sum(d, lambda k: k.startswith("admission.")
+                           and not k.startswith("admission.state.")
+                           and k.endswith(".forced_grants"))
+        wait_n = wait_sum = 0.0
+        for k, v in d.items():
+            if k.startswith("admission.") and k.endswith(".wait_s") \
+                    and isinstance(v, dict):
+                wait_n += v.get("count", 0)
+                wait_sum += v.get("sum", 0.0)
+        mean_wait = wait_sum / wait_n if wait_n else 0.0
+        if forced > 0 or (wait_n >= th.w_min_events
+                          and mean_wait > th.w_wait_mean_s):
+            out.append({"kind": "starvation",
+                        "severity": min(1.0, 0.5 + forced / 10),
+                        "detail": f"{int(forced)} forced grants, mean "
+                                  f"admission wait {mean_wait * 1e3:.1f}ms "
+                                  f"over {int(wait_n)} waits",
+                        "knob": SUGGESTED_KNOBS["starvation"]})
+
+        # cache-hit collapse: cumulative hit-ratio gauge falling off a
+        # healthy rolling baseline
+        hit = d.get("agnes.feature_cache_hit")
+        if isinstance(hit, (int, float)):
+            hbase = max(self._hist["hit"], default=0.0)
+            self._hist["hit"].append(float(hit))
+            if hbase >= self.th.cache_hit_floor \
+                    and hbase - hit > th.w_hit_drop:
+                out.append({"kind": "cache-collapse",
+                            "severity": min(1.0, hbase - hit),
+                            "detail": f"feature cache hit ratio fell "
+                                      f"{hbase:.0%} -> {hit:.0%}",
+                            "knob": SUGGESTED_KNOBS["cache-collapse"]})
+
+        # trace drops: the ring started overwriting events this window
+        tr = self.telemetry.trace
+        if tr is not None:
+            nd = tr.n_dropped
+            if nd > self._last_dropped:
+                out.append({"kind": "trace-drops", "severity": 0.3,
+                            "detail": f"{nd - self._last_dropped} events "
+                                      f"overwritten this window "
+                                      f"({nd} total)",
+                            "knob": SUGGESTED_KNOBS["trace-drops"]})
+                self._last_dropped = nd
+        return out
+
+    def _baseline(self, key: str) -> float:
+        h = self._hist[key]
+        return sum(h) / len(h) if h else 0.0

@@ -628,6 +628,32 @@ class ServingTier:
         m.set_gauges("admission.state", self.controller.summary()["tenants"])
         return m
 
+    def diagnose(self, thresholds=None):
+        """Storage doctor over the whole tier.
+
+        Refreshes the tier gauges (:meth:`update_metrics`), then runs
+        :func:`repro.core.diagnosis.diagnose` on the primary engine's
+        snapshot + shared trace with every tenant's roofline attached —
+        so a tenant starving behind the admission queues surfaces as an
+        ``admission-throttled`` finding naming that tenant, ranked
+        against the device-level causes.
+        """
+        from .diagnosis import diagnose
+        self.update_metrics()
+        eng = self.engine
+        snap = eng.metrics_snapshot(refresh=True)
+        tel = eng.telemetry
+        tr = tel.trace if tel is not None else None
+        dev = eng.graph_store.device
+        return diagnose(
+            snap, events=tr.events() if tr is not None else None,
+            tenant_rooflines={n: self.tenant_roofline(n)
+                              for n in self._handles},
+            thresholds=thresholds,
+            default_device={"bandwidth": dev.array_bandwidth,
+                            "latency": dev.latency,
+                            "queue_depth": dev.queue_depth})
+
     # ------------------------------------------------------------ migration
     def register_migration(self) -> None:
         """Re-register the primary engine's migration engines as the

@@ -202,14 +202,20 @@ def validate_chrome_trace(payload: dict) -> list[str]:
     Returns a list of violation strings — empty means valid.  Checks
     the shape Perfetto's trace-event importer requires: a
     ``traceEvents`` list of dicts with ``name``/``ph``/``pid``/``tid``,
-    numeric non-negative ``ts`` (and ``dur`` for "X"), a scope on
-    instants, and a ``thread_name`` metadata event for every tid that
-    carries events.
+    numeric non-negative ``ts``, spans ("X") with a numeric
+    non-negative ``dur``, instants ("i") with a valid scope ``s`` in
+    ``t``/``p``/``g`` and *no* ``dur`` field, dict-typed ``args`` when
+    present, and a ``thread_name`` metadata event for every tid that
+    carries events.  ``displayTimeUnit``, when present, must be one of
+    the two values the importer accepts ("ms"/"ns").
     """
     errs: list[str] = []
     evs = payload.get("traceEvents")
     if not isinstance(evs, list):
         return ["traceEvents missing or not a list"]
+    unit = payload.get("displayTimeUnit")
+    if unit is not None and unit not in ("ms", "ns"):
+        errs.append(f"displayTimeUnit must be 'ms' or 'ns', got {unit!r}")
     named_tids = set()
     used_tids = set()
     for i, ev in enumerate(evs):
@@ -238,8 +244,14 @@ def validate_chrome_trace(payload: dict) -> list[str]:
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 errs.append(f"event {i}: bad dur {dur!r}")
-        if ph == "i" and ev.get("s") not in ("t", "p", "g"):
-            errs.append(f"event {i}: instant missing scope")
+        if ph == "i":
+            if ev.get("s") not in ("t", "p", "g"):
+                errs.append(f"event {i}: instant scope must be "
+                            f"t/p/g, got {ev.get('s')!r}")
+            if "dur" in ev:
+                errs.append(f"event {i}: instant must not carry dur")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            errs.append(f"event {i}: args must be an object")
     for tid in sorted(used_tids - named_tids):
         errs.append(f"tid {tid} has events but no thread_name metadata")
     return errs
@@ -401,13 +413,21 @@ class MetricsRegistry:
     def render_prometheus(self) -> str:
         """Prometheus text exposition (metric names sanitized to the
         ``[a-zA-Z0-9_]`` charset, histograms with cumulative
-        ``_bucket{le=...}`` series)."""
+        ``_bucket{le=...}`` series).
+
+        Every metric family gets a ``# HELP`` line (escaped per the
+        exposition format, present even when the help string is empty
+        so scrapers that key metadata off HELP never miss a family)
+        followed by ``# TYPE``; histograms expose the full series:
+        cumulative ``_bucket{le="..."}`` per bound, the mandatory
+        ``le="+Inf"`` bucket, ``_sum`` and ``_count``.
+        """
         lines: list[str] = []
         with self._lock:
             for name, m in sorted(self._metrics.items()):
                 pname = _prom_name(name)
-                if m.help:
-                    lines.append(f"# HELP {pname} {m.help}")
+                help_ = m.help.replace("\\", "\\\\").replace("\n", "\\n")
+                lines.append(f"# HELP {pname} {help_}".rstrip())
                 lines.append(f"# TYPE {pname} {m.kind}")
                 if m.kind == "histogram":
                     cum = 0

@@ -153,6 +153,8 @@ class StorageTopology:
                 "array": a,
                 "online": not self._offline[a],
                 "bandwidth_GBps": round(dev.array_bandwidth / 1e9, 3),
+                "latency_us": round(dev.latency * 1e6, 3),
+                "device_queue_depth": dev.queue_depth,
                 "bytes": st.total_bytes,
                 "n_requests": st.n_requests,
                 "sequential_fraction": round(

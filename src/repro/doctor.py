@@ -1,0 +1,61 @@
+"""Offline storage doctor CLI.
+
+    PYTHONPATH=src python -m repro.doctor trace.json --metrics metrics.json
+
+Diagnoses a recorded run from its exported artifacts: ``trace.json`` is
+a Chrome trace written by :meth:`TraceRecorder.export_chrome` (e.g. the
+example's ``--trace OUT.json``), ``metrics.json`` is a JSON dump of
+:meth:`AgnesEngine.metrics_snapshot` (the example's ``--metrics-json``).
+Either input alone still diagnoses — metrics-only skips the
+exposed-prepare decomposition, trace-only skips the roofline — but the
+full findings table needs both.
+
+Renders the ranked findings with a suggested knob per finding plus the
+per-array roofline table; ``--json`` emits the structured
+:class:`~repro.core.diagnosis.DoctorReport` instead (for dashboards or
+the regression harness).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .core.diagnosis import diagnose, events_from_chrome
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.doctor",
+        description="Diagnose a recorded AGNES run: roofline attribution "
+                    "+ ranked findings with suggested knobs.")
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="Chrome trace JSON (TraceRecorder.export_chrome)")
+    ap.add_argument("--metrics", default=None, metavar="JSON",
+                    help="metrics snapshot JSON "
+                         "(AgnesEngine.metrics_snapshot dump)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the structured report as JSON")
+    args = ap.parse_args(argv)
+    if args.trace is None and args.metrics is None:
+        ap.error("nothing to diagnose: pass a trace file and/or --metrics")
+
+    events = None
+    if args.trace is not None:
+        with open(args.trace) as f:
+            events = events_from_chrome(json.load(f))
+    metrics: dict = {}
+    if args.metrics is not None:
+        with open(args.metrics) as f:
+            metrics = json.load(f)
+
+    report = diagnose(metrics, events=events)
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=2))
+    else:
+        print(report.render())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,385 @@
+"""Storage doctor (core/diagnosis.py): roofline states, decomposition,
+watchdog, engine/tier entry points, offline CLI.
+
+Covers:
+
+* the six-way per-array roofline classifier on synthetic rows — each
+  :data:`ARRAY_STATES` member is reachable and the bw/iops arms and
+  utilizations are the NVMe model's algebra;
+* ``decompose_prepare`` — exact interval arithmetic for the exposed
+  fraction (overlap merged, not double counted) and the component
+  split over the recorded span categories;
+* ``events_from_chrome`` — an exported Chrome object re-imports to
+  event tuples whose decomposition matches the recorder's own;
+* ``diagnose`` findings from synthetic snapshots: every causal
+  detector (fault-degraded, admission-throttled per tenant,
+  hedge-stall, cache-miss-bound), ranked above the shape finding, and
+  "healthy" on an empty snapshot;
+* :class:`AnomalyWatchdog` detectors over hand-driven counter windows
+  (stall spike, starvation, cache collapse, trace drops), silence on
+  clean windows, and the ``diag.alert`` instants emitted back into the
+  trace;
+* ``AgnesEngine.diagnose`` / ``ServingTier.diagnose`` smoke on the
+  shared tiny dataset, and the ``python -m repro.doctor`` CLI over
+  exported trace + metrics files (rendered and ``--json``).
+"""
+import json
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import (AgnesConfig, AgnesEngine, AnomalyWatchdog,
+                        ARRAY_STATES, DoctorThresholds, MetricsRegistry,
+                        ServingTier, SUGGESTED_KNOBS, TraceRecorder,
+                        decompose_prepare, diagnose, events_from_chrome)
+from repro.core.diagnosis import _classify_array
+from repro.doctor import main as doctor_main
+
+CFG = dict(block_size=16384, minibatch_size=64, hyperbatch_size=2,
+           fanouts=(4, 4), graph_buffer_bytes=1 << 20,
+           feature_buffer_bytes=1 << 20, async_io=False)
+
+TH = DoctorThresholds()
+
+
+def _engine(tiny_ds, **over):
+    g, f = tiny_ds.reopen_stores()
+    return AgnesEngine(g, f, AgnesConfig(**dict(CFG, **over)))
+
+
+def _row(**over):
+    row = dict(array=0, online=True, bytes=2 << 20, n_requests=64,
+               sequential_fraction=0.0, busy_s=0.01, bandwidth=6.7e9,
+               latency=80e-6, device_queue_depth=32, queue_depth=8)
+    row.update(over)
+    return row
+
+
+# ------------------------------------------------------------- classifier
+def test_classifier_reaches_every_state():
+    got = {
+        "idle": _classify_array(_row(bytes=0, busy_s=0.0), 0.0, 0.0, TH),
+        "bw-bound": _classify_array(
+            _row(bytes=512 << 20, n_requests=8, sequential_fraction=1.0,
+                 busy_s=0.08, queue_depth=32), 0.0, 0.0, TH),
+        "iops-bound": _classify_array(
+            _row(n_requests=4096, queue_depth=8), 0.0, 0.0, TH),
+        "queue-starved": _classify_array(
+            _row(n_requests=4096, queue_depth=1), 0.0, 0.0, TH),
+        "admission-throttled": _classify_array(_row(), 0.5, 0.0, TH),
+        "fault-degraded": _classify_array(_row(online=False), 0.0, 0.0, TH),
+    }
+    for state, diag in got.items():
+        assert diag.state == state, f"{state}: got {diag.state}"
+    assert set(got) == set(ARRAY_STATES)
+    # degraded reads flip the state even with the array online
+    assert _classify_array(_row(), 0.0, 0.5, TH).state == "fault-degraded"
+
+
+def test_classifier_arms_are_the_nvme_model():
+    d = _classify_array(
+        _row(bytes=67 << 20, n_requests=1000, sequential_fraction=0.25,
+             busy_s=0.02, queue_depth=8), 0.0, 0.0, TH)
+    assert d.bw_term_s == pytest.approx((67 << 20) / 6.7e9, rel=1e-3)
+    assert d.iops_term_s == pytest.approx(750 * 80e-6 / 8, rel=1e-3)
+    assert 0.0 < d.bw_utilization <= 1.0
+    assert d.avg_request_bytes == pytest.approx((67 << 20) / 1000)
+    # the submitter's depth is clamped to the device's
+    d2 = _classify_array(_row(queue_depth=128), 0.0, 0.0, TH)
+    assert d2.queue_depth == 128 and d2.device_queue_depth == 32
+
+
+# ---------------------------------------------------------- decomposition
+def _ev(ph, name, cat, ts, dur, args=None):
+    return (ph, name, cat, "t0", ts, dur, args)
+
+
+def test_decompose_prepare_interval_arithmetic():
+    events = [
+        _ev("X", "hb0", "prepare", 0.0, 10.0),
+        _ev("X", "hb0", "train", 5.0, 10.0),       # overlaps [5, 10]
+        _ev("X", "plan:graph", "prepare.stage", 0.0, 2.0),
+        _ev("X", "assemble:feat", "prepare.stage", 2.0, 1.0),
+        _ev("X", "consume:io", "prepare.stage", 3.0, 1.0),  # not sampling
+        _ev("X", "graph.run", "io.run", 3.0, 2.0),
+        _ev("X", "feature.run", "io.run", 5.0, 1.0),
+        _ev("X", "wait", "admission", 6.0, 0.5),
+        _ev("i", "graph.retry", "io.fault", 7.0, 0.0, {"modeled_s": 0.25}),
+        _ev("i", "graph.error", "io.fault", 7.1, 0.0, {"modeled_s": 9.0}),
+    ]
+    d = decompose_prepare(events)
+    assert d["prepare_s"] == pytest.approx(10.0)
+    assert d["train_s"] == pytest.approx(10.0)
+    assert d["hidden_prepare_s"] == pytest.approx(5.0)
+    assert d["exposed_prepare_s"] == pytest.approx(5.0)
+    assert d["exposed_prepare_fraction"] == pytest.approx(0.5)
+    c = d["components_s"]
+    assert c["sampling_cpu"] == pytest.approx(3.0)   # plan + assemble only
+    assert c["io"] == pytest.approx(2.0)             # graph store reads
+    assert c["cache_miss"] == pytest.approx(1.0)     # feature store reads
+    assert c["admission_wait"] == pytest.approx(0.5)
+    assert c["fault_stall"] == pytest.approx(0.25)   # error is not a stall
+    assert c["other"] == pytest.approx(10.0 - 6.75)
+    assert sum(d["component_fractions"].values()) == pytest.approx(1.0)
+    assert sum(d["exposed_components_s"].values()) == \
+        pytest.approx(d["exposed_prepare_s"], rel=1e-3)
+
+
+def test_decompose_merges_overlapping_spans():
+    # two overlapping prepare spans must not double count the overlap
+    # against a train span covering both
+    d = decompose_prepare([
+        _ev("X", "a", "prepare", 0.0, 4.0),
+        _ev("X", "b", "prepare", 2.0, 4.0),
+        _ev("X", "t", "train", 0.0, 6.0),
+    ])
+    assert d["prepare_s"] == pytest.approx(8.0)      # wall sum, per span
+    assert d["hidden_prepare_s"] == pytest.approx(6.0)  # merged overlap
+    assert d["exposed_prepare_s"] == pytest.approx(2.0)
+
+
+def test_decompose_empty_trace_is_zeroed():
+    d = decompose_prepare([])
+    assert d["prepare_s"] == 0.0
+    assert d["exposed_prepare_fraction"] == 0.0
+    assert all(v == 0.0 for v in d["component_fractions"].values())
+
+
+# ----------------------------------------------------------- chrome import
+def test_events_from_chrome_round_trip():
+    rec = TraceRecorder(capacity=256)
+    with rec.span("hb0", "prepare", "pipeline"):
+        with rec.span("plan:graph", "prepare.stage", "prepare:training"):
+            pass
+        rec.instant("graph.retry", "io.fault", "array:0",
+                    args={"modeled_s": 0.5})
+    with rec.span("hb0", "train", "pipeline"):
+        pass
+    back = events_from_chrome(rec.to_chrome())
+    assert len(back) == len(rec.events())
+    assert {e[3] for e in back} == \
+        {"pipeline", "prepare:training", "array:0"}
+    d0 = decompose_prepare(rec.events())
+    d1 = decompose_prepare(back)
+    assert d1["prepare_s"] == pytest.approx(d0["prepare_s"], rel=1e-3,
+                                            abs=1e-8)
+    assert d1["components_s"]["fault_stall"] == pytest.approx(0.5)
+    # malformed payloads degrade to empty, never raise
+    assert events_from_chrome({}) == []
+    assert events_from_chrome({"traceEvents": "nope"}) == []
+
+
+# ------------------------------------------------------------- findings
+def test_diagnose_empty_snapshot_is_healthy():
+    report = diagnose({})
+    assert report.primary == "healthy"
+    assert report.findings == [] and report.arrays == []
+    assert json.loads(json.dumps(report.to_dict()))["primary"] == "healthy"
+    assert "healthy" in report.render()
+
+
+def _base_metrics(**over):
+    m = {"agnes.total.modeled_io_time_s": 0.01,
+         "agnes.total.n_requests": 100, "agnes.total.n_reads": 400,
+         "agnes.total.n_sequential_reads": 100,
+         "agnes.total.bytes_read": 4 << 20, "agnes.io_queue_depth": 8}
+    m.update(over)
+    return m
+
+
+def test_diagnose_fault_degraded_outranks_shape():
+    report = diagnose(_base_metrics(**{
+        "agnes.faults.offline_arrays.0": 3,
+        "agnes.total.io_degraded": 4}))
+    assert report.primary == "fault-degraded"
+    assert report.findings[0].evidence["offline_arrays"] == [3]
+    assert report.findings[0].knob == SUGGESTED_KNOBS["fault-degraded"]
+    # the shape finding is still attributed, ranked below
+    assert any(f.kind in ("bw-bound", "iops-bound", "queue-starved")
+               for f in report.findings[1:])
+
+
+def test_diagnose_admission_engine_and_tenant():
+    report = diagnose(_base_metrics(**{
+        "agnes.total.admission_wait_s": 0.04}))
+    assert report.primary == "admission-throttled"
+    tenants = {"bulk": {"io": {"admission_wait_s": 0.0,
+                               "modeled_io_time_s": 0.01}},
+               "starved": {"io": {"admission_wait_s": 0.09,
+                                  "modeled_io_time_s": 0.001},
+                           "admission": {"forced_grants": 2}}}
+    report = diagnose(_base_metrics(), tenant_rooflines=tenants)
+    assert report.primary == "admission-throttled"
+    top = report.findings[0]
+    assert top.evidence["tenant"] == "starved"
+    assert top.evidence["forced_grants"] == 2
+
+
+def test_diagnose_hedge_stall_and_cache_detectors():
+    report = diagnose(_base_metrics(**{
+        "agnes.total.io_retries": 5, "agnes.total.io_hedges": 3,
+        "io.graph.fault.stall": 4}))
+    assert report.primary == "hedge-stall"
+    assert report.findings[0].evidence["fault_events"] == 12
+
+    report = diagnose(_base_metrics(**{
+        "agnes.feature_cache_hit": 0.05,
+        "cache.rows_admitted": 900, "cache.rows_evicted": 800,
+        "agnes.feature.modeled_io_time_s": 0.009}))
+    assert report.primary == "cache-miss-bound"
+    # eviction-gated: the same snapshot minus evictions is cold
+    # streaming, not an undersized cache
+    report = diagnose(_base_metrics(**{
+        "agnes.feature_cache_hit": 0.05,
+        "cache.rows_admitted": 900, "cache.rows_evicted": 0,
+        "agnes.feature.modeled_io_time_s": 0.009}))
+    assert all(f.kind != "cache-miss-bound" for f in report.findings)
+
+
+def test_diagnose_multi_array_rows_and_report_render():
+    m = _base_metrics(**{
+        "agnes.arrays.arrays.0.online": 1,
+        "agnes.arrays.arrays.0.bytes": 64 << 20,
+        "agnes.arrays.arrays.0.n_requests": 16,
+        "agnes.arrays.arrays.0.sequential_fraction": 1.0,
+        "agnes.arrays.arrays.0.busy_s": 0.01,
+        "agnes.arrays.arrays.0.bandwidth_GBps": 6.7,
+        "agnes.arrays.arrays.0.latency_us": 80.0,
+        "agnes.arrays.arrays.0.device_queue_depth": 32,
+        "agnes.arrays.arrays.1.online": 1,
+        "agnes.arrays.arrays.1.bytes": 0,
+        "agnes.arrays.arrays.1.n_requests": 0,
+        "agnes.arrays.arrays.1.busy_s": 0.0,
+        "agnes.io_queue_depth.0": 32, "agnes.io_queue_depth.1": 32})
+    report = diagnose(m)
+    states = {a.array: a.state for a in report.arrays}
+    assert states == {0: "bw-bound", 1: "idle"}
+    text = report.render()
+    assert "storage doctor" in text and "per-array roofline" in text
+    assert "bw-bound" in text
+
+
+# ------------------------------------------------------------- watchdog
+def _tel(trace_capacity=256):
+    return types.SimpleNamespace(metrics=MetricsRegistry(),
+                                 trace=TraceRecorder(trace_capacity))
+
+
+def test_watchdog_stall_spike_and_silence():
+    tel = _tel()
+    runs = tel.metrics.counter("io.graph.runs")
+    retries = tel.metrics.counter("io.graph.fault.retry")
+    wd = AnomalyWatchdog(telemetry=tel)
+    wd.begin()
+    runs.inc(100)
+    assert wd.observe("clean") == []       # healthy window: silence
+    runs.inc(100)
+    retries.inc(10)                        # 10% >> w_stall_rate
+    alerts = wd.observe("spike")
+    assert [a["kind"] for a in alerts] == ["stall-spike"]
+    assert alerts[0]["window"] == "spike"
+    # the alert landed in the trace as a diag.alert instant
+    instants = [e for e in tel.trace.events() if e[2] == "diag.alert"]
+    assert len(instants) == 1 and instants[0][1] == "alert:stall-spike"
+    assert wd.alerts == alerts
+
+
+def test_watchdog_starvation_and_gauge_passthrough():
+    tel = _tel()
+    forced = tel.metrics.counter("admission.starved.forced_grants")
+    # admission.state.* gauges reuse counter-ish names; they must not
+    # trip the windowed detector
+    tel.metrics.gauge("admission.state.starved.forced_grants").set(99)
+    wd = AnomalyWatchdog(telemetry=tel)
+    wd.begin()
+    assert wd.observe() == []
+    forced.inc()
+    alerts = wd.observe()
+    assert [a["kind"] for a in alerts] == ["starvation"]
+
+
+def test_watchdog_cache_collapse_needs_healthy_baseline():
+    tel = _tel()
+    hit = tel.metrics.gauge("agnes.feature_cache_hit")
+    wd = AnomalyWatchdog(telemetry=tel)
+    wd.begin()
+    hit.set(0.9)
+    assert wd.observe() == []              # building the baseline
+    hit.set(0.2)
+    alerts = wd.observe()
+    assert [a["kind"] for a in alerts] == ["cache-collapse"]
+    # a low-from-the-start ratio is cold, not a collapse
+    tel2 = _tel()
+    hit2 = tel2.metrics.gauge("agnes.feature_cache_hit")
+    wd2 = AnomalyWatchdog(telemetry=tel2)
+    wd2.begin()
+    hit2.set(0.1)
+    assert wd2.observe() == []
+    hit2.set(0.0)
+    assert wd2.observe() == []
+
+
+def test_watchdog_trace_drops():
+    tel = _tel(trace_capacity=8)
+    wd = AnomalyWatchdog(telemetry=tel)
+    wd.begin()
+    for i in range(50):
+        tel.trace.instant(f"e{i}", "c", "t")
+    alerts = wd.observe()
+    assert [a["kind"] for a in alerts] == ["trace-drops"]
+    assert wd.observe() == []              # no new drops: no re-alert
+
+
+# ------------------------------------------------------------ entry points
+def test_engine_diagnose_smoke(tiny_ds):
+    eng = _engine(tiny_ds, trace=True)
+    eng.prepare([np.arange(64), np.arange(64, 128)], epoch=0)
+    report = eng.diagnose()
+    assert report.primary in SUGGESTED_KNOBS
+    assert report.arrays and report.arrays[0].busy_s > 0
+    assert report.decomposition["prepare_s"] > 0
+    json.dumps(report.to_dict())           # wire-serializable
+    eng.close()
+
+
+def test_tier_diagnose_smoke(tiny_ds):
+    eng = _engine(tiny_ds, trace=True, fanouts=(), feature_cache_rows=1,
+                  n_arrays=2, placement="stripe",
+                  max_coalesce_bytes=64 << 10, io_queue_depth=4)
+    tier = ServingTier(eng)
+    tier.prepare("training", [np.arange(32)], epoch=0)
+    report = tier.diagnose()
+    assert len(report.arrays) == 2
+    assert isinstance(report.primary, str)
+    tier.close()
+    eng.close()
+
+
+# ------------------------------------------------------------------- CLI
+def test_doctor_cli_renders_and_json(tiny_ds, tmp_path, capsys):
+    eng = _engine(tiny_ds, trace=True)
+    eng.prepare([np.arange(64)], epoch=0)
+    trace_path = eng.telemetry.trace.export_chrome(
+        str(tmp_path / "trace.json"))
+    metrics_path = str(tmp_path / "metrics.json")
+    with open(metrics_path, "w") as f:
+        json.dump(eng.metrics_snapshot(refresh=True), f)
+    eng.close()
+
+    assert doctor_main([trace_path, "--metrics", metrics_path]) == 0
+    out = capsys.readouterr().out
+    assert "storage doctor — primary bottleneck:" in out
+    assert "per-array roofline" in out
+
+    assert doctor_main([trace_path, "--metrics", metrics_path,
+                        "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert {"primary", "findings", "arrays", "decomposition"} <= \
+        set(payload)
+
+    # trace-only still diagnoses (roofline degrades, decomposition live)
+    assert doctor_main([trace_path]) == 0
+    assert "storage doctor" in capsys.readouterr().out
+    with pytest.raises(SystemExit):
+        doctor_main([])                    # nothing to diagnose

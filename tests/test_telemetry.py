@@ -148,6 +148,46 @@ def test_metrics_snapshot_delta_and_prometheus():
         reg.gauge("io.reads")             # kind conflict fails loudly
 
 
+def test_prometheus_full_exposition():
+    """The full text-format contract: HELP before TYPE for *every*
+    family (help-less included), escaping, name sanitization, and the
+    complete cumulative histogram series."""
+    reg = MetricsRegistry()
+    reg.counter("io.reads", help="line1\nline2\\tail").inc(5)
+    reg.counter("9starts.with-digit")
+    reg.gauge("no.help.gauge").set(2.5)
+    h = reg.histogram("lat_s", buckets=(0.001, 0.01, 0.1))
+    for v in (0.0005, 0.005, 0.005, 0.05, 5.0):
+        h.observe(v)
+    text = reg.render_prometheus()
+    assert text.endswith("\n")
+    lines = text.splitlines()
+    for fam, kind in (("io_reads", "counter"),
+                      ("_9starts_with_digit", "counter"),
+                      ("no_help_gauge", "gauge"),
+                      ("lat_s", "histogram")):
+        ti = lines.index(f"# TYPE {fam} {kind}")
+        assert lines[ti - 1].startswith(f"# HELP {fam}")
+    # newline and backslash escaped per the exposition format; an empty
+    # help string renders as the bare header, no trailing space
+    assert "# HELP io_reads line1\\nline2\\\\tail" in lines
+    assert "# HELP no_help_gauge" in lines
+    # the histogram series is cumulative, ends at +Inf == _count
+    bi = lines.index('lat_s_bucket{le="0.001"} 1')
+    assert lines[bi:bi + 5] == [
+        'lat_s_bucket{le="0.001"} 1',
+        'lat_s_bucket{le="0.01"} 3',
+        'lat_s_bucket{le="0.1"} 4',
+        'lat_s_bucket{le="+Inf"} 5',
+        'lat_s_sum 5.0605',
+    ]
+    assert "lat_s_count 5" in lines
+    assert "io_reads 5" in lines and "no_help_gauge 2.5" in lines
+    # families come out sorted by registry name
+    types = [ln.split()[2] for ln in lines if ln.startswith("# TYPE")]
+    assert types == sorted(types, key=lambda f: f.lstrip("_"))
+
+
 def test_metrics_concurrent_increments_exact():
     reg = MetricsRegistry()
     c = reg.counter("hits")
@@ -213,8 +253,41 @@ def test_chrome_validator_catches_violations():
     ]}
     errs = validate_chrome_trace(bad)
     assert any("bad ts" in e for e in errs)
-    assert any("missing scope" in e for e in errs)
+    assert any("instant scope must be t/p/g" in e for e in errs)
     assert any("thread_name" in e for e in errs)
+
+
+def test_chrome_validator_rejects_handbuilt_bad_payload():
+    """One violation per event, hand-built: every check the validator
+    documents fires on a payload crafted to trip exactly it."""
+    meta = [{"name": "thread_name", "ph": "M", "pid": 1, "tid": 1,
+             "args": {"name": "t0"}}]
+    bad = {"displayTimeUnit": "s", "traceEvents": meta + [
+        {"name": "a", "ph": "i", "pid": 1, "tid": 1, "ts": 1.0, "s": "x"},
+        {"name": "b", "ph": "i", "pid": 1, "tid": 1, "ts": 1.0, "s": "t",
+         "dur": 2.0},
+        {"name": "c", "ph": "X", "pid": 1, "tid": 1, "ts": 1.0, "dur": -1.0},
+        {"name": "d", "ph": "X", "pid": 1, "tid": 1, "ts": 1.0, "dur": 1.0,
+         "args": [1, 2]},
+        {"name": "e", "ph": "Q", "pid": 1, "tid": 1, "ts": 1.0},
+        {"name": "f", "ph": "X", "pid": "one", "tid": 1, "ts": 1.0,
+         "dur": 0},
+        {"ph": "X", "pid": 1, "tid": 1, "ts": 1.0, "dur": 0},
+    ]}
+    errs = validate_chrome_trace(bad)
+    assert any("displayTimeUnit" in e for e in errs)
+    assert any("instant scope must be t/p/g, got 'x'" in e for e in errs)
+    assert any("instant must not carry dur" in e for e in errs)
+    assert any("bad dur -1.0" in e for e in errs)
+    assert any("args must be an object" in e for e in errs)
+    assert any("bad ph 'Q'" in e for e in errs)
+    assert any("pid/tid must be ints" in e for e in errs)
+    assert any("name missing" in e for e in errs)
+    # the recorder's own export of an instant stays clean (scope "t",
+    # no dur, named tid)
+    rec = TraceRecorder(capacity=8)
+    rec.instant("ok", "c", "t")
+    assert validate_chrome_trace(rec.to_chrome()) == []
 
 
 def test_chrome_export_file_is_schema_valid(tiny_ds, tmp_path):
@@ -259,6 +332,33 @@ def test_fig2_breakdown_agrees_with_overlap_report(tiny_ds):
     assert n["train.step"] == report.n_minibatches
     assert validate_chrome_trace(rec.to_chrome()) == []
     eng.close()
+
+
+def test_fig2_breakdown_edge_cases():
+    # empty recorder: zeroed bars, well-defined fractions, no drops
+    fb = fig2_breakdown(TraceRecorder(capacity=8))
+    assert fb["prepare_s"] == 0.0 and fb["train_s"] == 0.0
+    assert fb["prepare_fraction"] == 0.0 and fb["train_fraction"] == 0.0
+    assert fb["dropped_events"] == 0 and fb["stages_s"] == {}
+
+    # flooded tiny ring: the prepare span got overwritten by instants —
+    # the bars zero out, but dropped_events says why
+    rec = TraceRecorder(capacity=4)
+    with rec.span("hb0", "prepare", "pipeline"):
+        pass
+    for i in range(16):
+        rec.instant(f"e{i}", "diag.alert", "doctor")
+    fb = fig2_breakdown(rec)
+    assert fb["prepare_s"] == 0.0
+    assert fb["dropped_events"] == 13
+
+    # a plain event list of only instants: category counted at zero, no
+    # dropped_events key (there is no recorder to ask), nothing raises
+    fb = fig2_breakdown([("i", "alert:stall-spike", "diag.alert", "doctor",
+                          1.0, 0.0, {"kind": "stall-spike"})])
+    assert fb["prepare_s"] == 0.0
+    assert fb["spans_per_category"] == {"diag.alert": 0}
+    assert "dropped_events" not in fb
 
 
 def test_disabled_trace_keeps_metrics_live(tiny_ds):
